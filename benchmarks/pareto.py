@@ -1,0 +1,120 @@
+"""Paper Fig. 3 reproduction: accuracy-vs-cost Pareto fronts on the MLPerf
+Tiny tasks — ours (channel-wise) vs EdMIPS (layer-wise) vs fixed precision.
+
+Synthetic class-conditional data stands in for the MLPerf datasets (offline
+container), so absolute scores differ from the paper; the *comparisons* the
+paper makes — channel-wise Pareto-dominating layer-wise at iso-accuracy, and
+both dominating fixed precision — are what this benchmark measures.
+
+Run:  PYTHONPATH=src python -m benchmarks.pareto [--task dae-ad] [--fast]
+Output: CSV rows  task,method,lambda,metric,size_bits,energy
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edmips, mixedprec as mp, regularizers as reg, search
+from repro.data import pipeline as pipe
+from repro.models import tinyml
+
+
+def eval_metric(cfg, apply_fn, params, nas, tau, data, mode="frozen"):
+    scores = []
+    for b in data.batches(32, seed=99):
+        pred = apply_fn(params, nas, jnp.asarray(tau), b, mode)
+        scores.append(float(tinyml.task_metric(cfg, pred, b)))
+    return float(np.mean(scores))
+
+
+def run_one(task: str, qcfg: mp.MixedPrecConfig, lam: float, objective: str,
+            epochs: tuple[int, int, int], n_data: int, seed: int = 0):
+    cfg = dataclasses.replace(tinyml.TINY_CONFIGS[task], quant=qcfg)
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params, nas = init_fn(jax.random.PRNGKey(seed))
+    data = pipe.SyntheticTiny(cfg, n=n_data, seed=seed)
+    settings = search.SearchSettings(
+        cfg=qcfg, objective=objective, lam=lam, lut_name="mpic",
+        warmup_epochs=epochs[0], search_epochs=epochs[1],
+        finetune_epochs=epochs[2])
+    res = search.run_search(apply_fn,
+                            lambda p, b: tinyml.task_loss(cfg, p, b),
+                            specs, params, nas,
+                            lambda: data.batches(16, seed=seed), settings)
+    metric = eval_metric(cfg, apply_fn, res.params, res.nas, res.tau, data)
+    size = reg.discrete_size_bits(res.nas, specs, qcfg)
+    energy = reg.discrete_energy(res.nas, specs, qcfg, "mpic")
+    return metric, size, energy
+
+
+def fixed_baseline(task: str, w_bits: int, x_bits: int,
+                   epochs: int, n_data: int, seed: int = 0):
+    """wNxM fixed-precision QAT baseline."""
+    qcfg = mp.MixedPrecConfig(weight_bits=(w_bits,), act_bits=(x_bits,),
+                              search_acts=False, fixed_act_bits=x_bits,
+                              per_channel=False)
+    cfg = dataclasses.replace(tinyml.TINY_CONFIGS[task], quant=qcfg)
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params, nas = init_fn(jax.random.PRNGKey(seed))
+    data = pipe.SyntheticTiny(cfg, n=n_data, seed=seed)
+    settings = search.SearchSettings(cfg=qcfg, objective="size", lam=0.0,
+                                     warmup_epochs=epochs, search_epochs=0,
+                                     finetune_epochs=epochs)
+    res = search.run_search(apply_fn,
+                            lambda p, b: tinyml.task_loss(cfg, p, b),
+                            specs, params, nas,
+                            lambda: data.batches(16, seed=seed), settings)
+    metric = eval_metric(cfg, apply_fn, res.params, res.nas, res.tau, data)
+    size = sum(s.weights_per_channel * s.c_out * w_bits
+               for s in specs.values())
+    from repro.core import lut as lut_mod
+    lut = np.asarray(lut_mod.get_lut("mpic"))
+    bi = {2: 0, 4: 1, 8: 2}
+    energy = sum(s.ops * lut[bi[x_bits], bi[w_bits]] for s in specs.values())
+    return metric, size, energy
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--task", default="dae-ad",
+                   choices=list(tinyml.TINY_CONFIGS))
+    p.add_argument("--objective", default="size",
+                   choices=["size", "energy"])
+    p.add_argument("--lambdas", default="1e-8,1e-5,1e-4,1e-3")
+    p.add_argument("--fast", action="store_true",
+                   help="1-epoch phases, small data (CI speed)")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+
+    epochs = (1, 2, 1) if args.fast else (2, 6, 2)
+    n_data = 96 if args.fast else 512
+    lams = [float(x) for x in args.lambdas.split(",")]
+
+    rows = ["task,method,lam,metric,size_bits,energy"]
+    for lam in lams:
+        m, s, e = run_one(args.task, edmips.channelwise_config(), lam,
+                          args.objective, epochs, n_data)
+        rows.append(f"{args.task},channelwise,{lam:g},{m:.4f},{s:.0f},{e:.0f}")
+        print(rows[-1], flush=True)
+        m, s, e = run_one(args.task, edmips.edmips_config(), lam,
+                          args.objective, epochs, n_data)
+        rows.append(f"{args.task},edmips,{lam:g},{m:.4f},{s:.0f},{e:.0f}")
+        print(rows[-1], flush=True)
+    for wb in (2, 4, 8):
+        m, s, e = fixed_baseline(args.task, wb, 8, epochs[0] + epochs[2],
+                                 n_data)
+        rows.append(f"{args.task},w{wb}x8,0,{m:.4f},{s:.0f},{e:.0f}")
+        print(rows[-1], flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

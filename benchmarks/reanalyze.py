@@ -1,0 +1,61 @@
+"""Re-derive roofline terms for every dry-run record from the archived HLO
+(results/hlo/*.txt.gz) with the CURRENT hlo_costs analyzer — no recompile.
+
+Run:  PYTHONPATH=src python -m benchmarks.reanalyze [--results PATH]
+"""
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch import hlo_analysis as ha
+from repro.launch import hlo_costs
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--results", default="results/dryrun.jsonl")
+    args = p.parse_args()
+
+    out = []
+    n_re = 0
+    with open(args.results) as f:
+        for line in f:
+            r = json.loads(line)
+            hf = r.get("hlo_file")
+            if r.get("ok") and not r.get("skipped") and hf \
+                    and os.path.exists(hf):
+                with gzip.open(hf, "rt") as g:
+                    text = g.read()
+                costs = hlo_costs.analyze(text)
+                terms = {
+                    "compute": costs.flops / ha.PEAK_FLOPS_BF16,
+                    "memory": costs.mem_bytes / ha.HBM_BW,
+                    "collective": costs.coll_bytes / ha.ICI_BW,
+                }
+                bottleneck = max(terms, key=terms.get)
+                r["roofline"] = {
+                    "flops": costs.flops, "hbm_bytes": costs.mem_bytes,
+                    "collective_bytes": costs.coll_bytes,
+                    "compute_s": terms["compute"],
+                    "memory_s": terms["memory"],
+                    "collective_s": terms["collective"],
+                    "bottleneck": bottleneck,
+                    "collective_counts": dict(costs.coll_by_op),
+                }
+                r["unknown_trip_counts"] = costs.unknown_trip_counts
+                chips = r.get("n_chips",
+                              512 if r["mesh"] == "2x16x16" else 256)
+                if costs.flops and r.get("model_flops"):
+                    r["useful_flops_ratio"] = (
+                        r["model_flops"] / (costs.flops * chips))
+                n_re += 1
+            out.append(r)
+    with open(args.results, "w") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+    print(f"re-analyzed {n_re}/{len(out)} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+import os
+if "--relower" in __import__("sys").argv or "--cell" in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline report + per-cell re-lowering for the §Perf hillclimb.
+
+Modes:
+  report   (default) — read results/dryrun.jsonl and print the §Roofline
+           markdown table: three terms (s), bottleneck, MODEL_FLOPS ratio,
+           and a one-line improvement note per cell.
+  --cell ARCH/SHAPE [--knob k=v ...] — re-lower one cell with modified
+           knobs (remat on/off, fsdp on/off, act-bits, kv-bits, mesh shape)
+           and print the before/after terms.  This is the measurement step
+           of the hypothesis->change->measure loop recorded in
+           EXPERIMENTS.md §Perf.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--results PATH]
+"""
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep last record per cell
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+IMPROVE_NOTE = {
+    "compute": "raise arithmetic intensity: larger per-chip tiles or fewer "
+               "redundant (remat) FLOPs",
+    "memory": "cut HBM traffic: lower-bit weights (the paper's knob), "
+              "fused dequant-matmul, int8 KV, better remat policy",
+    "collective": "reshard to cut all-gathers: 2D sharding of the big "
+                  "matmuls, overlap collectives with compute, or shrink "
+                  "the model axis",
+}
+
+
+def fmt_table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "bottleneck | MODEL/HLO flops | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = [r for r in recs if r.get("mesh", mesh) == mesh]
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped | — | {r.get('reason', '')} |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"FAILED | — | {r.get('error', '')[:60]} |")
+            continue
+        ro = r["roofline"]
+        ratio = r.get("useful_flops_ratio", 0.0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"{ro['bottleneck']} | {ratio:.2f} | "
+            f"{IMPROVE_NOTE[ro['bottleneck']][:58]} |")
+    return "\n".join(rows)
+
+
+def relower_cell(cell: str, knobs: dict) -> dict:
+    """Re-lower one cell with knob overrides (hillclimb measurement)."""
+    import dataclasses
+    import jax
+    from repro.config import get_config
+    from repro.launch import hlo_analysis as ha
+    from repro.launch import workloads as wk
+    from repro.launch.mesh import make_production_mesh
+    from repro.train import steps as steps_mod
+
+    arch, shape = cell.split("/")
+    cfg = get_config(arch)
+    cfg_over = {k[4:]: _parse(v) for k, v in knobs.items()
+                if k.startswith("cfg.")}
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    if "deploy.fractions" in knobs:
+        from repro.config import DeploySpec
+        fr = tuple(float(x) for x in knobs["deploy.fractions"].split(","))
+        cfg = dataclasses.replace(
+            cfg, deploy=dataclasses.replace(cfg.deploy, fractions=fr))
+    hp = steps_mod.TrainHParams.for_arch(cfg)
+    hp_over = {k[3:]: _parse(v) for k, v in knobs.items()
+               if k.startswith("hp.")}
+    if hp_over:
+        hp = dataclasses.replace(hp, **hp_over)
+    mesh = make_production_mesh(multi_pod=knobs.get("mesh") == "multi")
+    wl = wk.build(cfg, shape, hp if shape == "train_4k" else None)
+    fsdp = knobs.get("fsdp", "1") not in ("0", "false")
+    ep2d = knobs.get("ep2d", "0") in ("1", "true")
+    kvs = knobs.get("kv_seq_shard", "0") in ("1", "true")
+    lowered = wk.lower(wl, mesh, fsdp=fsdp, moe_ep2d=ep2d,
+                       kv_seq_shard=kvs)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    import gzip
+    os.makedirs("results/hlo_hillclimb", exist_ok=True)
+    tag = "_".join(f"{k}-{v}" for k, v in sorted(knobs.items()))
+    fn = f"results/hlo_hillclimb/{cell.replace('/', '_')}_{tag or 'base'}"          f".txt.gz"
+    with gzip.open(fn, "wt") as f:
+        f.write(text)
+    roof = ha.roofline_terms(compiled, text)
+    out = roof.as_dict()
+    out["hlo_file"] = fn
+    try:
+        mem = compiled.memory_analysis()
+        out["bytes_per_device"] = int(mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes)
+    except Exception:
+        pass
+    return out
+
+
+def _parse(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            continue
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--results", default="results/dryrun.jsonl")
+    p.add_argument("--mesh", default="16x16")
+    p.add_argument("--cell", default=None, help="ARCH/SHAPE to re-lower")
+    p.add_argument("--knob", action="append", default=[],
+                   help="k=v overrides: cfg.*, hp.*, fsdp, mesh")
+    args = p.parse_args(argv)
+
+    if args.cell:
+        knobs = dict(kv.split("=", 1) for kv in args.knob)
+        out = relower_cell(args.cell, knobs)
+        print(json.dumps(out, indent=2))
+        return
+
+    recs = load(args.results)
+    print(fmt_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

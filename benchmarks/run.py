@@ -1,0 +1,151 @@
+"""Benchmark driver — one section per paper table/figure + system benches.
+
+  pareto     — Fig. 3 analogue (channel-wise vs EdMIPS vs fixed), fast mode
+  deploy     — Sec. III-C/Table-like: deployed model memory at several
+               assignments vs fixed precision (the paper's memory axis)
+  kernels    — quant_matmul / fused_mix microbenchmarks (CPU interpret mode:
+               numbers are correctness-path timings, not TPU perf — TPU perf
+               comes from the §Roofline dry-run terms)
+  serving    — reduced-config prefill/decode throughput (jnp backend)
+  roofline   — summary table from results/dryrun.jsonl if present
+
+``python -m benchmarks.run`` runs everything in fast mode and prints CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n, out
+
+
+def bench_pareto() -> list[str]:
+    from benchmarks import pareto
+    print("# pareto (fast): task,method,lam,metric,size_bits,energy",
+          flush=True)
+    pareto.main(["--task", "dae-ad", "--fast", "--lambdas", "1e-8,1e-4"])
+    return []
+
+
+def bench_deploy() -> list[str]:
+    """Deployed memory per assignment — the paper's model-size axis."""
+    from repro.config import get_config
+    from repro.core import deploy as dpl, mixedprec as mp
+    rows = ["deploy_memory:assignment,total_Mbit,vs_w8"]
+    cfg = get_config("qwen1.5-4b").reduced()
+    rng = np.random.default_rng(0)
+    c_out, c_in, n_layers = 128, 256, 10
+    w = rng.standard_normal((c_out, c_in)).astype(np.float32)
+    alpha = np.abs(w).max(-1)
+    base = None
+    for name, gamma_fn in [
+        ("all-8b", lambda: np.tile([0, 0, 9.0], (c_out, 1))),
+        ("all-4b", lambda: np.tile([0, 9.0, 0], (c_out, 1))),
+        ("fig4-mix (25/55/20)", lambda: np.asarray(
+            [[9.0, 0, 0]] * 32 + [[0, 9.0, 0]] * 70 + [[0, 0, 9.0]] * 26)),
+    ]:
+        d = dpl.deploy_linear(w, gamma_fn(), alpha, None, 6.0,
+                              mp.MixedPrecConfig(), align=1)
+        bits = dpl.memory_bits(d) * n_layers
+        if base is None:
+            base = bits
+        rows.append(f"deploy_memory:{name},{bits / 1e6:.3f},"
+                    f"{bits / base:.3f}")
+    return rows
+
+
+def bench_kernels() -> list[str]:
+    from repro.core import quantizers as qz
+    from repro.kernels import ops
+    rows = ["kernel:name,bits,M,K,N,us_per_call"]
+    key = jax.random.PRNGKey(0)
+    M, K, N = 64, 512, 256
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(key, (N, K))
+    alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    for bits in (2, 4, 8):
+        q, scale = qz.quantize_weight_int(w, alpha, bits)
+        packed = qz.pack_int(q, bits)
+        dt, _ = _time(lambda: ops.quant_matmul(x, packed, scale[:, 0],
+                                               bits, K))
+        rows.append(f"kernel:quant_matmul,{bits},{M},{K},{N},{dt * 1e6:.0f}")
+    gh = jax.nn.softmax(jax.random.normal(key, (N, 3)), -1)
+    dt, _ = _time(lambda: ops.fused_mix(w, gh, alpha[:, 0]))
+    rows.append(f"kernel:fused_mix,-,{N},{K},-,{dt * 1e6:.0f}")
+    return rows
+
+
+def bench_serving() -> list[str]:
+    from repro.config import get_config
+    from repro.models import serving
+    rows = ["serving:arch,phase,tok_per_s"]
+    for arch in ("qwen1.5-4b", "mamba2-780m"):
+        cfg = get_config(arch).reduced()
+        dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+        B, S = 4, 64
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+        pf = jax.jit(lambda d, b: serving.prefill(d, cfg, b)[0])
+        dt, _ = _time(lambda: pf(dp, batch), n=3, warmup=1)
+        rows.append(f"serving:{arch},prefill,{B * S / dt:.0f}")
+        caches = serving.init_caches(cfg, B, S + 8)
+        dec = jax.jit(lambda d, t, c, p: serving.decode_step(cfg=cfg,
+                      dparams=d, tokens=t, caches=c, pos=p))
+        tok = jnp.zeros((B, 1), jnp.int32)
+        dt, out = _time(lambda: dec(dp, tok, caches, jnp.asarray(S))[0],
+                        n=5, warmup=1)
+        rows.append(f"serving:{arch},decode,{B / dt:.0f}")
+    return rows
+
+
+def bench_roofline() -> list[str]:
+    import os
+    path = "results/dryrun.jsonl"
+    if not os.path.exists(path):
+        return ["roofline: (results/dryrun.jsonl not present — run "
+                "python -m repro.launch.dryrun --all first)"]
+    from benchmarks import roofline as rl
+    recs = rl.load(path)
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    rows = [f"roofline: {len(ok)} compiled cells in {path}"]
+    by_bn = {}
+    for r in ok:
+        bn = r["roofline"]["bottleneck"]
+        by_bn[bn] = by_bn.get(bn, 0) + 1
+    rows.append(f"roofline:bottlenecks,{by_bn}")
+    return rows
+
+
+SECTIONS = {
+    "deploy": bench_deploy,
+    "kernels": bench_kernels,
+    "serving": bench_serving,
+    "roofline": bench_roofline,
+    "pareto": bench_pareto,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None, choices=list(SECTIONS))
+    args = p.parse_args()
+    names = [args.only] if args.only else list(SECTIONS)
+    for name in names:
+        print(f"\n== {name} ==", flush=True)
+        for row in SECTIONS[name]():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper experiment flow on one MLPerf-Tiny task: channel-wise (ours) vs
+EdMIPS (layer-wise) under the identical protocol, one lambda.
+
+This is the per-point unit of Fig. 3; benchmarks/pareto.py sweeps lambda to
+trace whole fronts.
+
+Run:  PYTHONPATH=src python examples/search_tinyml.py [task] [lambda]
+      task in {resnet8-cifar10, dscnn-kws, mobilenetv1-vww, dae-ad}
+"""
+import dataclasses
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import edmips, regularizers as reg, search
+from repro.data import pipeline as pipe
+from repro.models import tinyml
+
+task = sys.argv[1] if len(sys.argv) > 1 else "dscnn-kws"
+lam = float(sys.argv[2]) if len(sys.argv) > 2 else 1e-5
+
+for method, qcfg in [("channel-wise (ours)", edmips.channelwise_config()),
+                     ("EdMIPS (layer-wise)", edmips.edmips_config())]:
+    cfg = dataclasses.replace(tinyml.TINY_CONFIGS[task], quant=qcfg)
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params, nas = init_fn(jax.random.PRNGKey(0))
+    data = pipe.SyntheticTiny(cfg, n=128, seed=0)
+    settings = search.SearchSettings(
+        cfg=qcfg, objective="energy", lam=lam, lut_name="mpic",
+        warmup_epochs=1, search_epochs=3, finetune_epochs=1)
+    res = search.run_search(apply_fn,
+                            lambda p, b: tinyml.task_loss(cfg, p, b),
+                            specs, params, nas, lambda: data.batches(16),
+                            settings)
+    scores = [float(tinyml.task_metric(
+        cfg, apply_fn(res.params, res.nas, res.tau, b, "frozen"), b))
+        for b in data.batches(32, seed=7)]
+    size = reg.discrete_size_bits(res.nas, specs, qcfg)
+    energy = reg.discrete_energy(res.nas, specs, qcfg, "mpic")
+    print(f"{method:22s} task={task} lam={lam:g} "
+          f"metric={np.mean(scores):.4f} size={size / 8e3:.1f}KB "
+          f"energy={energy:.3g}")

@@ -1,0 +1,60 @@
+"""Serve a deployed mixed-precision model with batched requests.
+
+Demonstrates the Sec. III-C deployment running as a service: packed
+sub-byte weights, per-precision sub-GEMMs, int8 KV caches, continuous
+batched decode.  Shows the memory saving of the searched assignment vs an
+all-8-bit deployment — the paper's headline number, on the serving path.
+
+Run:  PYTHONPATH=src python examples/serve_mixed_precision.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DeploySpec, get_config
+from repro.models import serving
+
+cfg = get_config("qwen1.5-4b").reduced()
+
+def model_bytes(dp):
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(dp))
+
+# searched assignment (Fig. 4-like: 25% @2b, 55% @4b, 20% @8b)
+dp_mixed = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+# all-8b deployment of the same family
+cfg8 = dataclasses.replace(cfg, deploy=DeploySpec(fractions=(0.0, 0.0, 1.0),
+                                                  align=8))
+dp_8 = serving.init_deployed_model(cfg8, jax.random.PRNGKey(0))
+mb_mixed, mb_8 = model_bytes(dp_mixed), model_bytes(dp_8)
+print(f"deployed weights: mixed {mb_mixed / 1e6:.2f} MB vs "
+      f"all-8b {mb_8 / 1e6:.2f} MB -> {100 * (1 - mb_mixed / mb_8):.0f}% "
+      f"smaller (paper: up to 63% vs layer-wise)")
+
+# batched serving ------------------------------------------------------------
+B, S, GEN = 8, 48, 24
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+prefill = jax.jit(lambda d, b: serving.prefill(d, cfg, b))
+decode = jax.jit(lambda d, t, c, p: serving.decode_step(d, cfg, t, c, p),
+                 donate_argnums=(2,))
+
+logits, _ = prefill(dp_mixed, batch)
+caches = serving.init_caches(cfg, B, S + GEN)
+tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+t0 = time.time()
+outs = [tok]
+for i in range(GEN):
+    logits, caches = decode(dp_mixed, tok, caches,
+                            jnp.asarray(S + i, jnp.int32))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    outs.append(tok)
+jax.block_until_ready(tok)
+dt = time.time() - t0
+print(f"decoded {GEN} steps x {B} requests in {dt:.2f}s "
+      f"({GEN * B / dt:.0f} tok/s)")
+print("generated ids (req 0):", np.asarray(jnp.concatenate(outs, 1))[0][:12])

@@ -1,0 +1,218 @@
+"""Architecture / run configuration system.
+
+``ArchConfig`` describes one architecture from the assigned pool (exact
+hyper-parameters from public literature — see src/repro/configs/*.py) plus the
+mixed-precision search and deployment settings.  Every config is selectable by
+``--arch <id>`` in the launchers.
+
+``reduced()`` produces the CPU-smoke-test variant of the same family (few
+layers, narrow width, tiny vocab, few experts) — the FULL configs are only
+ever lowered via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import mixedprec as mp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploySpec:
+    """Static per-precision channel-group fractions for the deployed model.
+
+    The true fractions come out of the Alg. 1 search; the dry-run and the
+    serving benchmarks need *static* shapes, so configs pin a representative
+    assignment (defaults follow the paper's Fig. 4: most channels at 4b, a
+    small high-precision slice, the rest at 2b).  Group sizes are rounded to
+    ``align`` (MXU lane width) with upward promotion (core/deploy.py).
+    """
+    fractions: tuple[float, ...] = (0.25, 0.55, 0.20)   # ordered as weight_bits
+    align: int = 128
+    act_bits: int = 8
+    kv_cache_bits: int = 8   # layer-wise act quant applied to the KV cache
+
+    def group_sizes(self, c_out: int, bitwidths: Sequence[int]) -> dict[int, int]:
+        """Integer group sizes: aligned, upward-promoted, summing to c_out."""
+        assert len(self.fractions) == len(bitwidths)
+        align = min(self.align, c_out)
+        sizes, used = {}, 0
+        for frac, b in list(zip(self.fractions, bitwidths))[:-1]:
+            n = int(round(frac * c_out / align) * align)
+            n = max(0, min(n, c_out - used))
+            sizes[b] = n
+            used += n
+        sizes[bitwidths[-1]] = c_out - used   # highest precision absorbs rest
+        return sizes
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    qkv_bias: bool = False           # qwen1.5
+    rope_partial: float = 1.0        # fraction of head_dim with RoPE (chatglm 2d-rope: 0.5)
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0        # deepseek shared expert
+    moe_d_ff: int = 0                # per-expert hidden dim
+    dense_residual_ff: int = 0       # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    mtp: bool = False                # deepseek multi-token-prediction head
+
+    # MLA (deepseek)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0              # hybrid: one (shared) attn block every k layers
+
+    # enc-dec (whisper)
+    is_encdec: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper 30s @ 50Hz after conv frontend (stub)
+
+    # modality frontend stub
+    frontend: str = "none"           # none | vision | audio
+    n_prefix_tokens: int = 0         # vlm: patch embeddings prepended
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # accumulation dtype of TP-sharded matmuls ("" = backend default f32).
+    # "bfloat16" halves the partial-sum all-reduce bytes (the dominant
+    # collective in dense train cells) at the cost of bf16 accumulation —
+    # a §Perf knob, off by default.
+    partial_dtype: str = ""
+
+    # training-system hints (per-arch defaults consumed by launch/train.py)
+    optimizer: str = "adamw"         # adamw | adafactor (factored 2nd moment,
+                                     # no 1st moment — what lets 671B/480B
+                                     # optimizer state fit 16 GB/chip)
+    lr_schedule: str = "cosine"      # cosine | wsd (minicpm) | constant
+
+    # Megatron-style vocab padding: the *physical* embedding/lm_head rows are
+    # rounded up to a multiple of ``vocab_pad`` so the vocab axis shards
+    # evenly over the model axis and stays MXU-lane aligned; padded logits
+    # are masked to -inf before the loss.  0 disables padding.
+    vocab_pad: int = 256
+
+    # mixed-precision search + deployment
+    quant: mp.MixedPrecConfig = dataclasses.field(default_factory=mp.MixedPrecConfig)
+    deploy: DeploySpec = dataclasses.field(default_factory=DeploySpec)
+
+    # which shapes this arch supports (see launch/shapes.py)
+    supports_decode: bool = True
+    supports_long: bool = False      # sub-quadratic only
+    long_skip_reason: str = ""
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        if not self.vocab_pad:
+            return self.vocab_size
+        p = self.vocab_pad
+        return -(-self.vocab_size // p) * p
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        def shrink(v, lo, cap):
+            return max(lo, min(v, cap))
+        kw = dict(
+            n_layers=shrink(self.n_layers, 2, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)) if self.n_kv_heads else 0,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            n_experts=shrink(self.n_experts, 0, 4) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.experts_per_token else 0,
+            moe_d_ff=32 if self.moe_d_ff else 0,
+            dense_residual_ff=64 if self.dense_residual_ff else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            q_lora_rank=24 if self.q_lora_rank else 0,
+            kv_lora_rank=16 if self.kv_lora_rank else 0,
+            qk_rope_dim=8 if self.qk_rope_dim else 0,
+            qk_nope_dim=8 if self.qk_nope_dim else 0,
+            v_head_dim=16 if self.v_head_dim else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            encoder_seq=16 if self.is_encdec else 1500,
+            n_prefix_tokens=4 if self.n_prefix_tokens else 0,
+            deploy=DeploySpec(fractions=self.deploy.fractions, align=8,
+                              act_bits=self.deploy.act_bits,
+                              kv_cache_bits=self.deploy.kv_cache_bits),
+        )
+        return dataclasses.replace(self, **kw)
+
+
+# Registry -------------------------------------------------------------------
+
+ARCH_IDS = (
+    "phi-3-vision-4.2b",
+    "stablelm-12b",
+    "minicpm-2b",
+    "chatglm3-6b",
+    "qwen1.5-4b",
+    "whisper-small",
+    "zamba2-1.2b",
+    "deepseek-v3-671b",
+    "arctic-480b",
+    "mamba2-780m",
+)
+
+TINYML_IDS = ("resnet8-cifar10", "dscnn-kws", "mobilenetv1-vww", "dae-ad")
+
+_MODULE_FOR = {i: "repro.configs." + i.replace("-", "_").replace(".", "_")
+               for i in ARCH_IDS + TINYML_IDS}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(_MODULE_FOR[arch_id])
+    return mod.CONFIG
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCH_IDS

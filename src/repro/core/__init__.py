@@ -1,0 +1,10 @@
+"""Core: the paper's channel-wise mixed-precision DNAS, end to end.
+
+quantizers    — PACT/affine fake-quant + STE, sub-byte packing
+mixedprec     — gamma/delta NAS state, Eq. 3-6 effective tensors
+regularizers  — Eq. 7 (size) / Eq. 8 (energy) differentiable costs
+lut           — C(p_x, p_w) hardware cost tables (MPIC + TPU-bandwidth)
+search        — Alg. 1 three-phase training loop
+deploy        — Sec. III-C reorder/group/pack/split transform (TPU-aligned)
+edmips        — layer-wise baseline configuration
+"""

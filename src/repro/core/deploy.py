@@ -1,0 +1,170 @@
+"""Deployment transform (Sec. III-C) — TPU-adapted.
+
+The paper's offline pipeline for a searched layer:
+
+1. **argmax** the NAS logits -> one bit-width per output channel;
+2. **reorder** the filters, grouping channels by bit-width (this permutes the
+   layer's output channels);
+3. **propagate** the permutation to the *next* layer's C_in axis so every
+   weight still multiplies the right activation;
+4. **split** the layer into |P_W| fixed-precision sub-layers whose outputs
+   concatenate (activations are layer-wise quantized, so concat is free).
+
+TPU adaptation (DESIGN.md §2): the MXU wants output-group sizes that are
+multiples of the 128-wide lane dimension, so after grouping we *promote* up to
+127 channels per boundary to the next-higher precision to round group sizes up
+to 128 (promotion is upward only — it can only add representational power, so
+accuracy is never hurt; memory cost of padding is <= (|P_W|-1)*127 channels).
+The resulting per-precision groups are packed sub-byte (int2 x4 / int4 x2 per
+byte) for HBM storage and consumed by kernels/quant_matmul.py as up to three
+dense sub-GEMMs — the direct analogue of the paper's three sub-convolutions.
+
+Everything here is offline/one-time (numpy-style, outside jit), exactly as in
+the paper ("performed offline and does not have run-time overheads").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import mixedprec as mp
+from repro.core import quantizers as qz
+
+
+@dataclasses.dataclass
+class DeployedLinear:
+    """One searched linear map after the deploy transform.
+
+    ``groups`` maps bit-width -> dict with:
+       packed   (c_group, c_in // pack_factor) uint8   packed weight rows
+       scale    (c_group,) float32                     per-channel dequant step
+    ``perm`` is the channel permutation applied to the output (original index
+    of each deployed output channel) — the *next* layer's C_in must be
+    permuted with it; ``inv_perm`` undoes it for the final layer.
+    ``act_bits``/``act_scale`` give the layer-wise activation quantization.
+    """
+    groups: dict
+    perm: np.ndarray
+    inv_perm: np.ndarray
+    act_bits: int
+    act_scale: float
+    c_out: int
+    c_in: int
+
+
+def group_channels(bits_per_channel: np.ndarray,
+                   bitwidths: Sequence[int] = qz.DEFAULT_BITWIDTHS,
+                   align: int = 1) -> tuple[np.ndarray, dict]:
+    """Reorder channels by bit-width; optionally pad groups to ``align``.
+
+    Returns ``(perm, sizes)`` where ``perm`` lists original channel indices in
+    deployed order (ascending precision groups) and ``sizes`` maps bit-width ->
+    group size after alignment promotion.
+
+    Alignment promotes the trailing ``size % align`` channels of a group to
+    the next-higher precision (upward only).  The highest precision group
+    absorbs all leftovers (its size needs no alignment: it is last, and a
+    final ragged group costs only one sub-GEMM edge-tile).
+    """
+    bitwidths = sorted(bitwidths)
+    bits_per_channel = np.asarray(bits_per_channel)
+    buckets = {b: list(np.nonzero(bits_per_channel == b)[0]) for b in bitwidths}
+    unknown = set(np.unique(bits_per_channel)) - set(bitwidths)
+    if unknown:
+        raise ValueError(f"channels assigned unsupported bit-widths {unknown}")
+    # upward promotion for alignment
+    for lo, hi in zip(bitwidths[:-1], bitwidths[1:]):
+        rem = len(buckets[lo]) % align
+        if rem:
+            promoted = buckets[lo][-rem:]
+            buckets[lo] = buckets[lo][:-rem]
+            # keep deterministic ordering: promoted channels go first in the
+            # higher bucket so original order inside each bucket is stable
+            buckets[hi] = promoted + buckets[hi]
+    perm = np.concatenate([np.asarray(buckets[b], dtype=np.int64)
+                           for b in bitwidths if buckets[b]] or
+                          [np.arange(0, dtype=np.int64)])
+    sizes = {b: len(buckets[b]) for b in bitwidths}
+    assert perm.shape[0] == bits_per_channel.shape[0]
+    return perm, sizes
+
+
+def deploy_linear(w: np.ndarray, gamma: np.ndarray, alpha_w: np.ndarray,
+                  delta: np.ndarray, alpha_x: float,
+                  cfg: mp.MixedPrecConfig, align: int = 1) -> DeployedLinear:
+    """Full Sec. III-C transform for one linear map ``w`` of shape (c_out, c_in)."""
+    w = np.asarray(w, dtype=np.float32)
+    c_out, c_in = w.shape
+    g = np.asarray(gamma).reshape(-1, np.asarray(gamma).shape[-1])
+    bits = np.asarray(mp.argmax_weight_bits(jnp.asarray(g), cfg))
+    if bits.shape[0] == 1:
+        bits = np.broadcast_to(bits, (c_out,)).copy()
+    perm, sizes = group_channels(bits, cfg.weight_bits, align=align)
+    alpha = np.asarray(alpha_w, dtype=np.float32)
+    if alpha.ndim == 0:
+        alpha = np.broadcast_to(alpha, (c_out,)).copy()
+
+    groups = {}
+    offset = 0
+    for b in sorted(cfg.weight_bits):
+        n = sizes[b]
+        if n == 0:
+            continue
+        idx = perm[offset: offset + n]
+        offset += n
+        wq, scale = qz.quantize_weight_int(
+            jnp.asarray(w[idx]), jnp.asarray(alpha[idx][:, None]), b)
+        wq = np.asarray(wq)
+        f = qz.pack_factor(b)
+        if c_in % f:
+            pad = f - c_in % f
+            wq = np.pad(wq, ((0, 0), (0, pad)))
+        packed = np.asarray(qz.pack_int(jnp.asarray(wq), b))
+        groups[b] = {
+            "packed": packed,
+            "scale": np.asarray(scale).reshape(-1),
+            "rows": idx,
+        }
+
+    if delta is None:
+        act_bits = cfg.fixed_act_bits
+    else:
+        act_bits = int(np.asarray(mp.argmax_act_bits(jnp.asarray(delta), cfg)))
+    levels = (1 << act_bits) - 1
+    return DeployedLinear(
+        groups=groups,
+        perm=perm,
+        inv_perm=np.argsort(perm),
+        act_bits=act_bits,
+        act_scale=float(max(alpha_x, 1e-6)) / levels,
+        c_out=c_out,
+        c_in=c_in,
+    )
+
+
+def propagate_perm(next_w: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Permute the *next* layer's input axis (axis 1 of (c_out, c_in)) to
+    match this layer's reordered outputs (paper Fig. 2, right)."""
+    return np.asarray(next_w)[:, perm]
+
+
+def dequantize_deployed(d: DeployedLinear) -> np.ndarray:
+    """Reconstruct the float weight matrix (deployed channel order undone).
+
+    Used by tests to assert the deploy transform is lossless w.r.t. the
+    frozen (argmax) fake-quantized weights.
+    """
+    out = np.zeros((d.c_out, d.c_in), dtype=np.float32)
+    for b, grp in d.groups.items():
+        unpacked = np.asarray(qz.unpack_int(jnp.asarray(grp["packed"]), b))
+        unpacked = unpacked[:, : d.c_in]
+        out[grp["rows"]] = unpacked.astype(np.float32) * grp["scale"][:, None]
+    return out
+
+
+def memory_bits(d: DeployedLinear) -> int:
+    """Deployed model-size contribution in bits (the Pareto x-axis)."""
+    return sum(grp["packed"].size * 8 for grp in d.groups.values())

@@ -1,0 +1,46 @@
+"""EdMIPS baseline (Cai & Vasconcelos, CVPR 2020) — layer-wise DNAS.
+
+The paper's primary comparison point.  Per Sec. IV-B the baseline is run with
+*identical* training protocol (20/80 alternating theta/W updates, tau
+annealing) and the *same* PACT quantizer — the only difference is the
+granularity of gamma: one row per **layer** instead of one per **channel**.
+
+That makes the baseline a one-line configuration of the same machinery:
+``MixedPrecConfig(per_channel=False)``.  ``init_nas_params`` then allocates a
+(1, |P_W|) gamma which every channel of the layer shares, and the Eq. 7/8
+regularizers fold the single row across c_out (see regularizers.size_cost).
+
+This module exists so experiments name the baseline explicitly rather than
+flipping a boolean inline.
+"""
+from __future__ import annotations
+
+from repro.core import mixedprec as mp
+
+
+def edmips_config(base: mp.MixedPrecConfig | None = None) -> mp.MixedPrecConfig:
+    """Layer-wise variant of a (possibly channel-wise) search config."""
+    base = base or mp.MixedPrecConfig()
+    return mp.MixedPrecConfig(
+        weight_bits=base.weight_bits,
+        act_bits=base.act_bits,
+        search_acts=base.search_acts,
+        fixed_act_bits=base.fixed_act_bits,
+        tau0=base.tau0,
+        tau_decay=base.tau_decay,
+        per_channel=False,
+    )
+
+
+def channelwise_config(base: mp.MixedPrecConfig | None = None) -> mp.MixedPrecConfig:
+    """This paper's channel-wise search space (the default)."""
+    base = base or mp.MixedPrecConfig()
+    return mp.MixedPrecConfig(
+        weight_bits=base.weight_bits,
+        act_bits=base.act_bits,
+        search_acts=base.search_acts,
+        fixed_act_bits=base.fixed_act_bits,
+        tau0=base.tau0,
+        tau_decay=base.tau_decay,
+        per_channel=True,
+    )

@@ -1,0 +1,177 @@
+"""Channel-wise mixed-precision DNAS (the paper's core contribution).
+
+Implements Sec. III-A: for every quantized linear map we carry
+
+* ``gamma``  — NAS logits, shape ``(c_out, |P_W|)``   (per-channel weight bits)
+* ``delta``  — NAS logits, shape ``(|P_X|,)``          (per-layer act bits)
+* ``alpha_w``— PACT weight clip, shape ``(c_out,)``    (shared across precisions)
+* ``alpha_x``— PACT activation clip, scalar
+
+The softmax with temperature (Eq. 3) is annealed during the search
+(``tau *= exp(-0.0045)`` per epoch, tau0 = 5 — Sec. III-B / [21]).
+
+The *effective* tensors (Eq. 4, 5) are mixtures of fake-quantized copies of a
+single shared float master tensor.  ``effective_weight``/``effective_act`` are
+the differentiable search-time path; ``argmax_*`` provide the discretized
+assignment used by the fine-tuning phase and the deploy transform.
+
+Everything here is a pure function over explicit pytrees — no global state —
+so the same code runs under jit, scan-over-layers (stacked leading layer dim)
+and pjit with sharded ``gamma``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as qz
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPrecConfig:
+    """Static configuration of the search space."""
+    weight_bits: tuple[int, ...] = qz.DEFAULT_BITWIDTHS   # P_W
+    act_bits: tuple[int, ...] = qz.DEFAULT_BITWIDTHS      # P_X
+    search_acts: bool = True    # False for the model-size objective (acts @ 8b)
+    fixed_act_bits: int = 8     # used when search_acts=False
+    tau0: float = 5.0
+    tau_decay: float = 0.0045   # tau *= exp(-tau_decay) per epoch
+    per_channel: bool = True    # False => layer-wise (EdMIPS baseline)
+
+    @property
+    def n_w(self) -> int:
+        return len(self.weight_bits)
+
+    @property
+    def n_x(self) -> int:
+        return len(self.act_bits)
+
+
+def init_nas_params(key: jax.Array, c_out: int, cfg: MixedPrecConfig) -> dict:
+    """Fresh NAS state for one linear map.
+
+    Logits start uniform (zero) so the initial mixture is the plain average —
+    matching EdMIPS' initialization; PACT clips are initialized by the caller
+    from the warmed-up weights via ``qz.init_weight_alpha``.
+    """
+    del key  # deterministic init; kept for signature symmetry
+    rows = c_out if cfg.per_channel else 1
+    return {
+        "gamma": jnp.zeros((rows, cfg.n_w), dtype=jnp.float32),
+        "delta": jnp.zeros((cfg.n_x,), dtype=jnp.float32),
+    }
+
+
+def softmax_tau(logits: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (3): softmax with temperature, last axis."""
+    return jax.nn.softmax(logits / tau, axis=-1)
+
+
+def effective_weight(w: jnp.ndarray, gamma: jnp.ndarray, alpha_w: jnp.ndarray,
+                     tau: jnp.ndarray, cfg: MixedPrecConfig) -> jnp.ndarray:
+    """Eq. (5): per-channel mixture of fake-quantized weight slices.
+
+    ``w``       — float master weights, shape ``(c_out, ...)`` (axis 0 = channel).
+    ``gamma``   — ``(c_out, |P_W|)`` (or ``(1, |P_W|)`` for layer-wise).
+    ``alpha_w`` — ``(c_out,)`` per-channel clip.
+    """
+    g = softmax_tau(gamma, tau)                      # (rows, |P_W|)
+    bshape = (w.shape[0],) + (1,) * (w.ndim - 1)     # broadcast alpha per channel
+    a = alpha_w.reshape(bshape)
+    out = jnp.zeros_like(w)
+    for i, bits in enumerate(cfg.weight_bits):
+        coef = g[:, i] if g.shape[0] == w.shape[0] else g[0, i]
+        coef = coef.reshape(bshape) if g.shape[0] == w.shape[0] else coef
+        out = out + coef * qz.quantize_weight(w, a, bits)
+    return out
+
+
+def effective_act(x: jnp.ndarray, delta: jnp.ndarray, alpha_x: jnp.ndarray,
+                  tau: jnp.ndarray, cfg: MixedPrecConfig,
+                  signed: bool = False) -> jnp.ndarray:
+    """Eq. (4): layer-wise mixture of fake-quantized activations."""
+    if not cfg.search_acts:
+        return qz.quantize_act_any(x, alpha_x, cfg.fixed_act_bits, signed)
+    d = softmax_tau(delta, tau)                      # (|P_X|,)
+    out = jnp.zeros_like(x)
+    for i, bits in enumerate(cfg.act_bits):
+        out = out + d[i] * qz.quantize_act_any(x, alpha_x, bits, signed)
+    return out
+
+
+def argmax_weight_bits(gamma: jnp.ndarray, cfg: MixedPrecConfig) -> jnp.ndarray:
+    """Discrete per-channel assignment (end of search / deploy): (c_out,) ints."""
+    idx = jnp.argmax(gamma, axis=-1)
+    table = jnp.asarray(cfg.weight_bits, dtype=jnp.int32)
+    return table[idx]
+
+
+def argmax_act_bits(delta: jnp.ndarray, cfg: MixedPrecConfig) -> int | jnp.ndarray:
+    if not cfg.search_acts:
+        return jnp.asarray(cfg.fixed_act_bits, dtype=jnp.int32)
+    table = jnp.asarray(cfg.act_bits, dtype=jnp.int32)
+    return table[jnp.argmax(delta)]
+
+
+def frozen_weight(w: jnp.ndarray, gamma: jnp.ndarray, alpha_w: jnp.ndarray,
+                  cfg: MixedPrecConfig) -> jnp.ndarray:
+    """Fine-tuning-phase weights: argmax replaces softmax (Alg. 1 line 10).
+
+    Implemented with one-hot masks so it stays a single vectorized expression
+    (scan/jit friendly) instead of a per-channel gather.
+    """
+    idx = jnp.argmax(gamma, axis=-1)                 # (rows,)
+    if gamma.shape[0] == 1:
+        idx = jnp.broadcast_to(idx, (w.shape[0],))
+    bshape = (w.shape[0],) + (1,) * (w.ndim - 1)
+    a = alpha_w.reshape(bshape)
+    out = jnp.zeros_like(w)
+    for i, bits in enumerate(cfg.weight_bits):
+        mask = (idx == i).reshape(bshape)
+        out = out + jnp.where(mask, qz.quantize_weight(w, a, bits), 0.0)
+    return out
+
+
+def frozen_act(x: jnp.ndarray, delta: jnp.ndarray, alpha_x: jnp.ndarray,
+               cfg: MixedPrecConfig, signed: bool = False) -> jnp.ndarray:
+    """Fine-tuning-phase activations: single argmax-selected precision."""
+    if not cfg.search_acts:
+        return qz.quantize_act_any(x, alpha_x, cfg.fixed_act_bits, signed)
+    idx = jnp.argmax(delta)
+    out = jnp.zeros_like(x)
+    for i, bits in enumerate(cfg.act_bits):
+        out = out + jnp.where(idx == i,
+                              qz.quantize_act_any(x, alpha_x, bits, signed), 0.0)
+    return out
+
+
+def anneal_tau(tau: jnp.ndarray, cfg: MixedPrecConfig) -> jnp.ndarray:
+    """One epoch of temperature annealing (Sec. III-B)."""
+    return tau * jnp.exp(-cfg.tau_decay)
+
+
+# ---------------------------------------------------------------------------
+# Expected-bits statistics — consumed by the regularizers (Eq. 7/8) and by
+# reporting.  Kept here so layer code and regularizer code cannot drift.
+# ---------------------------------------------------------------------------
+
+def expected_weight_bits(gamma: jnp.ndarray, tau: jnp.ndarray,
+                         cfg: MixedPrecConfig) -> jnp.ndarray:
+    """Per-channel expected bit-width  Σ_p γ̂_p · p  — shape (rows,)."""
+    g = softmax_tau(gamma, tau)
+    bits = jnp.asarray(cfg.weight_bits, dtype=g.dtype)
+    return g @ bits
+
+
+def act_bit_probs(delta: jnp.ndarray, tau: jnp.ndarray,
+                  cfg: MixedPrecConfig) -> jnp.ndarray:
+    """δ̂ — shape (|P_X|,); degenerate one-hot when acts are fixed."""
+    if not cfg.search_acts:
+        onehot = jnp.asarray(
+            [1.0 if b == cfg.fixed_act_bits else 0.0 for b in cfg.act_bits],
+            dtype=jnp.float32)
+        return onehot
+    return softmax_tau(delta, tau)

@@ -1,0 +1,148 @@
+"""Differentiable cost regularizers — Eq. (7) (model size) and Eq. (8) (energy).
+
+Each quantized linear map in a model registers a ``LayerCostSpec`` describing
+its static geometry; the regularizer then consumes the *live* NAS state
+(gamma/delta + tau) to compute the expected cost.  The total L_R is the sum
+over layers (Sec. III-A, last paragraph); the training loss is Eq. (2):
+``L = L_T + lambda * L_R``.
+
+Shapes are written so the same code handles:
+  * per-channel gamma   (c_out, |P_W|)   — this paper
+  * layer-wise gamma    (1, |P_W|)       — the EdMIPS baseline
+  * stacked-by-layer gamma (L, c_out, |P_W|) — scan-over-layers transformers
+    (the leading axis is folded into the channel axis; cost sums anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core import lut as lut_mod
+from repro.core import mixedprec as mp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCostSpec:
+    """Static per-layer geometry needed by Eq. (7)/(8).
+
+    For a Conv layer: ``weights_per_channel = C_in * Kx * Ky`` and
+    ``ops = C_out * C_in * Kx * Ky * H_out * W_out`` (MACs).
+    For an FC/linear layer: ``weights_per_channel = C_in`` and
+    ``ops = C_out * C_in * tokens``.
+    """
+    name: str
+    c_out: int
+    weights_per_channel: int   # C_in * Kx * Ky
+    ops: int                   # Omega^(n): total MACs to produce the output
+
+
+def size_cost(gamma: jnp.ndarray, tau: jnp.ndarray, spec: LayerCostSpec,
+              cfg: mp.MixedPrecConfig) -> jnp.ndarray:
+    """Eq. (7): expected weight bits of one layer.
+
+    ``C_in*Kx*Ky * Σ_i Σ_p γ̂_{i,p} · p``.  When gamma is layer-wise (1 row)
+    the row is implicitly shared by all c_out channels.
+    """
+    g = gamma.reshape(-1, gamma.shape[-1])            # fold any leading dims
+    ebits = mp.softmax_tau(g, tau) @ jnp.asarray(cfg.weight_bits, jnp.float32)
+    rows = g.shape[0]
+    # Layer-wise gamma (rows=1) represents all c_out channels with one row;
+    # per-channel gamma has rows == c_out and multiplier 1.  For stacked
+    # scan-over-layers trees the caller sets spec.c_out = total rows.
+    multiplier = spec.c_out / rows
+    return spec.weights_per_channel * multiplier * jnp.sum(ebits)
+
+
+def energy_cost(gamma: jnp.ndarray, delta: jnp.ndarray, tau: jnp.ndarray,
+                spec: LayerCostSpec, cfg: mp.MixedPrecConfig,
+                lut: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (8): Omega * Σ_{p_x} δ̂_{p_x} Σ_i Σ_{p_w} γ̂_{i,p_w} C(p_x,p_w).
+
+    ``lut[xi, wi]`` must be indexed in the order of cfg.act_bits/weight_bits.
+    The per-channel sum Σ_i γ̂ divides by c_out implicitly via ops-per-channel:
+    Omega counts ops for ALL channels, each channel contributes ops/c_out.
+    """
+    g = gamma.reshape(-1, gamma.shape[-1])
+    ghat = mp.softmax_tau(g, tau)                     # (rows, |P_W|)
+    dhat = mp.act_bit_probs(delta, tau, cfg)          # (|P_X|,) or (L, |P_X|)
+    rows = g.shape[0]
+    # Each row accounts for ops/rows MACs: rows==c_out -> per-channel ops;
+    # rows==1 (layer-wise) -> the whole layer's ops.
+    ops_per_row = spec.ops / rows
+    if dhat.ndim == 1:
+        # expected energy/op for each row: (rows,) = γ̂ @ lutᵀ @ δ̂
+        per_row = ghat @ (lut.T @ dhat)               # (rows,)
+        return ops_per_row * jnp.sum(per_row)
+    # stacked scan-over-layers site: delta is per layer; rows are layer-major
+    Ld = dhat.shape[0]
+    ghat = ghat.reshape(Ld, rows // Ld, ghat.shape[-1])   # (L, c_out, |P_W|)
+    per = jnp.einsum("lrp,qp,lq->", ghat, lut, dhat)
+    return ops_per_row * per
+
+
+def total_cost(nas_tree: dict, tau: jnp.ndarray, specs: dict,
+               cfg: mp.MixedPrecConfig, objective: str = "size",
+               lut_name: str = "mpic") -> jnp.ndarray:
+    """Sum L_R over all registered layers.
+
+    ``nas_tree`` maps layer-name -> {"gamma": ..., "delta": ...};
+    ``specs`` maps layer-name -> LayerCostSpec.  Layers present in the tree
+    but lacking a spec are an error (silent cost omissions are how NAS
+    regularizers rot).
+    """
+    total = jnp.zeros((), jnp.float32)
+    lut = lut_mod.get_lut(lut_name)
+    for name, nas in nas_tree.items():
+        spec = specs.get(name)
+        if spec is None:
+            raise KeyError(f"NAS layer {name!r} has no LayerCostSpec")
+        if objective == "size":
+            total = total + size_cost(nas["gamma"], tau, spec, cfg)
+        elif objective == "energy":
+            total = total + energy_cost(nas["gamma"], nas["delta"], tau, spec,
+                                        cfg, lut)
+        else:
+            raise ValueError(f"unknown objective {objective!r}")
+    return total
+
+
+def discrete_size_bits(nas_tree: dict, specs: dict,
+                       cfg: mp.MixedPrecConfig) -> float:
+    """Post-search *discrete* model size in bits (argmax assignment).
+
+    This is the number reported on the Pareto plots' x-axis (model size),
+    as opposed to the differentiable expectation used during training.
+    """
+    total = 0.0
+    for name, nas in nas_tree.items():
+        spec = specs[name]
+        g = nas["gamma"].reshape(-1, nas["gamma"].shape[-1])
+        bits = mp.argmax_weight_bits(g, cfg)             # (rows,)
+        rows = int(bits.shape[0])
+        total += float(spec.weights_per_channel * (spec.c_out / rows)
+                       * jnp.sum(bits))
+    return total
+
+
+def discrete_energy(nas_tree: dict, specs: dict, cfg: mp.MixedPrecConfig,
+                    lut_name: str = "mpic") -> float:
+    """Post-search discrete energy estimate (argmax assignment)."""
+    lut = lut_mod.get_lut(lut_name)
+    total = 0.0
+    for name, nas in nas_tree.items():
+        spec = specs[name]
+        g = nas["gamma"].reshape(-1, nas["gamma"].shape[-1])
+        widx = jnp.argmax(g, axis=-1)                           # (rows,)
+        rows = g.shape[0]
+        d = nas["delta"]
+        if not cfg.search_acts:
+            xidx = jnp.full((rows,), cfg.act_bits.index(cfg.fixed_act_bits))
+        elif d.ndim == 1:
+            xidx = jnp.full((rows,), jnp.argmax(d))
+        else:  # stacked per-layer delta; rows are layer-major
+            Ld = d.shape[0]
+            xidx = jnp.repeat(jnp.argmax(d, axis=-1), rows // Ld)
+        total += float(spec.ops / rows * jnp.sum(lut[xidx, widx]))
+    return total

@@ -1,0 +1,172 @@
+"""Alg. 1 — the three-phase DNAS training procedure.
+
+Phases (Sec. III-B):
+
+1. **warmup**   — QAT at p_max (8b), NAS params frozen; only ``L_T``.
+2. **search**   — per epoch: the first 20% of the samples update the NAS
+   parameters theta on ``L_T + lambda * L_R``; the remaining 80% update the
+   weights W on ``L_T``.  Temperature tau annealed by ``exp(-0.0045)`` per
+   epoch from tau0=5.  Early-stopped on a converged cost/accuracy plateau.
+3. **fine-tune** — theta frozen, softmax replaced by argmax, W trained on L_T.
+
+The module is model-agnostic: models expose
+
+    apply_fn(params, nas, tau, batch, mode) -> predictions
+
+with ``mode`` in {"float", "qat8", "search", "frozen"} and a ``specs`` dict
+(LayerCostSpec per NAS layer).  The EdMIPS baseline (core/edmips.py) reuses
+this exact loop with layer-wise gamma — the paper runs both under *identical*
+training protocols for fairness (Sec. IV-B), and so do we.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mixedprec as mp
+from repro.core import regularizers as reg
+from repro.optim import optimizers as opt_mod
+
+
+@dataclasses.dataclass
+class SearchSettings:
+    cfg: mp.MixedPrecConfig
+    objective: str = "size"          # "size" (Eq. 7) or "energy" (Eq. 8)
+    lut_name: str = "mpic"
+    lam: float = 1e-7                # lambda in Eq. (2)
+    warmup_epochs: int = 2
+    search_epochs: int = 4           # upper bound; early stop below
+    finetune_epochs: int = 2
+    theta_frac: float = 0.2          # 20% split for theta updates
+    lr_w: float = 1e-3
+    lr_theta: float = 1e-2
+    early_stop_patience: int = 3     # epochs without cost improvement
+    early_stop_rtol: float = 1e-3
+
+
+@dataclasses.dataclass
+class SearchResult:
+    params: dict
+    nas: dict
+    tau: jnp.ndarray
+    history: list
+    settings: SearchSettings
+
+
+def _make_steps(apply_fn: Callable, loss_fn: Callable, specs: dict,
+                s: SearchSettings):
+    """Build the three jitted step functions once per search."""
+    opt_w = opt_mod.AdamW(schedule=opt_mod.constant_schedule(s.lr_w),
+                          clip_norm=1.0)
+    opt_t = opt_mod.AdamW(schedule=opt_mod.constant_schedule(s.lr_theta),
+                          clip_norm=None)
+
+    @jax.jit
+    def warmup_step(params, ow, step, batch):
+        def lt(p):
+            pred = apply_fn(p, None, jnp.asarray(s.cfg.tau0), batch, "qat8")
+            return loss_fn(pred, batch)
+        loss, grads = jax.value_and_grad(lt)(params)
+        upd, ow = opt_w.update(grads, ow, params, step)
+        return opt_mod.apply_updates(params, upd), ow, loss
+
+    @jax.jit
+    def theta_step(params, nas, tau, ot, step, batch):
+        def lfull(n):
+            pred = apply_fn(params, n, tau, batch, "search")
+            lt = loss_fn(pred, batch)
+            lr = reg.total_cost(n, tau, specs, s.cfg, s.objective, s.lut_name)
+            return lt + s.lam * lr, (lt, lr)
+        (loss, (lt, lr)), grads = jax.value_and_grad(lfull, has_aux=True)(nas)
+        upd, ot = opt_t.update(grads, ot, nas, step)
+        return opt_mod.apply_updates(nas, upd), ot, lt, lr
+
+    @jax.jit
+    def w_step(params, nas, tau, ow, step, batch):
+        def lt(p):
+            pred = apply_fn(p, nas, tau, batch, "search")
+            return loss_fn(pred, batch)
+        loss, grads = jax.value_and_grad(lt)(params)
+        upd, ow = opt_w.update(grads, ow, params, step)
+        return opt_mod.apply_updates(params, upd), ow, loss
+
+    @jax.jit
+    def finetune_step(params, nas, ow, step, batch):
+        def lt(p):
+            pred = apply_fn(p, nas, jnp.asarray(1.0), batch, "frozen")
+            return loss_fn(pred, batch)
+        loss, grads = jax.value_and_grad(lt)(params)
+        upd, ow = opt_w.update(grads, ow, params, step)
+        return opt_mod.apply_updates(params, upd), ow, loss
+
+    return opt_w, opt_t, warmup_step, theta_step, w_step, finetune_step
+
+
+def run_search(apply_fn: Callable, loss_fn: Callable, specs: dict,
+               params: dict, nas: dict, data_epochs: Callable[[], Iterable],
+               settings: SearchSettings,
+               eval_fn: Optional[Callable] = None) -> SearchResult:
+    """Execute Alg. 1 end to end.
+
+    ``data_epochs()`` returns a fresh iterable of batches for one epoch (the
+    caller controls batching/sharding/shuffling).  ``eval_fn(params, nas,
+    tau, mode)`` optionally reports a validation metric into the history.
+    """
+    s = settings
+    opt_w, opt_t, warmup_step, theta_step, w_step, finetune_step = _make_steps(
+        apply_fn, loss_fn, specs, s)
+
+    ow = opt_w.init(params)
+    ot = opt_t.init(nas)
+    tau = jnp.asarray(s.cfg.tau0, jnp.float32)
+    history = []
+    step = 0
+
+    # -- Phase 1: warmup (Alg. 1 l.1-2) -------------------------------------
+    for ep in range(s.warmup_epochs):
+        for batch in data_epochs():
+            params, ow, loss = warmup_step(params, ow, jnp.asarray(step), batch)
+            step += 1
+        history.append({"phase": "warmup", "epoch": ep, "loss": float(loss)})
+
+    # -- Phase 2: search (Alg. 1 l.3-8) --------------------------------------
+    best_cost, stall = None, 0
+    for ep in range(s.search_epochs):
+        batches = list(data_epochs())
+        n_theta = max(1, int(len(batches) * s.theta_frac))
+        for batch in batches[:n_theta]:         # 20%: update theta
+            nas, ot, lt, lr = theta_step(params, nas, tau, ot,
+                                         jnp.asarray(step), batch)
+            step += 1
+        for batch in batches[n_theta:]:         # 80%: update W
+            params, ow, loss = w_step(params, nas, tau, ow,
+                                      jnp.asarray(step), batch)
+            step += 1
+        tau = mp.anneal_tau(tau, s.cfg)          # Alg. 1 l.8
+        cost = float(lr)
+        history.append({"phase": "search", "epoch": ep, "task_loss": float(lt),
+                        "reg_cost": cost, "tau": float(tau)})
+        if best_cost is not None and cost >= best_cost * (1 - s.early_stop_rtol):
+            stall += 1
+            if stall >= s.early_stop_patience:
+                break
+        else:
+            best_cost, stall = cost, 0
+
+    # -- Phase 3: fine-tune (Alg. 1 l.9-11) ----------------------------------
+    for ep in range(s.finetune_epochs):
+        for batch in data_epochs():
+            params, ow, loss = finetune_step(params, nas, ow,
+                                             jnp.asarray(step), batch)
+            step += 1
+        entry = {"phase": "finetune", "epoch": ep, "loss": float(loss)}
+        if eval_fn is not None:
+            entry["metric"] = float(eval_fn(params, nas, tau, "frozen"))
+        history.append(entry)
+
+    return SearchResult(params=params, nas=nas, tau=tau, history=history,
+                        settings=s)

@@ -1,0 +1,168 @@
+"""Data pipelines: deterministic synthetic streams + host-sharded loading.
+
+Production posture: each host produces only its shard of the global batch
+(``host_slice``), batches are built ahead of time on a background thread
+(double-buffered prefetch), and the pipeline state (epoch, step, rng) is
+checkpointable so a restarted job resumes mid-epoch without replaying data —
+required for fault-tolerant training (train/checkpoint.py stores it).
+
+Synthetic generators exist for every modality the assigned archs need:
+token streams (LM), frame embeddings (audio stub), patch embeddings (vlm
+stub), CIFAR-like images, MFCC-like spectrograms and AD vectors for the
+paper's MLPerf-Tiny tasks.  All are seeded and reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Checkpointable position of the stream."""
+    seed: int
+    step: int = 0
+
+    def to_dict(self):
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(seed=int(d["seed"]), step=int(d["step"]))
+
+
+class SyntheticLM:
+    """Deterministic token stream: batch i is a pure function of (seed, i).
+
+    Labels are the next-token shift of the tokens; a simple Markov-ish
+    structure (token_{t+1} depends on token_t) gives the models something
+    learnable for convergence tests.
+    """
+
+    def __init__(self, vocab: int, seq: int, global_batch: int,
+                 host_count: int = 1, host_id: int = 0, seed: int = 0,
+                 extra: Optional[dict] = None):
+        assert global_batch % host_count == 0
+        self.vocab, self.seq = vocab, seq
+        self.local_batch = global_batch // host_count
+        self.host_id, self.host_count = host_id, host_count
+        self.state = PipelineState(seed=seed)
+        self.extra = extra or {}
+
+    def _gen(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            (self.state.seed * 1_000_003 + step) * 131 + self.host_id)
+        B, S, V = self.local_batch, self.seq, self.vocab
+        base = rng.integers(0, V, size=(B, S + 1), dtype=np.int64)
+        # inject learnable structure: even positions copy previous token
+        base[:, 2::2] = (base[:, 1:-1:2] * 31 + 7) % V
+        batch = {"tokens": base[:, :-1].astype(np.int32),
+                 "labels": base[:, 1:].astype(np.int32)}
+        for name, shape in self.extra.items():
+            batch[name] = rng.standard_normal((B, *shape)).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            batch = self._gen(self.state.step)
+            # advance BEFORE yielding: a checkpoint taken after consuming
+            # batch k must record position k+1, or restart replays a batch
+            # (caught by test_pipeline_state_checkpointable)
+            self.state.step += 1
+            yield batch
+
+    def epoch(self, n_batches: int):
+        """Finite slice for Alg. 1's epoch-structured loops."""
+        start = self.state.step
+        for i in range(n_batches):
+            yield self._gen(start + i)
+        self.state.step = start + n_batches
+
+
+class SyntheticTiny:
+    """Synthetic datasets for the MLPerf-Tiny tasks (class-conditional
+    Gaussian blobs — enough signal for the DNAS machinery to be exercised
+    end-to-end and for accuracy-vs-cost Pareto sweeps to be meaningful)."""
+
+    def __init__(self, cfg, n: int = 512, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.cfg = cfg
+        if cfg.task == "ad":
+            self.x = rng.standard_normal((n, 640)).astype(np.float32)
+            # anomalies: shifted distribution, used only for AUC eval
+            self.x_anom = (rng.standard_normal((n // 4, 640)) * 1.8 + 1.0
+                           ).astype(np.float32)
+            self.y = None
+        else:
+            C = cfg.n_classes
+            self.y = rng.integers(0, C, size=n).astype(np.int32)
+            protos = rng.standard_normal((C, *cfg.input_shape)) * 1.5
+            self.x = (protos[self.y]
+                      + rng.standard_normal((n, *cfg.input_shape))
+                      ).astype(np.float32)
+
+    def batches(self, batch_size: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(len(self.x))
+        for i in range(0, len(idx) - batch_size + 1, batch_size):
+            sel = idx[i:i + batch_size]
+            b = {"x": self.x[sel]}
+            if self.y is not None:
+                b["y"] = self.y[sel]
+            yield b
+
+
+class Prefetcher:
+    """Background-thread double buffering: overlaps host data generation
+    with device compute (the standard input-pipeline optimization)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.it = it
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _run(self):
+        try:
+            for item in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def input_batch_for(cfg, seq: int, global_batch: int, seed: int = 0) -> dict:
+    """One concrete (host-local) batch matching input_specs(cfg) shapes —
+    used by smoke tests; the dry-run itself uses ShapeDtypeStructs only."""
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = (cfg.encoder_seq, cfg.d_model)
+    if cfg.family == "vlm" and cfg.n_prefix_tokens:
+        extra["prefix_embeds"] = (cfg.n_prefix_tokens, cfg.d_model)
+    gen = SyntheticLM(cfg.vocab_size, seq, global_batch, seed=seed,
+                      extra=extra)
+    return gen._gen(0)

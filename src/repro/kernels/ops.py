@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels: padding, batching,
+backend/interpret selection.
+
+``quant_matmul`` is the entry point serving.dq_linear uses with
+backend="pallas": it accepts arbitrary leading batch dims and unpadded
+shapes, pads to tile multiples, invokes the kernel, and slices back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as qz
+from repro.kernels import fake_quant as fq_kernel
+from repro.kernels import quant_matmul as qm_kernel
+
+# interpret=True executes the kernel body in Python on CPU (validation);
+# on a real TPU runtime set repro_kernels_interpret=False via this flag.
+INTERPRET = True
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "c_in", "out_dtype", "bm", "bn",
+                                    "bk"))
+def quant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                 bits: int, c_in: int, out_dtype=jnp.bfloat16,
+                 bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
+    """x (..., c_in) @ dequant(packed (n, ceil(c_in/f))) -> (..., n)."""
+    f = qz.pack_factor(bits)
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, x.shape[-1]).astype(jnp.bfloat16)
+    N = packed.shape[0]
+    Kp = packed.shape[1] * f                     # padded c_in
+    x2 = _pad_to(x2, 1, Kp - x.shape[-1] + x.shape[-1]) if Kp != x.shape[-1] \
+        else x2
+    if Kp != x2.shape[1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - x2.shape[1])))
+    # choose tile sizes that divide (pad where they don't)
+    bm_ = min(bm, max(8, 1 << (M - 1).bit_length())) if M < bm else bm
+    x2 = _pad_to(x2, 0, bm_)
+    packed_p = _pad_to(packed, 0, bn) if N % bn else packed
+    scale_p = _pad_to(scale, 0, bn) if N % bn else scale
+    bk_ = bk
+    while Kp % bk_ or (bk_ % f):
+        bk_ //= 2
+        if bk_ < f:
+            bk_ = Kp           # single K step
+            break
+    y = qm_kernel.quant_matmul_2d(x2, packed_p, scale_p, bits, bm=bm_,
+                                  bn=min(bn, packed_p.shape[0]), bk=bk_,
+                                  interpret=INTERPRET, out_dtype=out_dtype)
+    return y[:M, :N].reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("bitwidths",))
+def fused_mix(w: jnp.ndarray, gamma_hat: jnp.ndarray, alpha: jnp.ndarray,
+              bitwidths=(2, 4, 8)) -> jnp.ndarray:
+    """Fused Eq. 5 weight mixture; arbitrary (N, K) via padding."""
+    N, K = w.shape
+    bn = 256 if N % 256 == 0 else (N if N <= 256 else 1 << 30)
+    bk = 512 if K % 512 == 0 else (K if K <= 512 else 1 << 30)
+    if bn == 1 << 30 or bk == 1 << 30:
+        wp = _pad_to(_pad_to(w, 0, 256), 1, 512)
+        gp = _pad_to(gamma_hat, 0, 256)
+        ap = jnp.maximum(_pad_to(alpha, 0, 256), 1e-6)
+        out = fq_kernel.fused_mix_2d(wp, gp, ap, bitwidths,
+                                     interpret=INTERPRET)
+        return out[:N, :K]
+    return fq_kernel.fused_mix_2d(w, gamma_hat, alpha, bitwidths, bn=bn,
+                                  bk=bk, interpret=INTERPRET)

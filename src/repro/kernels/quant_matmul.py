@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: packed sub-byte weight matmul with in-VMEM dequant.
+
+The deployment hot-spot of the paper's technique on TPU (DESIGN.md §6): one
+per-precision channel group of a deployed linear is
+
+    y[m, n] = scale[n] * sum_k x[m, k] * w_int[n, k]
+
+with ``w_int`` stored *packed* (4x int2 / 2x int4 / 1x int8 per uint8 byte)
+in HBM.  The kernel streams packed bytes HBM->VMEM (the point: weight
+bandwidth scales with the searched bit-width), unpacks + sign-extends in
+VMEM registers, runs the MXU dot at bf16/f32, and applies the per-channel
+scale once at the end of the K loop.
+
+Tiling: grid (M/bm, N/bn, K/bk); x block (bm, bk), packed block
+(bn, bk/pack_factor), output block (bm, bn) accumulated across the K grid
+axis (output revisiting — the standard Pallas matmul reduction pattern).
+Block defaults bm=bn=128, bk=512 keep the working set
+(128*512*2 + 128*512 + 128*128*4)B ≈ 0.4 MB well under the ~16 MB VMEM
+budget while keeping the MXU dimensions 128-aligned.
+
+Validated in interpret mode on CPU against ref.quant_matmul_ref across a
+shape/dtype/bits sweep (tests/test_kernels.py); ``interpret=False`` is the
+real-TPU path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import quantizers as qz
+
+
+def _unpack_block(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(bn, bkp) uint8 -> (bn, bkp * 8/bits) int8, sign-extended."""
+    if bits == 8:
+        return packed.astype(jnp.int8)
+    f = 8 // bits
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    parts = []
+    for i in range(f):
+        u = (packed >> (i * bits)) & mask                   # uint8 lanes
+        s = u.astype(jnp.int32)
+        s = jnp.where(s >= sign, s - (1 << bits), s)
+        parts.append(s.astype(jnp.int8))
+    # interleave: value j of byte b sits at column b*f + j
+    stacked = jnp.stack(parts, axis=-1)                     # (bn, bkp, f)
+    return stacked.reshape(packed.shape[0], packed.shape[1] * f)
+
+
+def _kernel(x_ref, p_ref, s_ref, o_ref, *, bits: int, k_steps: int,
+            out_dtype):
+    k = pl.program_id(2)
+    w_int = _unpack_block(p_ref[...], bits)                 # (bn, bk) int8
+    x = x_ref[...]                                          # (bm, bk)
+    acc = jnp.dot(x.astype(jnp.bfloat16), w_int.astype(jnp.bfloat16).T,
+                  preferred_element_type=jnp.float32)       # (bm, bn)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc
+
+    @pl.when(k == k_steps - 1)
+    def _scale():
+        o_ref[...] *= s_ref[...][None, :].astype(jnp.float32)
+
+
+def quant_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                    bits: int, *, bm: int = 128, bn: int = 128,
+                    bk: int = 512, interpret: bool = True,
+                    out_dtype=jnp.float32) -> jnp.ndarray:
+    """x (M, K) x packed (N, K/f) -> (M, N) f32; M/N/K already padded."""
+    M, K = x.shape
+    N = packed.shape[0]
+    f = qz.pack_factor(bits)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk % f == 0 and packed.shape[1] == K // f
+    k_steps = K // bk
+    kern = functools.partial(_kernel, bits=bits, k_steps=k_steps,
+                             out_dtype=out_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk // f), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scale)
+    return out.astype(out_dtype)

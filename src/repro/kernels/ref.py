@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests).
+
+These are intentionally straightforward: no tiling, no padding tricks — the
+kernels must match them bit-for-bit-ish (fp tolerance) across shape/dtype
+sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as qz
+
+
+def quant_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                     bits: int, c_in: int, out_dtype=jnp.float32
+                     ) -> jnp.ndarray:
+    """x (..., c_in) @ dequant(packed (n, c_in_pad/f), scale (n,)).T.
+
+    Matches serving.dq_linear's jnp path for one precision group.
+    """
+    w_int = qz.unpack_int(packed, bits)[..., :c_in]          # (n, c_in) int8
+    w = w_int.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+    y = jnp.einsum("...i,oi->...o", x.astype(jnp.float32), w)
+    return y.astype(out_dtype)
+
+
+def fused_mix_ref(w: jnp.ndarray, gamma_hat: jnp.ndarray, alpha: jnp.ndarray,
+                  bitwidths=(2, 4, 8)) -> jnp.ndarray:
+    """Eq. (5) effective weight: sum_p gamma_hat[:, p] * FQ(w, alpha, p).
+
+    w (n, k) float32; gamma_hat (n, |P|) softmax'd; alpha (n,) clips.
+    """
+    out = jnp.zeros_like(w, dtype=jnp.float32)
+    a = alpha[:, None]
+    for i, b in enumerate(bitwidths):
+        out = out + gamma_hat[:, i:i + 1] * qz.quantize_weight(
+            w.astype(jnp.float32), a, b)
+    return out

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes, and record memory/cost/collective analysis.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count on first init, and the production meshes need 512
+placeholder devices on the CPU dry-run host.  Nothing else in the repo sets
+this flag — smoke tests and benches see the 1 real device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import ARCH_IDS, get_config
+from repro.launch import hlo_analysis as ha
+from repro.launch import workloads as wk
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cells
+from repro.models import transformer as tfm
+from repro.train import steps as steps_mod
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the model's shape tree."""
+    params, _ = jax.eval_shape(
+        lambda: tfm.init_model(cfg, jax.random.PRNGKey(0)))
+    total = active = 0
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        pathstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        if pathstr.endswith("/aw") or pathstr.endswith("/ax"):
+            continue
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.n_experts and "/we_" in pathstr:
+            active += n * cfg.experts_per_token // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             fsdp: bool = True) -> dict:
+    """Lower+compile one cell; returns the EXPERIMENTS.md §Dry-run record."""
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        wl = wk.build(cfg, shape)
+        lowered = wk.lower(wl, mesh, fsdp=fsdp)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+            }
+            # per-device residency: args (params+opt+caches) + temps
+            rec["bytes_per_device"] = int(mem.argument_size_in_bytes
+                                          + mem.temp_size_in_bytes)
+        except Exception as e:  # pragma: no cover - backend specific
+            rec["memory_error"] = str(e)
+        text = compiled.as_text()
+        hlo_dir = os.environ.get("REPRO_HLO_DIR", "results/hlo")
+        try:
+            import gzip
+            os.makedirs(hlo_dir, exist_ok=True)
+            fn = f"{arch}_{shape}_{rec['mesh']}.txt.gz".replace("/", "_")
+            with gzip.open(os.path.join(hlo_dir, fn), "wt") as f:
+                f.write(text)
+            rec["hlo_file"] = os.path.join(hlo_dir, fn)
+        except OSError as e:
+            rec["hlo_save_error"] = str(e)
+        roof = ha.roofline_terms(compiled, text)
+        rec["roofline"] = roof.as_dict()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once (scan-unaware)",
+        }
+        total, active = count_params(cfg)
+        rec["params_total"] = total
+        rec["params_active"] = active
+        mf = ha.model_flops_per_step(
+            active, wl.tokens_per_step,
+            "train" if wl.kind == "train" else "serve")
+        rec["model_flops"] = mf
+        # cost_analysis flops are per-device (post-SPMD module)
+        n_chips = 512 if multi_pod else 256
+        rec["n_chips"] = n_chips
+        rec["useful_flops_ratio"] = (
+            mf / (roof.flops * n_chips)) if roof.flops else 0.0
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--mesh", default="both",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true",
+                   help="run every runnable (arch x shape) cell")
+    p.add_argument("--out", default=None, help="append JSON records here")
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--resume", action="store_true",
+                   help="skip cells already recorded ok in --out")
+    args = p.parse_args()
+
+    done = set()
+    if args.resume and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("ok") and not r.get("skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    todo = []
+    for c in cells():
+        if args.arch and c.arch != args.arch:
+            continue
+        if args.shape and c.shape != args.shape:
+            continue
+        if not args.all and not args.arch and not args.shape:
+            continue
+        todo.append(c)
+    if not todo:
+        p.error("nothing selected; pass --all or --arch/--shape")
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    records = []
+    for c in todo:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            if (c.arch, c.shape, mesh_name) in done:
+                print(f"[resume-skip] {c.arch}/{c.shape} {mesh_name}",
+                      flush=True)
+                continue
+            if not c.runnable:
+                rec = {"arch": c.arch, "shape": c.shape, "mesh": mesh_name,
+                       "ok": True, "skipped": True, "reason": c.skip_reason}
+                print(f"[skip] {c.arch}/{c.shape} ({c.skip_reason})",
+                      flush=True)
+            else:
+                rec = run_cell(c.arch, c.shape, multi,
+                               fsdp=not args.no_fsdp)
+                status = "ok" if rec["ok"] else "FAIL: " + rec.get("error", "")
+                roof = rec.get("roofline", {})
+                print(f"[{mesh_name}] {c.arch}/{c.shape}: {status} "
+                      f"compile={rec.get('compile_s', '-')}s "
+                      f"bottleneck={roof.get('bottleneck', '-')}", flush=True)
+            records.append(rec)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+
+    n_fail = sum(1 for r in records if not r.get("ok"))
+    print(f"\n{len(records)} records, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Roofline-term extraction from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step *per chip*
+(the compiled module is the post-SPMD per-device program, so every quantity
+below is already per-chip):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective = collective_bytes / ICI_bw         (~50 GB/s/link)
+
+``cost_analysis()`` provides HLO_FLOPs and HLO_bytes.  Collective bytes are
+NOT in cost_analysis, so we parse the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction we sum operand sizes (first pass builds an instr->shape table so
+operand references resolve).  Ring-algorithm accounting: an all-reduce moves
+~2x its operand bytes over the slowest link (reduce-scatter + all-gather
+phases); the others move ~1x their max(operand, result).
+
+The functions are backend-agnostic: on the CPU dry-run host they analyse the
+partitioned module exactly as a TPU compile would produce it (same SPMD
+pass), only the backend codegen differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "%name = <shape(s)> op-name(" — shape may be a (tuple, of, shapes)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+                       r"([\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of one HLO shape string (handles tuple shapes)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_moved: float = 0.0
+    counts: dict = dataclasses.field(default_factory=dict)
+    bytes_by_op: dict = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum data moved by collectives in a (per-device) HLO module text."""
+    # pass 1: instruction name -> result shape string
+    shapes: dict[str, str] = {}
+    instrs: list[tuple[str, str, str, str]] = []  # (name, shape, op, line)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        base_op = op.rstrip(".0123456789")
+        if base_op.endswith("-start"):
+            base_op = base_op[:-len("-start")]
+        if base_op in _COLLECTIVES:
+            instrs.append((name, shape_str, base_op, line))
+
+    stats = CollectiveStats()
+    for name, shape_str, op, line in instrs:
+        # operand bytes: resolve %refs inside the parens
+        args = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1])
+        operand_b = sum(shape_bytes(shapes.get(a, "")) for a in args
+                        if a in shapes)
+        result_b = shape_bytes(shape_str)
+        moved = max(operand_b, result_b)
+        if op == "all-reduce":
+            moved = 2 * max(operand_b, result_b)   # RS + AG phases of a ring
+        stats.bytes_moved += moved
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + moved
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    collective_counts: dict
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    """Three roofline terms from a compiled (per-device) executable.
+
+    FLOPs / bytes / collective bytes come from the scan-aware HLO walk
+    (launch/hlo_costs.py) — XLA's own cost_analysis counts while bodies
+    once, under-counting scanned-layer models by ~L x (verified; see
+    EXPERIMENTS.md §Roofline methodology).
+    """
+    from repro.launch import hlo_costs
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    costs = hlo_costs.analyze(text)
+    terms = {
+        "compute": costs.flops / PEAK_FLOPS_BF16,
+        "memory": costs.mem_bytes / HBM_BW,
+        "collective": costs.coll_bytes / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(flops=costs.flops, hbm_bytes=costs.mem_bytes,
+                    collective_bytes=costs.coll_bytes,
+                    compute_s=terms["compute"], memory_s=terms["memory"],
+                    collective_s=terms["collective"], bottleneck=bottleneck,
+                    collective_counts=dict(costs.coll_by_op))
+
+
+def model_flops_per_step(n_params_active: int, tokens: int,
+                         kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D for training (fwd+bwd), 2·N·D for inference."""
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_params_active * tokens

@@ -1,0 +1,255 @@
+"""Scan-aware per-device cost extraction from compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, but our
+models scan over layers (and attention scans over KV chunks), so its FLOPs /
+bytes under-count by the trip count — verified experimentally: a scan of 10
+matmuls reports the FLOPs of one (EXPERIMENTS.md §Roofline, methodology).
+
+This module walks the compiled (post-SPMD, per-device) HLO call graph and
+multiplies every ``while`` body/condition cost by the loop's trip count
+(recovered from the integer constant in the condition computation — jax
+scans lower to ``lt(iv, N)``).  Costs counted per instruction:
+
+  flops            dot: 2 * prod(result dims) * contracted_extent
+  mem bytes        dot: lhs+rhs+result (weights + activations at the
+                   matmul boundary — the dominant, fusion-invariant HBM
+                   traffic); gather/dynamic-slice: 2x result;
+                   dynamic-update-slice: 2x update (in-place on hardware).
+                   Fusion-boundary bytes are NOT charged: the CPU backend
+                   makes far smaller fusions than TPU, so they are a
+                   host-compiler artifact (documented in EXPERIMENTS.md).
+  collective bytes all-gather / all-reduce (x2, ring) / reduce-scatter /
+                   all-to-all / collective-permute: max(operand, result)
+
+All shapes in the post-SPMD module are per-device, so totals are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{")
+# shape part is lazy `.*?` because tuple shapes embed /*index=N*/ comments
+# (which contain '='); group 4 is the argument/attribute tail after the op's
+# opening paren.
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s"
+                    r"([\w\-]+)\((.*)$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    def __iadd__(self, other: "Costs"):
+        self.flops += other.flops
+        self.mem_bytes += other.mem_bytes
+        self.coll_bytes += other.coll_bytes
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0) + v
+        self.unknown_trip_counts += other.unknown_trip_counts
+        return self
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.mem_bytes * k, self.coll_bytes * k,
+                     {o: v * k for o, v in self.coll_by_op.items()},
+                     self.unknown_trip_counts)
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+    tail: str = ""     # text after the op's opening paren (args + attrs)
+
+
+def _split_computations(text: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    current = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if hdr and "->" in line:
+            current = hdr.group(2)
+            comps[current] = []
+            if hdr.group(1):
+                entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            comps[current].append(_Instr(m.group(1), m.group(2), m.group(3),
+                                         line, m.group(4)))
+    return comps, entry
+
+
+def _args_of(tail: str) -> list[str]:
+    """%refs in the operand list (the tail up to the closing paren, before
+    the attribute section which may reference computations)."""
+    inner = tail
+    for marker in ("), ", ") ,"):
+        pos = inner.find(marker)
+        if pos >= 0:
+            inner = inner[:pos + 1]
+            break
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def _attr_comp(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _contracted_extent(ins: "_Instr", shapes: dict) -> int:
+    """Product of lhs contracting dims of a dot instruction."""
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    args = _args_of(ins.tail)
+    if not m or not args:
+        return 1
+    lhs_shape = shape_dims(shapes.get(args[0], ""))
+    ext = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(lhs_shape):
+            ext *= lhs_shape[int(d)]
+    return max(ext, 1)
+
+
+def _trip_count(cond_instrs: list[_Instr]) -> Optional[int]:
+    best = None
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                v = int(m.group(1))
+                best = v if best is None else max(best, v)
+    return best
+
+
+def analyze(text: str) -> Costs:
+    comps, entry = _split_computations(text)
+    if entry is None:
+        return Costs()
+    shapes: dict[str, str] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            shapes[ins.name] = ins.shape
+
+    memo: dict[str, Costs] = {}
+
+    def cost_of(comp: str, stack=()) -> Costs:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack or comp not in comps:
+            return Costs()
+        total = Costs()
+        for ins in comps[comp]:
+            op = ins.op
+            base = op.rstrip(".0123456789")
+            if base.endswith("-start"):
+                base = base[:-6]
+            if base == "dot":
+                k = _contracted_extent(ins, shapes)
+                res = 1
+                for d in shape_dims(ins.shape):
+                    res *= d
+                total.flops += 2.0 * res * k
+                operand_b = sum(shape_bytes(shapes.get(a, ""))
+                                for a in _args_of(ins.tail))
+                total.mem_bytes += operand_b + shape_bytes(ins.shape)
+            elif base == "fusion":
+                # traverse for dots/collectives INSIDE the fusion, but do
+                # NOT charge fusion-boundary bytes: CPU-backend fusions are
+                # far smaller than TPU fusions, so boundary traffic here is
+                # a host-compiler artifact.  Activation traffic that a TPU
+                # would actually see is captured via dot operands/results.
+                callee = _attr_comp(ins.line, "calls")
+                if callee:
+                    total += cost_of(callee, stack + (comp,))
+            elif base in ("gather", "dynamic-slice"):
+                total.mem_bytes += 2 * shape_bytes(ins.shape)
+            elif base == "dynamic-update-slice":
+                args = _args_of(ins.tail)
+                upd = shape_bytes(shapes.get(args[1], "")) if len(args) > 1 \
+                    else 0
+                total.mem_bytes += 2 * upd
+            elif base in _COLLECTIVES:
+                operand_b = sum(shape_bytes(shapes.get(a, ""))
+                                for a in _args_of(ins.tail))
+                moved = max(operand_b, shape_bytes(ins.shape))
+                if base == "all-reduce":
+                    moved *= 2
+                total.coll_bytes += moved
+                total.coll_by_op[base] = total.coll_by_op.get(base, 0) + moved
+            elif base == "while":
+                body = _attr_comp(ins.line, "body")
+                cond = _attr_comp(ins.line, "condition")
+                trips = None
+                if cond and cond in comps:
+                    trips = _trip_count(comps[cond])
+                inner = Costs()
+                if body:
+                    inner += cost_of(body, stack + (comp,))
+                if cond:
+                    inner += cost_of(cond, stack + (comp,))
+                if trips is None:
+                    trips = 1
+                    inner.unknown_trip_counts += 1
+                total += inner.scaled(trips)
+            elif base in ("call", "custom-call", "reduce", "sort", "map",
+                          "scatter", "reduce-window", "select-and-scatter",
+                          "conditional"):
+                for key in ("to_apply", "calls"):
+                    callee = _attr_comp(ins.line, key)
+                    if callee:
+                        total += cost_of(callee, stack + (comp,))
+                        break
+                if base == "conditional":
+                    for c in re.findall(r"branch_computations=\{([^}]*)\}",
+                                        ins.line):
+                        for cc in re.findall(r"%?([\w.\-]+)", c):
+                            total += cost_of(cc, stack + (comp,))
+        memo[comp] = total
+        return total
+
+    return cost_of(entry)

@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run host
+forces 512 fake CPU devices via XLA_FLAGS *before* first jax init, while the
+smoke tests and benchmarks see the single real device.
+
+Mesh layout (DESIGN.md §5):
+  single pod : (data=16, model=16)            = 256 chips (TPU v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+``pod`` is a pure data-parallel axis: the only traffic crossing the
+inter-pod DCN is the gradient all-reduce, which is the standard
+hierarchical-DP posture for 1000+-node jobs (scaling to N pods is
+changing one integer here).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are "
+            f"visible — the dry-run entrypoint must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"any jax import (launch/dryrun.py does)")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devices[:n])
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over the real host devices for smoke tests."""
+    n = data * model
+    devices = jax.devices()[:n]
+    return jax.make_mesh(
+        (data, model), SINGLE_POD_AXES,
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+        devices=devices)

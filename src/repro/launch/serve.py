@@ -1,0 +1,99 @@
+"""Serving launcher: deployed mixed-precision model, batched requests,
+prefill + decode loop with int8 KV caches.
+
+The deployed weights are the Sec. III-C output: channels reordered and
+grouped by searched bit-width, packed sub-byte, consumed as per-precision
+sub-GEMMs (kernels/quant_matmul.py on TPU; jnp fallback on CPU).
+
+Usage (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ARCH_IDS, get_config
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_test_mesh, make_production_mesh
+from repro.models import serving
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    p.add_argument("--production-mesh", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_test_mesh())
+    rules = shd.ShardingRules(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    dparams = serving.init_deployed_model(cfg, key)
+    dparams = jax.device_put(dparams, rules.tree_shardings(dparams))
+
+    B, S = args.batch, args.prompt_len
+    max_len = S + args.gen
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm" and cfg.n_prefix_tokens:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+
+    prefill = jax.jit(lambda dp, b: serving.prefill(dp, cfg, b,
+                                                    args.backend))
+    decode = jax.jit(lambda dp, t, c, pos: serving.decode_step(
+        dp, cfg, t, c, pos, args.backend), donate_argnums=(2,))
+
+    with mesh:
+        t0 = time.time()
+        logits, pf_caches = prefill(dparams, batch)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+        print(f"prefill: {B}x{S} tokens in {t_prefill:.2f}s "
+              f"({B * S / t_prefill:.0f} tok/s)")
+
+        # decode loop against fresh max_len caches (prefill caches are
+        # S-deep; production pads them into the ring — here we re-init for
+        # shape stability and measure steady-state decode)
+        caches = serving.init_caches(cfg, B, max_len)
+        tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tokens]
+        t0 = time.time()
+        for i in range(args.gen):
+            logits, caches = decode(dparams, tokens, caches,
+                                    jnp.asarray(S + i, jnp.int32))
+            tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tokens)
+        tokens.block_until_ready()
+        dt = time.time() - t0
+        print(f"decode: {args.gen} steps x batch {B} in {dt:.2f}s "
+              f"({args.gen * B / dt:.1f} tok/s, "
+              f"{1e3 * dt / args.gen:.1f} ms/step)")
+        gen = jnp.concatenate(out, axis=1)
+        print("sample token ids:", np.asarray(gen[0])[:16])
+
+
+if __name__ == "__main__":
+    main()

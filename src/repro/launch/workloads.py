@@ -1,0 +1,157 @@
+"""Workload builders: (arch x shape) -> jitted step + ShapeDtypeStruct args
++ shardings for a given mesh.
+
+This is the single source of truth consumed by the multi-pod dry-run
+(launch/dryrun.py), the roofline benchmarks (benchmarks/roofline.py) and the
+production launchers (launch/train.py / launch/serve.py):
+
+  train_4k     -> ``train_step``  — the paper's search-phase W update (DNAS
+                  mixture forward + CE + optimizer), the dominant workload.
+  prefill_32k  -> ``prefill``     — deployed mixed-precision model, full
+                  sequence, int8 KV-cache build.
+  decode_32k / long_500k -> ``decode_step`` — one new token against a
+                  seq_len-deep cache (the bandwidth-bound serving workload
+                  where the paper's searched bit-widths directly scale
+                  throughput).
+
+Everything is ShapeDtypeStruct-based — no parameter or activation memory is
+ever allocated on the dry-run host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.launch.shapes import SHAPES, ShapeSpec
+from repro.models import serving
+from repro.models import transformer as tfm
+from repro.train import steps as steps_mod
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str                      # "<arch>/<shape>"
+    kind: str                      # train | prefill | decode
+    fn: Callable                   # positional-args step function
+    args: tuple                    # ShapeDtypeStruct pytrees
+    donate: tuple = ()             # donated arg indices
+    tokens_per_step: int = 0       # for MODEL_FLOPS accounting
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg, spec: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for one *global* training/prefill batch."""
+    B, S = spec.global_batch, spec.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if spec.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm" and cfg.n_prefix_tokens:
+        batch["prefix_embeds"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model),
+                                      jnp.float32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def make_train_workload(cfg, spec: ShapeSpec,
+                        hp: Optional[steps_mod.TrainHParams] = None
+                        ) -> Workload:
+    hp = hp or steps_mod.TrainHParams.for_arch(cfg)
+    state = jax.eval_shape(
+        lambda: steps_mod.init_train_state(cfg, hp, jax.random.PRNGKey(0)))
+    batch = batch_struct(cfg, spec)
+    step = steps_mod.make_train_step(cfg, hp)
+    return Workload(name=f"{cfg.name}/{spec.name}", kind="train", fn=step,
+                    args=(state, batch), donate=(0,),
+                    tokens_per_step=spec.global_batch * spec.seq_len)
+
+
+def make_prefill_workload(cfg, spec: ShapeSpec) -> Workload:
+    dparams = jax.eval_shape(
+        lambda: serving.init_deployed_model(cfg, jax.random.PRNGKey(0)))
+    batch = batch_struct(cfg, spec)
+
+    def prefill_fn(dp, b):
+        return serving.prefill(dp, cfg, b)
+
+    return Workload(name=f"{cfg.name}/{spec.name}", kind="prefill",
+                    fn=prefill_fn, args=(dparams, batch),
+                    tokens_per_step=spec.global_batch * spec.seq_len)
+
+
+def make_decode_workload(cfg, spec: ShapeSpec) -> Workload:
+    B, S = spec.global_batch, spec.seq_len
+    dparams = jax.eval_shape(
+        lambda: serving.init_deployed_model(cfg, jax.random.PRNGKey(0)))
+    caches = jax.eval_shape(lambda: serving.init_caches(cfg, B, S))
+    tokens = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+
+    def decode_fn(dp, tok, c, p):
+        return serving.decode_step(dp, cfg, tok, c, p)
+
+    return Workload(name=f"{cfg.name}/{spec.name}", kind="decode",
+                    fn=decode_fn, args=(dparams, tokens, caches, pos),
+                    donate=(2,), tokens_per_step=B)
+
+
+def build(cfg, shape_name: str,
+          hp: Optional[steps_mod.TrainHParams] = None) -> Workload:
+    spec = SHAPES[shape_name]
+    if spec.kind == "train":
+        return make_train_workload(cfg, spec, hp)
+    if spec.kind == "prefill":
+        return make_prefill_workload(cfg, spec)
+    if spec.kind == "decode":
+        return make_decode_workload(cfg, spec)
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def shardings_for(wl: Workload, mesh: Mesh,
+                  fsdp: bool = True, moe_ep2d: bool = False,
+                  kv_seq_shard: bool = False) -> tuple:
+    """in_shardings pytree matching ``wl.args`` for ``mesh``."""
+    rules = shd.ShardingRules(mesh, fsdp=fsdp, moe_ep2d=moe_ep2d,
+                              kv_seq_shard=kv_seq_shard)
+    rep = NamedSharding(mesh, P())
+    if wl.kind == "train":
+        state, batch = wl.args
+        return (rules.tree_shardings(state), shd.batch_specs(mesh, batch))
+    if wl.kind == "prefill":
+        dparams, batch = wl.args
+        return (rules.tree_shardings(dparams), shd.batch_specs(mesh, batch))
+    if wl.kind == "decode":
+        dparams, tokens, caches, pos = wl.args
+        return (rules.tree_shardings(dparams),
+                shd.batch_specs(mesh, tokens),
+                rules.tree_shardings(caches),
+                rep)
+    raise ValueError(wl.kind)
+
+
+def lower(wl: Workload, mesh: Mesh, fsdp: bool = True,
+          moe_ep2d: bool = False, kv_seq_shard: bool = False):
+    """jit(fn, in_shardings).lower(*args) under the mesh."""
+    in_sh = shardings_for(wl, mesh, fsdp=fsdp, moe_ep2d=moe_ep2d,
+                          kv_seq_shard=kv_seq_shard)
+    jitted = jax.jit(wl.fn, in_shardings=in_sh,
+                     donate_argnums=wl.donate or ())
+    with mesh, shd.activation_sharding(mesh):
+        return jitted.lower(*wl.args)

@@ -1,0 +1,388 @@
+"""Attention variants: GQA (train/prefill/decode), MLA (DeepSeek-style with
+latent KV compression + decode-time weight absorption), and cross-attention
+(whisper).  All projections are quantization-aware (models/layers.qlinear).
+
+Full-sequence attention uses a *blockwise online-softmax* formulation
+(lax.scan over KV chunks) so the S×S score matrix never materializes — this
+is what makes the 32k-prefill dry-run cells fit in HBM, and it is the compute
+pattern a Pallas flash kernel would implement on real hardware (the jnp
+version is the oracle; see kernels/).
+
+KV caches are stored int8 with per-token scales (layer-wise activation
+quantization applied to the cache — the paper's activation scheme, DESIGN.md
+§2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype) -> tuple[dict, dict]:
+    """Returns (params, nas) for one GQA attention block."""
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": L.linear_init(ks[0], d, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": L.linear_init(ks[1], d, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wv": L.linear_init(ks[2], d, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wo": L.linear_init(ks[3], H * hd, d, dtype),
+    }
+    nas = {name: L.nas_init(ks[i], p["w"].shape[0], cfg.quant)
+           for i, (name, p) in enumerate(params.items())}
+    return params, nas
+
+
+def init_mla(key, cfg, dtype) -> tuple[dict, dict]:
+    """DeepSeek-V3 Multi-head Latent Attention parameters."""
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq_a": L.linear_init(ks[0], d, qr, dtype),
+        "wq_b": L.linear_init(ks[1], qr, H * (nope + rope), dtype),
+        "wkv_a": L.linear_init(ks[2], d, kvr + rope, dtype),
+        "wkv_b": L.linear_init(ks[3], kvr, H * (nope + vd), dtype),
+        "wo": L.linear_init(ks[4], H * vd, d, dtype),
+        "q_norm": L.norm_init(qr, "rmsnorm", dtype),
+        "kv_norm": L.norm_init(kvr, "rmsnorm", dtype),
+    }
+    nas = {name: L.nas_init(ks[min(i, 5)], params[name]["w"].shape[0], cfg.quant)
+           for i, name in enumerate(("wq_a", "wq_b", "wkv_a", "wkv_b", "wo"))}
+    return params, nas
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (online-softmax) attention core
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool, k_chunk: int = 1024,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """softmax(q kᵀ / sqrt(d)) v without materializing the S_q×S_kv matrix.
+
+    q: (B, H, Sq, D); k/v: (B, H, Skv, D) (GQA callers pre-broadcast KV heads
+    by reshaping into (B, KV, rep, ...) groups — see gqa_core).
+    Scans over KV chunks maintaining running (max, denom, numerator).
+    """
+    B, H, Sq, D = q.shape
+    Dv = v.shape[-1]                 # MLA: value head dim may differ from qk
+    Skv = k.shape[2]
+    k_chunk = min(k_chunk, Skv)
+    n_chunks = math.ceil(Skv / k_chunk)
+    pad = n_chunks * k_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    q = constrain(q, "D", "M", None, None)
+    kc = k.reshape(B, H, n_chunks, k_chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n_chunks, k_chunk, Dv).transpose(2, 0, 1, 3, 4)
+    kc = constrain(kc, None, "D", "M", None, None)
+    vc = constrain(vc, None, "D", "M", None, None)
+    scale = 1.0 / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, d_sum, acc = carry
+        kb, vb, ci = xs
+        kb = constrain(kb, "D", "M", None, None)
+        vb = constrain(vb, "D", "M", None, None)
+        kv_pos = ci * k_chunk + jnp.arange(k_chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kb).astype(jnp.float32) * scale
+        mask = kv_pos[None, :] < Skv  # padding mask
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        else:
+            mask = jnp.broadcast_to(mask, (Sq, k_chunk))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard -inf rows (fully masked chunk): exp(-inf - -inf) -> use safe max
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        d_new = d_sum * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, d_new, acc_new), None
+
+    m0 = constrain(jnp.full((B, H, Sq), -jnp.inf, jnp.float32),
+                   "D", "M", None)
+    d0 = constrain(jnp.zeros((B, H, Sq), jnp.float32), "D", "M", None)
+    a0 = constrain(jnp.zeros((B, H, Sq, Dv), jnp.float32),
+                   "D", "M", None, None)
+    (m, d_sum, acc), _ = jax.lax.scan(
+        body, (m0, d0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(d_sum, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def gqa_core(q, k, v, n_heads: int, n_kv: int, causal: bool,
+             q_offset: int = 0, k_chunk: int = 1024) -> jnp.ndarray:
+    """Grouped-query attention: q (B,S,H,D), k/v (B,S,KV,D) -> (B,S,H,D)."""
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]                 # MLA: value head dim may differ from qk
+    rep = n_heads // n_kv
+    qh = q.transpose(0, 2, 1, 3)     # (B, H, Sq, D)
+    kh = k.transpose(0, 2, 1, 3)     # (B, KV, Skv, D)
+    vh = v.transpose(0, 2, 1, 3)
+    kh = jnp.repeat(kh, rep, axis=1) if rep > 1 else kh
+    vh = jnp.repeat(vh, rep, axis=1) if rep > 1 else vh
+    out = blockwise_attention(qh, kh, vh, causal, k_chunk, q_offset)
+    return out.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# GQA block: train/prefill and cached-decode paths
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+                x: jnp.ndarray, positions: jnp.ndarray, causal: bool = True,
+                k_chunk: int = 1024) -> jnp.ndarray:
+    """Full-sequence GQA with RoPE. x: (B, S, d)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.cdtype
+    getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
+    q = L.qlinear(x, p["wq"], getn("wq"), tau, mode, cfg.quant, compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+    k = L.qlinear(x, p["wk"], getn("wk"), tau, mode, cfg.quant, compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+    v = L.qlinear(x, p["wv"], getn("wv"), tau, mode, cfg.quant, compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+    q = constrain(q.reshape(B, S, H, hd), "D", None, "M", None)
+    k = constrain(k.reshape(B, S, KV, hd), "D", None, "M", None)
+    v = constrain(v.reshape(B, S, KV, hd), "D", None, "M", None)
+    if cfg.rope_partial > 0:
+        cos, sin, rot = L.rope_freqs(hd, cfg.rope_theta, positions,
+                                     cfg.rope_partial)
+        q = L.apply_rope(q, cos, sin, rot)
+        k = L.apply_rope(k, cos, sin, rot)
+    o = gqa_core(q, k, v, H, KV, causal, k_chunk=k_chunk)
+    o = o.reshape(B, S, H * hd)
+    return L.qlinear(o, p["wo"], getn("wo"), tau, mode, cfg.quant,
+                     compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, KV, max_len, hd), jnp.int8),
+        "v": jnp.zeros((batch, KV, max_len, hd), jnp.int8),
+        "k_scale": jnp.zeros((batch, KV, max_len, 1), jnp.float32),
+        "v_scale": jnp.zeros((batch, KV, max_len, 1), jnp.float32),
+    }
+
+
+def _quant_per_token(t):
+    amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax.astype(jnp.float32), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def gqa_decode(p: dict, mode_params, cfg, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray, dq_linear) -> tuple[jnp.ndarray, dict]:
+    """One-token decode with int8 KV cache.
+
+    ``x``: (B, 1, d); ``pos``: scalar current position; ``dq_linear`` is the
+    linear application function for the deployed weight format (see
+    models/serving.py) — this function is format-agnostic.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.cdtype
+    q = dq_linear(x, p["wq"]).reshape(B, 1, H, hd)
+    k = dq_linear(x, p["wk"]).reshape(B, 1, KV, hd)
+    v = dq_linear(x, p["wv"]).reshape(B, 1, KV, hd)
+    if cfg.rope_partial > 0:
+        cos, sin, rot = L.rope_freqs(hd, cfg.rope_theta,
+                                     pos[None], cfg.rope_partial)
+        q = L.apply_rope(q, cos, sin, rot)
+        k = L.apply_rope(k, cos, sin, rot)
+    # append new kv (int8) at pos
+    kq, ks = _quant_per_token(k.transpose(0, 2, 1, 3))   # (B, KV, 1, hd)
+    vq, vs = _quant_per_token(v.transpose(0, 2, 1, 3))
+    pos0 = pos.astype(jnp.int32)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, pos0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, pos0, 0)),
+        "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                (0, 0, pos0, 0)),
+        "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                (0, 0, pos0, 0)),
+    }
+    S = cache["k"].shape[2]
+    rep = H // KV
+    kf = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(cd)
+    vf = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(cd)
+    qh = q.transpose(0, 2, 1, 3)                          # (B, H, 1, hd)
+    # grouped score: expand kv heads to full head count
+    kfe = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf  # (B, H, S, hd)
+    vfe = jnp.repeat(vf, rep, axis=1) if rep > 1 else vf
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kfe).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S)[None, None, None, :] <= pos0
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(cd)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vfe)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    return dq_linear(o, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): latent KV compression; decode uses weight absorption
+# ---------------------------------------------------------------------------
+
+def mla_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+                x: jnp.ndarray, positions: jnp.ndarray,
+                k_chunk: int = 1024) -> jnp.ndarray:
+    """Full-sequence MLA (train/prefill): expand latents to per-head k/v."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    cd = cfg.cdtype
+    getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
+
+    cq = L.qlinear(x, p["wq_a"], getn("wq_a"), tau, mode, cfg.quant,
+                   compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+    cq = L.rmsnorm(cq, p["q_norm"])
+    q = L.qlinear(cq, p["wq_b"], getn("wq_b"), tau, mode, cfg.quant,
+                  compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    ckv = L.qlinear(x, p["wkv_a"], getn("wkv_a"), tau, mode, cfg.quant,
+                    compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+    c_kv, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    c_kv = L.rmsnorm(c_kv, p["kv_norm"])
+    kv = L.qlinear(c_kv, p["wkv_b"], getn("wkv_b"), tau, mode, cfg.quant,
+                   compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    cos, sin, rot = L.rope_freqs(rope, cfg.rope_theta, positions, 1.0)
+    q_rope = L.apply_rope(q_rope, cos, sin, rot)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin, rot)  # shared head
+    k_rope = jnp.broadcast_to(k_rope, (B, S, H, rope))
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    o = gqa_core(q_full, k_full, v, H, H, causal=True, k_chunk=k_chunk)
+    o = o.reshape(B, S, H * vd)
+    return L.qlinear(o, p["wo"], getn("wo"), tau, mode, cfg.quant,
+                     compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+
+
+def init_mla_cache(cfg, batch: int, max_len: int) -> dict:
+    """MLA cache stores the *latent* c_kv + shared k_rope — (kvr + rope) per
+    token instead of 2*H*hd: the paper-aligned memory win for decode."""
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.int8),
+        "ckv_scale": jnp.zeros((batch, max_len, 1), jnp.float32),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), jnp.bfloat16),
+    }
+
+
+def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+               dq_linear, dense_w) -> tuple[jnp.ndarray, dict]:
+    """One-token MLA decode with weight absorption.
+
+    ``dense_w(name)`` returns a dense (c_out, c_in) weight view for the
+    small wkv_b projection (absorbed per-head); the big projections go
+    through ``dq_linear`` (packed mixed-precision path).
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    cd = cfg.cdtype
+
+    cq = L.rmsnorm(dq_linear(x, p["wq_a"]), p["q_norm"])
+    q = dq_linear(cq, p["wq_b"]).reshape(B, 1, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    ckv_new = dq_linear(x, p["wkv_a"])
+    c_kv, k_rope_new = ckv_new[..., :kvr], ckv_new[..., kvr:]
+    c_kv = L.rmsnorm(c_kv, p["kv_norm"])
+
+    cos, sin, rot = L.rope_freqs(rope, cfg.rope_theta, pos[None], 1.0)
+    q_rope = L.apply_rope(q_rope, cos, sin, rot)
+    k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], cos, sin, rot)[:, :, 0]
+
+    qc, qs = _quant_per_token(c_kv)
+    pos0 = pos.astype(jnp.int32)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], qc, (0, pos0, 0)),
+        "ckv_scale": jax.lax.dynamic_update_slice(cache["ckv_scale"], qs,
+                                                  (0, pos0, 0)),
+        "krope": jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope_new.astype(jnp.bfloat16), (0, pos0, 0)),
+    }
+    S = cache["ckv"].shape[1]
+
+    # weight absorption: W_uk (H, nope, kvr), W_uv (H, vd, kvr) from wkv_b
+    wkv_b = dense_w("wkv_b").reshape(H, nope + vd, kvr)
+    w_uk, w_uv = wkv_b[:, :nope], wkv_b[:, nope:]
+    # q_nope' = q_nope @ W_uk  -> latent space (B, 1, H, kvr)
+    q_lat = jnp.einsum("bqhn,hnr->bqhr", q_nope.astype(cd), w_uk.astype(cd))
+
+    ckv_f = (cache["ckv"].astype(jnp.float32) * cache["ckv_scale"]).astype(cd)
+    s = jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_f).astype(jnp.float32)
+    s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(cd),
+                       cache["krope"].astype(cd)).astype(jnp.float32)
+    s = s / math.sqrt(nope + rope)
+    valid = jnp.arange(S)[None, None, None, :] <= pos0
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(cd)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv_f)       # (B,1,H,kvr)
+    o = jnp.einsum("bqhr,hvr->bqhv", o_lat, w_uv.astype(cd))
+    o = o.reshape(B, 1, H * vd)
+    return dq_linear(o, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder): KV from encoder output, not causal.
+# ---------------------------------------------------------------------------
+
+def cross_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+                  x: jnp.ndarray, enc: jnp.ndarray,
+                  k_chunk: int = 1024) -> jnp.ndarray:
+    B, S, _ = x.shape
+    Se = enc.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.cdtype
+    getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
+    q = L.qlinear(x, p["wq"], getn("wq"), tau, mode, cfg.quant,
+                  compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)).reshape(B, S, H, hd)
+    k = L.qlinear(enc, p["wk"], getn("wk"), tau, mode, cfg.quant,
+                  compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)).reshape(B, Se, KV, hd)
+    v = L.qlinear(enc, p["wv"], getn("wv"), tau, mode, cfg.quant,
+                  compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)).reshape(B, Se, KV, hd)
+    o = gqa_core(q, k, v, H, KV, causal=False, k_chunk=k_chunk)
+    o = o.reshape(B, S, H * hd)
+    return L.qlinear(o, p["wo"], getn("wo"), tau, mode, cfg.quant,
+                     compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))

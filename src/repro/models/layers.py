@@ -1,0 +1,230 @@
+"""Quantization-aware neural-net primitives (pure functional JAX).
+
+Every weight that the paper's method searches over goes through
+:func:`qlinear` / :func:`qconv2d`, which dispatch on ``mode``:
+
+  float    — no quantization (reference / float baseline)
+  qat8     — fixed 8-bit PACT QAT (warmup phase, Alg. 1 l.1-2)
+  search   — DNAS mixture, Eq. 4-6 (search phase)
+  frozen   — argmax assignment (fine-tuning phase)
+
+The NAS state for a layer-site is a dict {"gamma","delta"}; the quantizer
+clips live in the *params* tree ({"aw","ax"}) because they train with W, not
+with theta (PACT clips are weights as far as Alg. 1 is concerned).
+
+Weights are stored ``(c_out, c_in[, ...])`` — axis 0 is the channel axis the
+paper assigns precision to.  Matmuls use einsum '...i,oi->...o' so no
+transposes materialize.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mixedprec as mp
+from repro.core import quantizers as qz
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def linear_init(key, c_in: int, c_out: int, dtype=jnp.float32,
+                bias: bool = False, scale: Optional[float] = None) -> dict:
+    w = jax.random.normal(key, (c_out, c_in), dtype=jnp.float32)
+    w = w * (scale if scale is not None else (1.0 / math.sqrt(c_in)))
+    p = {"w": w.astype(dtype), "aw": qz.init_weight_alpha(w),
+         "ax": qz.init_act_alpha()}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d_init(key, c_in: int, c_out: int, kh: int, kw: int,
+                dtype=jnp.float32, bias: bool = True, groups: int = 1) -> dict:
+    fan_in = c_in // groups * kh * kw
+    w = jax.random.normal(key, (c_out, c_in // groups, kh, kw)) / math.sqrt(fan_in)
+    p = {"w": w.astype(dtype), "aw": qz.init_weight_alpha(w),
+         "ax": qz.init_act_alpha()}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def nas_init(key, c_out: int, qcfg: mp.MixedPrecConfig) -> dict:
+    return mp.init_nas_params(key, c_out, qcfg)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Quantization-aware apply
+# ---------------------------------------------------------------------------
+
+def _quant_pair(x, w, p, nas, tau, mode, qcfg: mp.MixedPrecConfig,
+                signed_act: bool):
+    """Return (x', w') after mode-appropriate fake quantization."""
+    if mode == "float":
+        return x, w
+    aw = p["aw"].reshape((w.shape[0],) + (1,) * (w.ndim - 1))
+    ax = p["ax"]
+    if mode == "qat8":
+        return (qz.quantize_act_any(x, ax, 8, signed_act),
+                qz.quantize_weight(w, aw, 8))
+    if mode == "search":
+        return (mp.effective_act(x, nas["delta"], ax, tau, qcfg, signed_act),
+                mp.effective_weight(w, nas["gamma"], p["aw"], tau, qcfg))
+    if mode == "frozen":
+        return (mp.frozen_act(x, nas["delta"], ax, qcfg, signed_act),
+                mp.frozen_weight(w, nas["gamma"], p["aw"], qcfg))
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def partial_dtype_of(cfg):
+    """preferred_element_type for TP-sharded dots, from ArchConfig."""
+    pd = getattr(cfg, "partial_dtype", "")
+    return jnp.dtype(pd) if pd else None
+
+
+def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict], tau, mode: str,
+            qcfg: mp.MixedPrecConfig, signed_act: bool = True,
+            compute_dtype=None, partial_dtype=None) -> jnp.ndarray:
+    """Quantization-aware linear: x (..., c_in) @ w (c_out, c_in)^T.
+
+    ``partial_dtype`` sets the dot's preferred_element_type: with bf16 the
+    TP partial sums cross the ICI at half width (collective compression —
+    §Perf knob; default keeps the backend's f32 accumulation).
+    """
+    w = p["w"]
+    x, w = _quant_pair(x, w, p, nas, tau, mode, qcfg, signed_act)
+    if compute_dtype is not None:
+        x, w = x.astype(compute_dtype), w.astype(compute_dtype)
+    if partial_dtype is not None:
+        y = jnp.einsum("...i,oi->...o", x, w,
+                       preferred_element_type=partial_dtype)
+    else:
+        y = jnp.einsum("...i,oi->...o", x, w)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def qconv2d(x: jnp.ndarray, p: dict, nas: Optional[dict], tau, mode: str,
+            qcfg: mp.MixedPrecConfig, stride: int = 1, padding: str = "SAME",
+            groups: int = 1, signed_act: bool = False) -> jnp.ndarray:
+    """Quantization-aware NHWC conv with (c_out, c_in/g, kh, kw) weights.
+
+    ``signed_act=False`` matches the paper's post-ReLU unsigned activations.
+    """
+    w = p["w"]
+    x, w = _quant_pair(x, w, p, nas, tau, mode, qcfg, signed_act)
+    # lax wants (kh, kw, c_in/g, c_out) for NHWC/HWIO
+    kernel = jnp.transpose(w, (2, 3, 1, 0))
+    y = jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / positional encodings (float — the paper leaves
+# normalization and elementwise ops unquantized)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, p: dict, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, p: dict, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p.get(
+        "bias", jnp.zeros((), jnp.float32)).astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str):
+    return rmsnorm(x, p) if kind == "rmsnorm" else layernorm(x, p)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray,
+               partial: float = 1.0) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """cos/sin tables for (possibly partial) RoPE.
+
+    ``partial`` < 1 rotates only the first ``int(head_dim*partial)`` dims
+    (chatglm3's 2D-RoPE applies rotation to half the dims; the rest pass
+    through).  Returns (cos, sin, rot_dim).
+    """
+    rot = int(head_dim * partial)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, rot/2)
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rot: int) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); cos/sin: (S, rot/2) or broadcastable."""
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    # cos/sin broadcast over head axis: (S, 1, rot/2)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (S, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (layer-wise int8 — the paper's layer-wise activation
+# scheme applied to the cache; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(kv: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-(layerwise)-tensor quantization of new KV entries.
+
+    Scale is computed per (batch, head) slice over the last two dims to keep
+    the reduction cheap; returns (int8 values, float scale broadcastable)."""
+    amax = jnp.max(jnp.abs(kv), axis=(-2, -1), keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(kv / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

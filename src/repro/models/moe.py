@@ -1,0 +1,215 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Routing avoids the classic (T, E, C) one-hot dispatch tensor — at
+deepseek-v3 scale (T≈1M tokens, E=256) that tensor is unbuildable.  Instead:
+
+  1. top-k gates per token,
+  2. flatten (token, slot) assignments, stable-sort by expert id,
+  3. position-in-expert = rank within the sorted run (arange - segment start),
+  4. scatter tokens into an (E, C, d) buffer, dense per-expert einsum,
+  5. gather back and combine with gate weights.
+
+Memory is O(T·k + E·C·d); the sort is O(T·k log).  Tokens over capacity are
+dropped (standard capacity-factor routing; capacity_factor from config).
+
+The (E, C, d) buffer is sharded over the *model* mesh axis on E (expert
+parallelism) — the scatter/gather lower to all-to-alls under GSPMD.
+
+Expert weights are quantization-aware: the per-channel gamma covers each
+expert's output channels independently (the paper's channel-wise assignment
+extends naturally: an expert's FFN rows are just more channels).
+
+DeepSeek extras supported: shared experts (always-on dense branch) and
+sigmoid routing with top-k over scores; Arctic extras: dense residual MLP in
+parallel with the MoE branch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+
+
+def init_moe(key, cfg, dtype) -> tuple[dict, dict]:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 8)
+    params = {
+        "router": L.linear_init(ks[0], d, E, dtype),   # kept high-precision
+        "we_gate": L.linear_init(ks[1], d, E * ff, dtype),
+        "we_up": L.linear_init(ks[2], d, E * ff, dtype),
+        "we_down": L.linear_init(ks[3], ff, E * d, dtype),
+    }
+    # reshape expert weights to (E, c_out, c_in)
+    params["we_gate"]["w"] = params["we_gate"]["w"].reshape(E, ff, d)
+    params["we_gate"]["aw"] = params["we_gate"]["aw"].reshape(E, ff)
+    params["we_up"]["w"] = params["we_up"]["w"].reshape(E, ff, d)
+    params["we_up"]["aw"] = params["we_up"]["aw"].reshape(E, ff)
+    params["we_down"]["w"] = params["we_down"]["w"].reshape(E, d, ff)
+    params["we_down"]["aw"] = params["we_down"]["aw"].reshape(E, d)
+    nas = {
+        name: L.nas_init(ks[4], E * params[name]["w"].shape[1], cfg.quant)
+        for name in ("we_gate", "we_up", "we_down")
+    }
+    # reshape gammas to (E, c_out, |P|) to ride along the expert axis
+    if cfg.quant.per_channel:
+        for name in nas:
+            g = nas[name]["gamma"]
+            nas[name]["gamma"] = g.reshape(E, params[name]["w"].shape[1], -1)
+    if cfg.n_shared_experts:
+        params["shared"] = {
+            "w_gate": L.linear_init(ks[5], d, ff * cfg.n_shared_experts, dtype),
+            "w_up": L.linear_init(ks[6], d, ff * cfg.n_shared_experts, dtype),
+            "w_down": L.linear_init(ks[7], ff * cfg.n_shared_experts, d, dtype),
+        }
+        nas["shared.w_gate"] = L.nas_init(ks[5], ff * cfg.n_shared_experts, cfg.quant)
+        nas["shared.w_up"] = L.nas_init(ks[6], ff * cfg.n_shared_experts, cfg.quant)
+        nas["shared.w_down"] = L.nas_init(ks[7], d, cfg.quant)
+    if cfg.dense_residual_ff:
+        params["dense_res"] = {
+            "w_gate": L.linear_init(ks[5], d, cfg.dense_residual_ff, dtype),
+            "w_up": L.linear_init(ks[6], d, cfg.dense_residual_ff, dtype),
+            "w_down": L.linear_init(ks[7], cfg.dense_residual_ff, d, dtype),
+        }
+        nas["dense_res.w_gate"] = L.nas_init(ks[5], cfg.dense_residual_ff, cfg.quant)
+        nas["dense_res.w_up"] = L.nas_init(ks[6], cfg.dense_residual_ff, cfg.quant)
+        nas["dense_res.w_down"] = L.nas_init(ks[7], d, cfg.quant)
+    return params, nas
+
+
+def _expert_weights(p, nas, tau, mode, qcfg):
+    """Mode-appropriate fake quantization of stacked (E, c_out, c_in) weights."""
+    from repro.core import mixedprec as mp
+    from repro.core import quantizers as qz
+    w = p["w"]
+    E, co, ci = w.shape
+    if mode == "float":
+        return w
+    aw = p["aw"].reshape(E * co)
+    wf = w.reshape(E * co, ci)
+    if mode == "qat8":
+        out = qz.quantize_weight(wf, aw[:, None], 8)
+    elif mode == "search":
+        g = nas["gamma"].reshape(E * co, -1)
+        out = mp.effective_weight(wf, g, aw, tau, qcfg)
+    elif mode == "frozen":
+        g = nas["gamma"].reshape(E * co, -1)
+        out = mp.frozen_weight(wf, g, aw, qcfg)
+    else:
+        raise ValueError(mode)
+    return out.reshape(E, co, ci)
+
+
+def route_topk(logits: jnp.ndarray, k: int, routing: str = "softmax"
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token top-k gates.  Returns (gates (T,k), experts (T,k))."""
+    if routing == "sigmoid":   # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits.astype(jnp.float32))
+        topv, topi = jax.lax.top_k(scores, k)
+        gates = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+    else:
+        topv, topi = jax.lax.top_k(logits.astype(jnp.float32), k)
+        gates = jax.nn.softmax(topv, axis=-1)
+    return gates, topi
+
+
+def dispatch_indices(experts: jnp.ndarray, n_experts: int, capacity: int
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort-based positions: returns (dest_slot, keep_mask, inv_order).
+
+    ``experts``: flat (T*k,) expert ids.  ``dest_slot[i] = e_i*C + pos_i`` for
+    kept assignments (pos < capacity), else clamped to slot 0 with keep=False.
+    """
+    n = experts.shape[0]
+    order = jnp.argsort(experts, stable=True)
+    sorted_e = experts[order]
+    counts = jnp.bincount(experts, length=n_experts)
+    starts = jnp.cumsum(counts) - counts                     # exclusive
+    pos = jnp.arange(n) - starts[sorted_e]                   # rank in expert
+    keep_sorted = pos < capacity
+    dest_sorted = jnp.where(keep_sorted, sorted_e * capacity + pos, 0)
+    # undo the sort: scatter back to assignment order
+    inv = jnp.argsort(order, stable=True)
+    return dest_sorted[inv], keep_sorted[inv], order
+
+
+def moe_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E, k, ff = cfg.n_experts, cfg.experts_per_token, cfg.moe_d_ff
+    cd = cfg.cdtype
+    T = B * S
+    xt = x.reshape(T, d)
+    getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
+
+    # router in float32 (precision-sensitive; analogous to the paper keeping
+    # first/last layers at 8b)
+    logits = L.qlinear(xt, p["router"], None, tau, "float", cfg.quant,
+                       compute_dtype=jnp.float32)
+    routing = "sigmoid" if cfg.n_shared_experts else "softmax"
+    gates, topi = route_topk(logits, k, routing)             # (T,k)
+
+    capacity = int(cfg.capacity_factor * T * k / E)
+    capacity = max(8, min(capacity, T))
+    flat_e = topi.reshape(T * k)
+    dest, keep, _ = dispatch_indices(flat_e, E, capacity)
+
+    # scatter tokens into (E*C, d) buffer
+    src = jnp.repeat(jnp.arange(T), k)
+    xt = constrain(xt, "D", None)
+    contrib = constrain(jnp.where(keep[:, None], xt[src].astype(cd), 0),
+                        "D", None)
+    buf = jnp.zeros((E * capacity, d), cd).at[dest].add(
+        jnp.where(keep[:, None], contrib, 0))
+    # expert-major buffer lives sharded over the model axis (experts) with
+    # capacity over data — without this constraint SPMD replicates the
+    # (E, C, d) buffer and all-reduces it per layer (§Perf measurement)
+    buf = constrain(buf.reshape(E, capacity, d), "M", "D", None)
+
+    wg = _expert_weights(p["we_gate"], getn("we_gate"), tau, mode, cfg.quant).astype(cd)
+    wu = _expert_weights(p["we_up"], getn("we_up"), tau, mode, cfg.quant).astype(cd)
+    wd = _expert_weights(p["we_down"], getn("we_down"), tau, mode, cfg.quant).astype(cd)
+    h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
+                 jnp.einsum("ecd,efd->ecf", buf, wu))
+    out_buf = constrain(jnp.einsum("ecf,edf->ecd", h, wd),
+                        "M", "D", None).reshape(E * capacity, d)
+
+    # gather back, weight by gates, sum the k slots
+    gathered = constrain(jnp.where(keep[:, None], out_buf[dest], 0),
+                         "D", None)
+    weighted = gathered * gates.reshape(T * k, 1).astype(cd)
+    out = constrain(jnp.zeros((T, d), cd).at[src].add(weighted), "D", None)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = L.swiglu(
+            L.qlinear(xt, sp["w_gate"], getn("shared.w_gate"), tau, mode,
+                      cfg.quant, compute_dtype=cd),
+            L.qlinear(xt, sp["w_up"], getn("shared.w_up"), tau, mode,
+                      cfg.quant, compute_dtype=cd))
+        out = out + L.qlinear(h, sp["w_down"], getn("shared.w_down"), tau,
+                              mode, cfg.quant, compute_dtype=cd)
+    if cfg.dense_residual_ff:
+        dp = p["dense_res"]
+        h = L.swiglu(
+            L.qlinear(xt, dp["w_gate"], getn("dense_res.w_gate"), tau, mode,
+                      cfg.quant, compute_dtype=cd),
+            L.qlinear(xt, dp["w_up"], getn("dense_res.w_up"), tau, mode,
+                      cfg.quant, compute_dtype=cd))
+        out = out + L.qlinear(h, dp["w_down"], getn("dense_res.w_down"), tau,
+                              mode, cfg.quant, compute_dtype=cd)
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, topi: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (fraction × probability)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)
+    onehot = jax.nn.one_hot(topi[:, 0], n_experts)
+    ce = jnp.mean(onehot, axis=0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,665 @@
+"""Deployed-model serving: mixed-precision packed weights + int8 KV caches.
+
+This is the paper's Sec. III-C output running as a production inference
+path.  Each searched linear becomes up to |P_W| per-precision row groups
+(channels reordered offline, group sizes static and 128-aligned — see
+core/deploy.py and config.DeploySpec), stored packed in uint8.  At run time
+each group is a dense sub-GEMM after an in-register dequant — the TPU
+analogue of the paper's "three parallel sub-convolutions", implemented by
+kernels/quant_matmul.py (Pallas) with a pure-jnp fallback used on CPU.
+
+Deployed weights move HBM->VMEM as *packed bytes*: a 2-bit channel costs 1/4
+the bandwidth of an 8-bit one.  Decode is bandwidth-bound, so the searched
+assignment directly scales serving throughput — the paper's memory saving
+becomes a latency/energy saving on TPU (DESIGN.md §2).
+
+Formats
+-------
+DeployedLinear (dict):
+  groups: {bits: {"packed": (rows_b, ceil(c_in*bits/8)) uint8,
+                  "scale": (rows_b,) f32}}
+  bias:   optional (c_out,)
+  inv_perm: optional (c_out,) i32 — restores canonical channel order for
+            structure-sensitive consumers (attention heads, residual stream)
+MoE expert weights carry a leading E axis on every leaf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantizers as qz
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+
+
+# ---------------------------------------------------------------------------
+# Deployed linear: init (static assignment from DeploySpec) and apply
+# ---------------------------------------------------------------------------
+
+def init_deployed_linear(key, c_in: int, c_out: int, cfg,
+                         bias: bool = False, expert_axis: int = 0) -> dict:
+    """Random-weight deployed linear with the config's static group sizes.
+
+    ``expert_axis``: if >0, adds a leading expert dimension E=expert_axis to
+    every leaf (MoE).  Weights are synthesized then truly quantized+packed so
+    dry-run tensors have exactly the deployed bytes.
+    """
+    sizes = cfg.deploy.group_sizes(c_out, sorted(cfg.quant.weight_bits))
+    E = max(expert_axis, 1)
+    groups = {}
+    for b, n in sizes.items():
+        if n == 0:
+            continue
+        f = qz.pack_factor(b)
+        ci_pad = -(-c_in // f) * f
+        kw, ks = jax.random.split(jax.random.fold_in(key, b))
+        w = jax.random.normal(kw, (E, n, ci_pad)) / np.sqrt(c_in)
+        alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+        q, scale = qz.quantize_weight_int(w, alpha, b)
+        packed = qz.pack_int(q, b)                     # (E, n, ci_pad/f)
+        grp = {"packed": packed if expert_axis else packed[0],
+               "scale": (scale[..., 0] if expert_axis else scale[0, :, 0]
+                         ).astype(jnp.float32)}
+        groups[b] = grp
+    out = {"groups": groups}
+    if bias:
+        out["bias"] = jnp.zeros((E, c_out) if expert_axis else (c_out,),
+                                jnp.bfloat16)
+    return out
+
+
+def dq_linear(x: jnp.ndarray, dp: dict, compute_dtype=jnp.bfloat16,
+              backend: str = "jnp") -> jnp.ndarray:
+    """Apply a deployed linear: x (..., c_in) -> (..., c_out).
+
+    Per precision group: unpack sub-byte rows, dequantize with per-channel
+    scales, dense matmul; outputs concatenate along c_out (deployed channel
+    order).  ``backend="pallas"`` routes each sub-GEMM through the fused
+    quant_matmul kernel instead (TPU path).
+    """
+    c_in = x.shape[-1]
+    outs = []
+    for b in sorted(dp["groups"]):
+        grp = dp["groups"][b]
+        if backend == "pallas":
+            from repro.kernels import ops as kops
+            y = kops.quant_matmul(x, grp["packed"], grp["scale"], b, c_in,
+                                  compute_dtype)
+        else:
+            w_int = qz.unpack_int(grp["packed"], b)[..., :c_in]   # (rows, c_in)
+            w = (w_int.astype(jnp.float32)
+                 * grp["scale"][..., None]).astype(compute_dtype)
+            y = jnp.einsum("...i,oi->...o", x.astype(compute_dtype), w)
+        outs.append(y)
+    y = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+    if "inv_perm" in dp:
+        y = jnp.take(y, dp["inv_perm"], axis=-1)
+    if "bias" in dp:
+        y = y + dp["bias"].astype(y.dtype)
+    return y
+
+
+def dq_expert_weights(dp: dict, c_in: int, compute_dtype=jnp.bfloat16
+                      ) -> jnp.ndarray:
+    """Unpack+dequant stacked MoE expert weights -> (E, c_out, c_in)."""
+    outs = []
+    for b in sorted(dp["groups"]):
+        grp = dp["groups"][b]
+        w_int = qz.unpack_int(grp["packed"], b)[..., :c_in]  # (E, rows, c_in)
+        outs.append((w_int.astype(jnp.float32)
+                     * grp["scale"][..., None]).astype(compute_dtype))
+    return jnp.concatenate(outs, axis=-2) if len(outs) > 1 else outs[0]
+
+
+def dense_view(dp: dict, c_in: int, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Full dense (c_out, c_in) view of a deployed linear (for absorption)."""
+    w = dq_expert_weights({"groups": dp["groups"]}, c_in, compute_dtype) \
+        if dp["groups"][sorted(dp["groups"])[0]]["packed"].ndim == 3 else None
+    if w is not None:
+        return w
+    outs = []
+    for b in sorted(dp["groups"]):
+        grp = dp["groups"][b]
+        w_int = qz.unpack_int(grp["packed"], b)[..., :c_in]
+        outs.append((w_int.astype(jnp.float32)
+                     * grp["scale"][..., None]).astype(compute_dtype))
+    w = jnp.concatenate(outs, axis=0)
+    if "inv_perm" in dp:
+        w = jnp.take(w, dp["inv_perm"], axis=0)
+    return w
+
+
+def deployed_from_search(w, gamma, alpha_w, delta, alpha_x, cfg,
+                         restore_order: bool = False) -> dict:
+    """Real Sec. III-C transform of a searched linear into deployed format."""
+    from repro.core import deploy as dpl
+    d = dpl.deploy_linear(np.asarray(w), np.asarray(gamma),
+                          np.asarray(alpha_w),
+                          None if delta is None else np.asarray(delta),
+                          float(alpha_x), cfg.quant, align=cfg.deploy.align)
+    groups = {b: {"packed": jnp.asarray(g["packed"]),
+                  "scale": jnp.asarray(g["scale"])}
+              for b, g in d.groups.items()}
+    out = {"groups": groups}
+    if restore_order:
+        out["inv_perm"] = jnp.asarray(d.inv_perm, jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Deployed whole-model init (static assignment — used by the serve dry-run)
+# ---------------------------------------------------------------------------
+
+def _dl(key, c_in, c_out, cfg, bias=False):
+    return init_deployed_linear(key, c_in, c_out, cfg, bias=bias)
+
+
+def _init_deployed_attn(key, cfg):
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    if cfg.use_mla:
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return {
+            "wq_a": _dl(ks[0], d, qr, cfg),
+            "wq_b": _dl(ks[1], qr, H * (nope + rope), cfg),
+            "wkv_a": _dl(ks[2], d, kvr + rope, cfg),
+            "wkv_b": _dl(ks[3], kvr, H * (nope + vd), cfg),
+            "wo": _dl(ks[4], H * vd, d, cfg),
+            "q_norm": L.norm_init(qr, "rmsnorm", jnp.bfloat16),
+            "kv_norm": L.norm_init(kvr, "rmsnorm", jnp.bfloat16),
+        }
+    return {
+        "wq": _dl(ks[0], d, H * hd, cfg, bias=cfg.qkv_bias),
+        "wk": _dl(ks[1], d, KV * hd, cfg, bias=cfg.qkv_bias),
+        "wv": _dl(ks[2], d, KV * hd, cfg, bias=cfg.qkv_bias),
+        "wo": _dl(ks[3], H * hd, d, cfg),
+    }
+
+
+def _init_deployed_ffn(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.n_experts:
+        E, ff = cfg.n_experts, cfg.moe_d_ff
+        p = {
+            "router": (jax.random.normal(ks[0], (E, d)) / np.sqrt(d)
+                       ).astype(jnp.bfloat16),
+            "we_gate": init_deployed_linear(ks[1], d, ff, cfg, expert_axis=E),
+            "we_up": init_deployed_linear(ks[2], d, ff, cfg, expert_axis=E),
+            "we_down": init_deployed_linear(ks[3], ff, d, cfg, expert_axis=E),
+        }
+        if cfg.n_shared_experts:
+            sff = ff * cfg.n_shared_experts
+            p["shared"] = {"w_gate": _dl(ks[4], d, sff, cfg),
+                           "w_up": _dl(ks[5], d, sff, cfg),
+                           "w_down": _dl(ks[6], sff, d, cfg)}
+        if cfg.dense_residual_ff:
+            rff = cfg.dense_residual_ff
+            p["dense_res"] = {"w_gate": _dl(ks[4], d, rff, cfg),
+                              "w_up": _dl(ks[5], d, rff, cfg),
+                              "w_down": _dl(ks[6], rff, d, cfg)}
+        return p
+    if cfg.mlp_type == "swiglu":
+        return {"w_gate": _dl(ks[0], d, cfg.d_ff, cfg),
+                "w_up": _dl(ks[1], d, cfg.d_ff, cfg),
+                "w_down": _dl(ks[2], cfg.d_ff, d, cfg)}
+    return {"w_in": _dl(ks[0], d, cfg.d_ff, cfg),
+            "w_down": _dl(ks[1], cfg.d_ff, d, cfg)}
+
+
+def _init_deployed_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"attn": _init_deployed_attn(k1, cfg),
+            "ffn": _init_deployed_ffn(k2, cfg),
+            "ln1": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16)}
+
+
+def _init_deployed_mamba(key, cfg):
+    d = cfg.d_model
+    d_inner, H, N, P = ssm_mod.dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": _dl(ks[0], d, 2 * d_inner + 2 * N + H, cfg),
+        "out_proj": _dl(ks[1], d_inner, d, cfg),
+        "conv_w": (jax.random.normal(ks[2], (ssm_mod.CONV_K, d_inner + 2 * N))
+                   / 2.0).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((d_inner + 2 * N,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.norm_init(d_inner, "rmsnorm", jnp.bfloat16),
+        "ln": L.norm_init(d, cfg.norm, jnp.bfloat16),
+    }
+
+
+def init_deployed_model(cfg, key) -> dict:
+    ks = jax.random.split(key, 5)
+    params = {"embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+                        * 0.02).astype(jnp.bfloat16)}
+    stack = lambda fn, k, n: jax.vmap(fn)(jax.random.split(k, n))
+    if cfg.family in ("dense", "vlm", "moe"):
+        params["blocks"] = stack(lambda k: _init_deployed_block(k, cfg),
+                                 ks[1], cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["blocks"] = stack(lambda k: _init_deployed_mamba(k, cfg),
+                                 ks[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["blocks"] = stack(lambda k: _init_deployed_mamba(k, cfg),
+                                 ks[1], cfg.n_layers)
+        params["shared_attn"] = _init_deployed_block(ks[2], cfg)
+    elif cfg.family == "audio":
+        params["enc_blocks"] = stack(
+            lambda k: {"attn": _init_deployed_attn(k, cfg),
+                       "mlp": _init_deployed_ffn(k, cfg),
+                       "ln1": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16),
+                       "ln2": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16)},
+            ks[1], cfg.n_encoder_layers)
+        params["dec_blocks"] = stack(
+            lambda k: {"attn": _init_deployed_attn(k, cfg),
+                       "xattn": _init_deployed_attn(k, cfg),
+                       "mlp": _init_deployed_ffn(k, cfg),
+                       "ln1": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16),
+                       "ln2": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16),
+                       "ln3": L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16)},
+            ks[2], cfg.n_layers)
+        params["enc_ln_f"] = L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16)
+    params["ln_f"] = L.norm_init(cfg.d_model, cfg.norm, jnp.bfloat16)
+    params["lm_head"] = _dl(ks[3], cfg.d_model, cfg.vocab_size, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Serving forward passes
+# ---------------------------------------------------------------------------
+
+def _dq(cd, backend="jnp"):
+    return lambda x, dp: dq_linear(x, dp, cd, backend)
+
+
+def _deployed_attn_full(p, cfg, x, positions, causal=True, enc=None,
+                        backend="jnp", build_cache=False):
+    """Full-seq attention on deployed weights; optionally emit an int8 cache."""
+    B, S, _ = x.shape
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if enc is None else enc
+    q = dq(x, p["wq"]).reshape(B, S, H, hd)
+    k = dq(src, p["wk"]).reshape(B, src.shape[1], KV, hd)
+    v = dq(src, p["wv"]).reshape(B, src.shape[1], KV, hd)
+    if enc is None and cfg.rope_partial > 0:
+        cos, sin, rot = L.rope_freqs(hd, cfg.rope_theta, positions,
+                                     cfg.rope_partial)
+        q = L.apply_rope(q, cos, sin, rot)
+        k = L.apply_rope(k, cos, sin, rot)
+    o = attn.gqa_core(q, k, v, H, KV, causal=causal and enc is None)
+    y = dq(o.reshape(B, S, H * hd), p["wo"])
+    cache = None
+    if build_cache:
+        kq, ksc = attn._quant_per_token(k.transpose(0, 2, 1, 3))
+        vq, vsc = attn._quant_per_token(v.transpose(0, 2, 1, 3))
+        cache = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+    return y, cache
+
+
+def _deployed_mla_full(p, cfg, x, positions, backend="jnp",
+                       build_cache=False):
+    B, S, _ = x.shape
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    cq = L.rmsnorm(dq(x, p["wq_a"]), p["q_norm"])
+    q = dq(cq, p["wq_b"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv = dq(x, p["wkv_a"])
+    c_kv, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    c_kv = L.rmsnorm(c_kv, p["kv_norm"])
+    kv = dq(c_kv, p["wkv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    cos, sin, rot = L.rope_freqs(rope, cfg.rope_theta, positions, 1.0)
+    q_rope = L.apply_rope(q_rope, cos, sin, rot)
+    k_rope_r = L.apply_rope(k_rope[:, :, None, :], cos, sin, rot)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_r, (B, S, H, rope))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attn.gqa_core(q_full, k_full, v, H, H, causal=True)
+    y = dq(o.reshape(B, S, H * vd), p["wo"])
+    cache = None
+    if build_cache:
+        qc, qs = attn._quant_per_token(c_kv)
+        cache = {"ckv": qc, "ckv_scale": qs,
+                 "krope": k_rope_r[:, :, 0].astype(jnp.bfloat16)}
+    return y, cache
+
+
+def _deployed_ffn_full(p, cfg, x, backend="jnp"):
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    if cfg.n_experts:
+        return _deployed_moe(p, cfg, x, backend)
+    if cfg.mlp_type == "swiglu":
+        h = L.swiglu(dq(x, p["w_gate"]), dq(x, p["w_up"]))
+    else:
+        h = jax.nn.gelu(dq(x, p["w_in"]))
+    return dq(h, p["w_down"])
+
+
+def _deployed_moe(p, cfg, x, backend="jnp"):
+    B, S, d = x.shape
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    E, k, ff = cfg.n_experts, cfg.experts_per_token, cfg.moe_d_ff
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32).T)
+    routing = "sigmoid" if cfg.n_shared_experts else "softmax"
+    gates, topi = moe_mod.route_topk(logits, k, routing)
+    capacity = max(8, min(int(cfg.capacity_factor * T * k / E), T))
+    dest, keep, _ = moe_mod.dispatch_indices(topi.reshape(-1), E, capacity)
+    src = jnp.repeat(jnp.arange(T), k)
+    buf = jnp.zeros((E * capacity, d), cd).at[dest].add(
+        jnp.where(keep[:, None], xt[src].astype(cd), 0)).reshape(E, capacity, d)
+    wg = dq_expert_weights(p["we_gate"], d, cd)
+    wu = dq_expert_weights(p["we_up"], d, cd)
+    wd = dq_expert_weights(p["we_down"], ff, cd)
+    h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
+                 jnp.einsum("ecd,efd->ecf", buf, wu))
+    out_buf = jnp.einsum("ecf,edf->ecd", h, wd).reshape(E * capacity, d)
+    gathered = jnp.where(keep[:, None], out_buf[dest], 0)
+    out = jnp.zeros((T, d), cd).at[src].add(
+        gathered * gates.reshape(-1, 1).astype(cd))
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = L.swiglu(dq(xt, sp["w_gate"]), dq(xt, sp["w_up"]))
+        out = out + dq(h, sp["w_down"])
+    if cfg.dense_residual_ff:
+        dp_ = p["dense_res"]
+        h = L.swiglu(dq(xt, dp_["w_gate"]), dq(xt, dp_["w_up"]))
+        out = out + dq(h, dp_["w_down"])
+    return out.reshape(B, S, d)
+
+
+def _deployed_mamba_full(p, cfg, x, backend="jnp"):
+    """Deployed mamba block; returns (y, final ssm state)."""
+    B, S, d = x.shape
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    d_inner, H, N, P = ssm_mod.dims(cfg)
+    h_in = L.apply_norm(x, p["ln"], cfg.norm)
+    zxbcdt = dq(h_in, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xbc = ssm_mod._causal_conv(zxbcdt[..., d_inner:2 * d_inner + 2 * N],
+                               p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xs = xbc[..., :d_inner].reshape(B, S, H, P)
+    Bm = xbc[..., d_inner:d_inner + N]
+    Cm = xbc[..., d_inner + N:]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+    y, hT = ssm_mod.ssd_chunked(xs.astype(jnp.float32), dt, A,
+                                Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(cd)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    conv_tail = zxbcdt[..., d_inner:2 * d_inner + 2 * N][:, -(ssm_mod.CONV_K - 1):]
+    return x + dq(y, p["out_proj"]).astype(x.dtype), {
+        "h": hT, "conv": conv_tail.astype(jnp.bfloat16)}
+
+
+def prefill(dparams, cfg, batch, backend: str = "jnp"):
+    """Full-sequence deployed forward.  Returns (last-token logits, caches)."""
+    cd = cfg.cdtype
+    if cfg.family == "audio":
+        return _prefill_encdec(dparams, cfg, batch, backend)
+    x = dparams["embed"][batch["tokens"]].astype(cd)
+    if cfg.n_prefix_tokens and "prefix_embeds" in batch:
+        n = cfg.n_prefix_tokens
+        x = jnp.concatenate([batch["prefix_embeds"].astype(cd), x[:, n:]], 1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+
+    caches = None
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, p):
+            hn = L.apply_norm(h, p["ln1"], cfg.norm)
+            if cfg.use_mla:
+                a, c = _deployed_mla_full(p["attn"], cfg, hn, positions,
+                                          backend, build_cache=True)
+            else:
+                a, c = _deployed_attn_full(p["attn"], cfg, hn, positions,
+                                           backend=backend, build_cache=True)
+            h = h + a.astype(h.dtype)
+            f = _deployed_ffn_full(p["ffn"], cfg,
+                                   L.apply_norm(h, p["ln2"], cfg.norm), backend)
+            return h + f.astype(h.dtype), c
+        x, caches = jax.lax.scan(body, x, dparams["blocks"])
+    elif cfg.family == "ssm":
+        def body(h, p):
+            h2, st = _deployed_mamba_full(p, cfg, h, backend)
+            return h2, st
+        x, caches = jax.lax.scan(body, x, dparams["blocks"])
+    elif cfg.family == "hybrid":
+        caches = {"ssm": [], "attn": []}
+        Ltot, kk = cfg.n_layers, cfg.attn_every
+        start = 0
+        while start < Ltot:
+            hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
+            a, c = _deployed_attn_full(dparams["shared_attn"]["attn"], cfg, hn,
+                                       positions, backend=backend,
+                                       build_cache=True)
+            x = x + a.astype(x.dtype)
+            f = _deployed_ffn_full(
+                dparams["shared_attn"]["ffn"], cfg,
+                L.apply_norm(x, dparams["shared_attn"]["ln2"], cfg.norm),
+                backend)
+            x = x + f.astype(x.dtype)
+            caches["attn"].append(c)
+            stop = min(start + kk, Ltot)
+            pg = jax.tree_util.tree_map(lambda t: t[start:stop],
+                                        dparams["blocks"])
+            def body(h, p):
+                h2, st = _deployed_mamba_full(p, cfg, h, backend)
+                return h2, st
+            x, st = jax.lax.scan(body, x, pg)
+            caches["ssm"].append(st)
+            start = stop
+        caches["attn"] = jax.tree_util.tree_map(
+            lambda *t: jnp.stack(t), *caches["attn"])
+        caches["ssm"] = jax.tree_util.tree_map(
+            lambda *t: jnp.concatenate(t), *caches["ssm"])
+
+    x = L.apply_norm(x, dparams["ln_f"], cfg.norm)
+    logits = dq_linear(x[:, -1:], dparams["lm_head"], cd, backend)
+    return logits.astype(jnp.float32), caches
+
+
+def _prefill_encdec(dparams, cfg, batch, backend):
+    cd = cfg.cdtype
+    enc = batch["frames"].astype(cd)
+    Se = enc.shape[1]
+    enc = enc + L.sinusoidal_positions(Se, cfg.d_model).astype(cd)
+    pos_e = jnp.arange(Se)
+
+    def ebody(h, p):
+        a, _ = _deployed_attn_full(p["attn"], cfg,
+                                   L.apply_norm(h, p["ln1"], cfg.norm), pos_e,
+                                   causal=False, backend=backend)
+        h = h + a.astype(h.dtype)
+        f = _deployed_ffn_full(p["mlp"], cfg,
+                               L.apply_norm(h, p["ln2"], cfg.norm), backend)
+        return h + f.astype(h.dtype), None
+    enc, _ = jax.lax.scan(ebody, enc, dparams["enc_blocks"])
+    enc = L.apply_norm(enc, dparams["enc_ln_f"], cfg.norm)
+
+    x = dparams["embed"][batch["tokens"]].astype(cd)
+    B, S, _ = x.shape
+    x = x + L.sinusoidal_positions(S, cfg.d_model).astype(cd)
+    pos = jnp.arange(S)
+
+    def dbody(h, p):
+        a, c = _deployed_attn_full(p["attn"], cfg,
+                                   L.apply_norm(h, p["ln1"], cfg.norm), pos,
+                                   backend=backend, build_cache=True)
+        h = h + a.astype(h.dtype)
+        xa, cc = _deployed_attn_full(p["xattn"], cfg,
+                                     L.apply_norm(h, p["ln2"], cfg.norm), pos,
+                                     enc=enc, backend=backend,
+                                     build_cache=True)
+        h = h + xa.astype(h.dtype)
+        f = _deployed_ffn_full(p["mlp"], cfg,
+                               L.apply_norm(h, p["ln3"], cfg.norm), backend)
+        return h + f.astype(h.dtype), {"self": c, "cross": cc}
+    x, caches = jax.lax.scan(dbody, x, dparams["dec_blocks"])
+    x = L.apply_norm(x, dparams["ln_f"], cfg.norm)
+    logits = dq_linear(x[:, -1:], dparams["lm_head"], cd, backend)
+    return logits.astype(jnp.float32), caches
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token, full KV cache) — the decode_* dry-run workload
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_len: int):
+    """Empty caches for decode-only dry-runs (shape stand-ins)."""
+    if cfg.family in ("dense", "vlm", "moe"):
+        one = (attn.init_mla_cache(cfg, batch, max_len) if cfg.use_mla
+               else attn.init_gqa_cache(cfg, batch, max_len))
+        return jax.tree_util.tree_map(
+            lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one)
+    if cfg.family == "ssm":
+        one = ssm_mod.init_ssm_cache(cfg, batch)
+        return jax.tree_util.tree_map(
+            lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one)
+    if cfg.family == "hybrid":
+        ssm_one = ssm_mod.init_ssm_cache(cfg, batch)
+        attn_one = attn.init_gqa_cache(cfg, batch, max_len)
+        n_groups = -(-cfg.n_layers // cfg.attn_every)
+        return {
+            "ssm": jax.tree_util.tree_map(
+                lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), ssm_one),
+            "attn": jax.tree_util.tree_map(
+                lambda t: jnp.zeros((n_groups,) + t.shape, t.dtype), attn_one),
+        }
+    if cfg.family == "audio":
+        self_c = attn.init_gqa_cache(cfg, batch, max_len)
+        cross_c = attn.init_gqa_cache(cfg, batch, cfg.encoder_seq)
+        # cross cache is "pre-filled" by the encoder pass at prefill time
+        return jax.tree_util.tree_map(
+            lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype),
+            {"self": self_c, "cross": cross_c})
+    raise ValueError(cfg.family)
+
+
+def _cross_decode(p, cfg, x, cache, backend):
+    """Cross-attention decode: query new token against the cached encoder KV."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    q = dq(x, p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    kf = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(cd)
+    vf = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(cd)
+    rep = H // KV
+    kf = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf
+    vf = jnp.repeat(vf, rep, axis=1) if rep > 1 else vf
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kf).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    w = jax.nn.softmax(s, axis=-1).astype(cd)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vf).transpose(0, 2, 1, 3)
+    return dq(o.reshape(B, 1, H * hd), p["wo"])
+
+
+def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), caches')."""
+    cd = cfg.cdtype
+    dq = _dq(cd, backend)
+    x = dparams["embed"][tokens].astype(cd)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, pc):
+            p, c = pc
+            hn = L.apply_norm(h, p["ln1"], cfg.norm)
+            if cfg.use_mla:
+                a, c2 = attn.mla_decode(
+                    p["attn"], cfg, hn, c, pos, dq,
+                    lambda name: dense_view(p["attn"][name],
+                                            cfg.kv_lora_rank, cd))
+            else:
+                a, c2 = attn.gqa_decode(p["attn"], None, cfg, hn, c, pos, dq)
+            h = h + a.astype(h.dtype)
+            f = _deployed_ffn_full(p["ffn"], cfg,
+                                   L.apply_norm(h, p["ln2"], cfg.norm), backend)
+            return h + f.astype(h.dtype), c2
+        x, caches = jax.lax.scan(body, x, (dparams["blocks"], caches))
+    elif cfg.family == "ssm":
+        def body(h, pc):
+            p, c = pc
+            hn = L.apply_norm(h, p["ln"], cfg.norm)
+            y, c2 = ssm_mod.mamba2_decode(p, cfg, hn, c, dq)
+            return h + y.astype(h.dtype), c2
+        x, caches = jax.lax.scan(body, x, (dparams["blocks"], caches))
+    elif cfg.family == "hybrid":
+        Ltot, kk = cfg.n_layers, cfg.attn_every
+        new_attn, new_ssm = [], []
+        start, g = 0, 0
+        while start < Ltot:
+            c_att = jax.tree_util.tree_map(lambda t: t[g], caches["attn"])
+            hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
+            a, c2 = attn.gqa_decode(dparams["shared_attn"]["attn"], None, cfg,
+                                    hn, c_att, pos, dq)
+            x = x + a.astype(x.dtype)
+            f = _deployed_ffn_full(
+                dparams["shared_attn"]["ffn"], cfg,
+                L.apply_norm(x, dparams["shared_attn"]["ln2"], cfg.norm),
+                backend)
+            x = x + f.astype(x.dtype)
+            new_attn.append(c2)
+            stop = min(start + kk, Ltot)
+            pg = jax.tree_util.tree_map(lambda t: t[start:stop],
+                                        dparams["blocks"])
+            cg = jax.tree_util.tree_map(lambda t: t[start:stop], caches["ssm"])
+            def body(h, pc):
+                p, c = pc
+                hn2 = L.apply_norm(h, p["ln"], cfg.norm)
+                y, cn = ssm_mod.mamba2_decode(p, cfg, hn2, c, dq)
+                return h + y.astype(h.dtype), cn
+            x, cs = jax.lax.scan(body, x, (pg, cg))
+            new_ssm.append(cs)
+            start, g = stop, g + 1
+        caches = {
+            "attn": jax.tree_util.tree_map(lambda *t: jnp.stack(t), *new_attn),
+            "ssm": jax.tree_util.tree_map(lambda *t: jnp.concatenate(t),
+                                          *new_ssm),
+        }
+    elif cfg.family == "audio":
+        def body(h, pc):
+            p, c = pc
+            hn = L.apply_norm(h, p["ln1"], cfg.norm)
+            a, c2 = attn.gqa_decode(p["attn"], None, cfg, hn, c["self"], pos,
+                                    dq)
+            h = h + a.astype(h.dtype)
+            xa = _cross_decode(p["xattn"], cfg,
+                               L.apply_norm(h, p["ln2"], cfg.norm), c["cross"],
+                               backend)
+            h = h + xa.astype(h.dtype)
+            f = _deployed_ffn_full(p["mlp"], cfg,
+                                   L.apply_norm(h, p["ln3"], cfg.norm), backend)
+            return h + f.astype(h.dtype), {"self": c2, "cross": c["cross"]}
+        x, caches = jax.lax.scan(body, x, (dparams["dec_blocks"], caches))
+
+    x = L.apply_norm(x, dparams["ln_f"], cfg.norm)
+    logits = dq_linear(x, dparams["lm_head"], cd, backend)
+    return logits.astype(jnp.float32), caches

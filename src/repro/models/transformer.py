@@ -1,0 +1,482 @@
+"""Generic LM-family model builder: dense / MoE / MLA / SSM / hybrid / enc-dec.
+
+One config-driven implementation covers all ten assigned architectures.
+Uniform layer stacks are **scanned** (params stacked on a leading L axis) so
+the lowered HLO stays small enough to compile 61-layer/671B configs on the
+CPU dry-run host; non-uniform stacks (zamba2's shared attention block) use a
+python loop over groups with static slices.
+
+Interface (all pure functions):
+
+  init_model(cfg, key)          -> (params, nas)
+  forward(params, nas, tau, cfg, batch, mode) -> logits  (full sequence)
+  lm_loss(logits, batch)        -> scalar CE
+  cost_specs(cfg, tokens)       -> {site: LayerCostSpec}  for Eq. 7/8
+
+``mode`` is one of float|qat8|search|frozen (models/layers.py).  ``batch`` is
+a dict with "tokens"/"labels" (+ "prefix_embeds" for vlm, "frames" for
+audio).  The deployed / serving path lives in models/serving.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regularizers import LayerCostSpec
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# Per-layer blocks (single layer, unstacked params)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_in: int, d_ff: int, dtype) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        p = {"w_gate": L.linear_init(ks[0], d_in, d_ff, dtype),
+             "w_up": L.linear_init(ks[1], d_in, d_ff, dtype),
+             "w_down": L.linear_init(ks[2], d_ff, d_in, dtype)}
+    else:
+        p = {"w_in": L.linear_init(ks[0], d_in, d_ff, dtype),
+             "w_down": L.linear_init(ks[1], d_ff, d_in, dtype)}
+    n = {k: L.nas_init(ks[0], v["w"].shape[0], cfg.quant) for k, v in p.items()}
+    return p, n
+
+
+def mlp_forward(p, nas, tau, mode, cfg, x):
+    cd = cfg.cdtype
+    getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
+    if cfg.mlp_type == "swiglu":
+        h = L.swiglu(
+            L.qlinear(x, p["w_gate"], getn("w_gate"), tau, mode, cfg.quant,
+                      compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)),
+            L.qlinear(x, p["w_up"], getn("w_up"), tau, mode, cfg.quant,
+                      compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)))
+    else:
+        h = jax.nn.gelu(L.qlinear(x, p["w_in"], getn("w_in"), tau, mode,
+                                  cfg.quant, compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg)))
+    return L.qlinear(h, p["w_down"], getn("w_down"), tau, mode, cfg.quant,
+                     compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+
+
+def init_block(key, cfg, dtype) -> tuple[dict, dict]:
+    """One decoder block for dense/vlm/moe families."""
+    ks = jax.random.split(key, 2)
+    p, n = {}, {}
+    if cfg.use_mla:
+        p["attn"], n_attn = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"], n_attn = attn.init_gqa(ks[0], cfg, dtype)
+    n.update({f"attn.{k}": v for k, v in n_attn.items()})
+    if cfg.n_experts:
+        p["ffn"], n_ffn = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"], n_ffn = init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff, dtype)
+    n.update({f"ffn.{k}": v for k, v in n_ffn.items()})
+    p["ln1"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    p["ln2"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    return p, n
+
+
+def block_forward(p, nas, tau, mode, cfg, x, positions):
+    sub = (lambda pre: {k[len(pre):]: v for k, v in nas.items()
+                        if k.startswith(pre)}) if nas is not None else (lambda pre: None)
+    h = L.apply_norm(x, p["ln1"], cfg.norm)
+    if cfg.use_mla:
+        a = attn.mla_forward(p["attn"], sub("attn."), tau, mode, cfg, h,
+                             positions)
+    else:
+        a = attn.gqa_forward(p["attn"], sub("attn."), tau, mode, cfg, h,
+                             positions)
+    x = x + a.astype(x.dtype)
+    h = L.apply_norm(x, p["ln2"], cfg.norm)
+    if cfg.n_experts:
+        f = moe_mod.moe_forward(p["ffn"], sub("ffn."), tau, mode, cfg, h)
+    else:
+        f = mlp_forward(p["ffn"], sub("ffn."), tau, mode, cfg, h)
+    return x + f.astype(x.dtype)
+
+
+def init_mamba_block(key, cfg, dtype) -> tuple[dict, dict]:
+    p, n_in = ssm_mod.init_mamba2(key, cfg, dtype)
+    p["ln"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    return p, n_in
+
+
+def mamba_block_forward(p, nas, tau, mode, cfg, x):
+    h = L.apply_norm(x, p["ln"], cfg.norm)
+    return x + ssm_mod.mamba2_forward(p, nas, tau, mode, cfg, h).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(init_fn, key, n: int):
+    """vmap an init over n fresh keys -> params stacked on a leading axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_model(cfg, key) -> tuple[dict, dict]:
+    dtype = cfg.pdtype
+    k_emb, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: dict = {"embed": L.embedding_init(k_emb, cfg.padded_vocab,
+                                              cfg.d_model, dtype)}
+    nas: dict = {}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        p, n = _stacked_init(lambda k: init_block(k, cfg, dtype), k_blocks,
+                             cfg.n_layers)
+        params["blocks"], nas["blocks"] = p, n
+    elif cfg.family == "ssm":
+        p, n = _stacked_init(lambda k: init_mamba_block(k, cfg, dtype),
+                             k_blocks, cfg.n_layers)
+        params["blocks"], nas["blocks"] = p, n
+    elif cfg.family == "hybrid":
+        p, n = _stacked_init(lambda k: init_mamba_block(k, cfg, dtype),
+                             k_blocks, cfg.n_layers)
+        params["blocks"], nas["blocks"] = p, n
+        params["shared_attn"], n_sa = init_block(k_extra, cfg, dtype)
+        nas["shared_attn"] = n_sa
+    elif cfg.family == "audio":  # whisper enc-dec
+        pe, ne = _stacked_init(lambda k: _init_enc_block(k, cfg, dtype),
+                               k_blocks, cfg.n_encoder_layers)
+        pd, nd = _stacked_init(lambda k: _init_dec_block(k, cfg, dtype),
+                               k_extra, cfg.n_layers)
+        params["enc_blocks"], nas["enc_blocks"] = pe, ne
+        params["dec_blocks"], nas["dec_blocks"] = pd, nd
+        params["enc_ln_f"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    params["ln_f"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    params["lm_head"] = L.linear_init(k_head, cfg.d_model, cfg.padded_vocab,
+                                      dtype)
+    nas["lm_head"] = L.nas_init(k_head, cfg.padded_vocab, cfg.quant)
+
+    if cfg.mtp:  # deepseek multi-token-prediction: one extra block + head
+        p_mtp, n_mtp = init_block(jax.random.fold_in(k_extra, 1), cfg, dtype)
+        params["mtp_block"], nas["mtp_block"] = p_mtp, n_mtp
+        params["mtp_ln"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    return params, nas
+
+
+def _init_enc_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    p, n = {}, {}
+    p["attn"], n_a = attn.init_gqa(ks[0], cfg, dtype)
+    n.update({f"attn.{k}": v for k, v in n_a.items()})
+    p["mlp"], n_m = init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff, dtype)
+    n.update({f"mlp.{k}": v for k, v in n_m.items()})
+    p["ln1"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    p["ln2"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    return p, n
+
+
+def _init_dec_block(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    p, n = {}, {}
+    p["attn"], n_a = attn.init_gqa(ks[0], cfg, dtype)
+    n.update({f"attn.{k}": v for k, v in n_a.items()})
+    p["xattn"], n_x = attn.init_gqa(ks[1], cfg, dtype)
+    n.update({f"xattn.{k}": v for k, v in n_x.items()})
+    p["mlp"], n_m = init_mlp(ks[2], cfg, cfg.d_model, cfg.d_ff, dtype)
+    n.update({f"mlp.{k}": v for k, v in n_m.items()})
+    for i in (1, 2, 3):
+        p[f"ln{i}"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    return p, n
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+    if cfg.n_prefix_tokens and "prefix_embeds" in batch:
+        n = cfg.n_prefix_tokens
+        x = jnp.concatenate(
+            [batch["prefix_embeds"].astype(cfg.cdtype), x[:, n:]], axis=1)
+    return x
+
+
+def _scan_blocks(block_fn, params_blocks, nas_blocks, x, remat: bool = True):
+    """lax.scan over a stacked layer pytree; nas may be None."""
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    if nas_blocks is None:
+        def body(h, p):
+            return fn(h, p, None), None
+        x, _ = jax.lax.scan(body, x, params_blocks)
+    else:
+        def body(h, pn):
+            p, n = pn
+            return fn(h, p, n), None
+        x, _ = jax.lax.scan(body, x, (params_blocks, nas_blocks))
+    return x
+
+
+def forward(params, nas, tau, cfg, batch, mode: str,
+            remat: bool = True) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, vocab)."""
+    tau = jnp.asarray(tau, jnp.float32)
+    if cfg.family == "audio":
+        return _forward_encdec(params, nas, tau, cfg, batch, mode, remat)
+
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def bf(h, p, n):
+            return block_forward(p, n, tau, mode, cfg, h, positions)
+        x = _scan_blocks(bf, params["blocks"], None if nas is None
+                         else nas["blocks"], x, remat)
+    elif cfg.family == "ssm":
+        def bf(h, p, n):
+            return mamba_block_forward(p, n, tau, mode, cfg, h)
+        x = _scan_blocks(bf, params["blocks"], None if nas is None
+                         else nas["blocks"], x, remat)
+    elif cfg.family == "hybrid":
+        x = _forward_hybrid(params, nas, tau, cfg, x, positions, mode, remat)
+
+    x = L.apply_norm(x, params["ln_f"], cfg.norm)
+    head_nas = nas["lm_head"] if nas is not None else None
+    logits = L.qlinear(x, params["lm_head"], head_nas, tau, mode, cfg.quant,
+                       compute_dtype=cfg.cdtype)
+    return _mask_pad(logits.astype(jnp.float32), cfg)
+
+
+def _mask_pad(logits: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Mask Megatron-style vocab-padding logits to -inf (never predicted)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    keep = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(keep, logits, -1e9)
+
+
+def _forward_hybrid(params, nas, tau, cfg, x, positions, mode, remat):
+    """zamba2: mamba backbone + shared attention block every ``attn_every``."""
+    Ltot, k = cfg.n_layers, cfg.attn_every
+    p_sa = params["shared_attn"]
+    n_sa = nas["shared_attn"] if nas is not None else None
+
+    def bf(h, p, n):
+        return mamba_block_forward(p, n, tau, mode, cfg, h)
+
+    start = 0
+    while start < Ltot:
+        # shared attention block at every group boundary (layers 0, k, 2k, ..)
+        x = block_forward(p_sa, n_sa, tau, mode, cfg, x, positions)
+        stop = min(start + k, Ltot)
+        pg = jax.tree_util.tree_map(lambda t: t[start:stop], params["blocks"])
+        ng = (jax.tree_util.tree_map(lambda t: t[start:stop], nas["blocks"])
+              if nas is not None else None)
+        x = _scan_blocks(bf, pg, ng, x, remat)
+        start = stop
+    return x
+
+
+def _forward_encdec(params, nas, tau, cfg, batch, mode, remat):
+    """whisper: stub frame embeddings -> encoder; tokens -> decoder."""
+    cd = cfg.cdtype
+    enc = batch["frames"].astype(cd)                 # (B, Se, d) stub frontend
+    Se = enc.shape[1]
+    enc = enc + L.sinusoidal_positions(Se, cfg.d_model).astype(cd)
+    positions_e = jnp.arange(Se)
+
+    def ebf(h, p, n):
+        sub = (lambda pre: {kk[len(pre):]: v for kk, v in n.items()
+                            if kk.startswith(pre)}) if n is not None else (lambda pre: None)
+        a = attn.gqa_forward(p["attn"], sub("attn."), tau, mode, cfg,
+                             L.apply_norm(h, p["ln1"], cfg.norm), positions_e,
+                             causal=False)
+        h = h + a.astype(h.dtype)
+        f = mlp_forward(p["mlp"], sub("mlp."), tau, mode, cfg,
+                        L.apply_norm(h, p["ln2"], cfg.norm))
+        return h + f.astype(h.dtype)
+
+    enc = _scan_blocks(ebf, params["enc_blocks"],
+                       None if nas is None else nas["enc_blocks"], enc, remat)
+    enc = L.apply_norm(enc, params["enc_ln_f"], cfg.norm)
+
+    x = params["embed"][batch["tokens"]].astype(cd)
+    B, S, _ = x.shape
+    x = x + L.sinusoidal_positions(S, cfg.d_model).astype(cd)
+    positions = jnp.arange(S)
+
+    def dbf(h, p, n):
+        sub = (lambda pre: {kk[len(pre):]: v for kk, v in n.items()
+                            if kk.startswith(pre)}) if n is not None else (lambda pre: None)
+        a = attn.gqa_forward(p["attn"], sub("attn."), tau, mode, cfg,
+                             L.apply_norm(h, p["ln1"], cfg.norm), positions,
+                             causal=True)
+        h = h + a.astype(h.dtype)
+        xa = attn.cross_forward(p["xattn"], sub("xattn."), tau, mode, cfg,
+                                L.apply_norm(h, p["ln2"], cfg.norm), enc)
+        h = h + xa.astype(h.dtype)
+        f = mlp_forward(p["mlp"], sub("mlp."), tau, mode, cfg,
+                        L.apply_norm(h, p["ln3"], cfg.norm))
+        return h + f.astype(h.dtype)
+
+    x = _scan_blocks(dbf, params["dec_blocks"],
+                     None if nas is None else nas["dec_blocks"], x, remat)
+    x = L.apply_norm(x, params["ln_f"], cfg.norm)
+    head_nas = nas["lm_head"] if nas is not None else None
+    logits = L.qlinear(x, params["lm_head"], head_nas, tau, mode, cfg.quant,
+                       compute_dtype=cd,
+                  partial_dtype=L.partial_dtype_of(cfg))
+    return _mask_pad(logits.astype(jnp.float32), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jnp.ndarray, batch: dict) -> jnp.ndarray:
+    """Next-token cross-entropy (labels already shifted by the pipeline)."""
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def forward_with_mtp(params, nas, tau, cfg, batch, mode, remat=True):
+    """DeepSeek MTP: main CE + 0.3 x next-next-token CE via one extra block."""
+    logits = forward(params, nas, tau, cfg, batch, mode, remat)
+    if not cfg.mtp:
+        return logits, None
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    n_mtp = nas["mtp_block"] if nas is not None else None
+    h = block_forward(params["mtp_block"], n_mtp, tau, mode, cfg,
+                      L.apply_norm(x, params["mtp_ln"], cfg.norm), positions)
+    head_nas = nas["lm_head"] if nas is not None else None
+    mtp_logits = L.qlinear(L.apply_norm(h, params["ln_f"], cfg.norm),
+                           params["lm_head"], head_nas, tau, mode, cfg.quant,
+                           compute_dtype=cfg.cdtype)
+    return logits, mtp_logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# NAS-tree flattening: nested {"blocks": {"attn.wq": {...}}} -> dotted paths
+# matching cost_specs keys.  A leaf is any dict holding a "gamma" array.
+# ---------------------------------------------------------------------------
+
+def flatten_nas(nas: dict, prefix: str = "") -> dict:
+    flat = {}
+    for k, v in nas.items():
+        path = f"{prefix}{k}" if not prefix else f"{prefix}.{k}"
+        if isinstance(v, dict) and "gamma" in v:
+            flat[path] = v
+        elif isinstance(v, dict):
+            flat.update(flatten_nas(v, path))
+        else:
+            raise TypeError(f"unexpected NAS leaf at {path}: {type(v)}")
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Cost specs (Eq. 7/8) for every searchable site of a model
+# ---------------------------------------------------------------------------
+
+def _site_specs_for_linear(name: str, c_out: int, c_in: int, tokens: int,
+                           n_layers: int = 1) -> LayerCostSpec:
+    return LayerCostSpec(name=name, c_out=n_layers * c_out,
+                         weights_per_channel=c_in,
+                         ops=n_layers * c_out * c_in * tokens)
+
+
+def cost_specs(cfg, tokens: int) -> dict:
+    """LayerCostSpec per NAS site, keyed to match the nas tree layout
+    (dotted paths under blocks.* fold the layer axis)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Ln = cfg.n_layers
+    specs = {}
+
+    def add(prefix, name, c_out, c_in, layers=1, tok=tokens):
+        specs[f"{prefix}{name}"] = _site_specs_for_linear(
+            f"{prefix}{name}", c_out, c_in, tok, layers)
+
+    if cfg.family in ("dense", "vlm", "moe", "hybrid", "audio"):
+        if cfg.use_mla:
+            qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+            nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+            att = [("attn.wq_a", qr, d), ("attn.wq_b", H * (nope + rope), qr),
+                   ("attn.wkv_a", kvr + rope, d),
+                   ("attn.wkv_b", H * (nope + vd), kvr),
+                   ("attn.wo", d, H * vd)]
+        else:
+            att = [("attn.wq", H * hd, d), ("attn.wk", KV * hd, d),
+                   ("attn.wv", KV * hd, d), ("attn.wo", d, H * hd)]
+        n_attn_layers = Ln if cfg.family != "hybrid" else 1  # shared block
+        prefix = "blocks." if cfg.family != "hybrid" else "shared_attn."
+        if cfg.family == "audio":
+            for nm, co, ci in att:
+                add("enc_blocks.", nm, co, ci, cfg.n_encoder_layers,
+                    cfg.encoder_seq)
+                add("dec_blocks.", nm, co, ci, Ln)
+                add("dec_blocks.", nm.replace("attn.", "xattn."), co, ci, Ln)
+        else:
+            for nm, co, ci in att:
+                add(prefix, nm, co, ci, n_attn_layers)
+                if cfg.mtp:
+                    add("mtp_block.", nm, co, ci, 1)
+        if cfg.n_experts:
+            E, eff = cfg.n_experts, cfg.moe_d_ff
+            # ops: only top-k experts execute per token
+            act_frac = cfg.experts_per_token / E
+            moe_prefixes = ["blocks."] + (["mtp_block."] if cfg.mtp else [])
+            for pfx in moe_prefixes:
+                nl = Ln if pfx == "blocks." else 1
+                for nm, co, ci in [("ffn.we_gate", E * eff, d),
+                                   ("ffn.we_up", E * eff, d),
+                                   ("ffn.we_down", E * d, eff)]:
+                    specs[pfx + nm] = _site_specs_for_linear(
+                        pfx + nm, co, ci, max(1, int(tokens * act_frac)), nl)
+                if cfg.n_shared_experts:
+                    sff = cfg.moe_d_ff * cfg.n_shared_experts
+                    add(pfx, "ffn.shared.w_gate", sff, d, nl)
+                    add(pfx, "ffn.shared.w_up", sff, d, nl)
+                    add(pfx, "ffn.shared.w_down", d, sff, nl)
+                if cfg.dense_residual_ff:
+                    rff = cfg.dense_residual_ff
+                    add(pfx, "ffn.dense_res.w_gate", rff, d, nl)
+                    add(pfx, "ffn.dense_res.w_up", rff, d, nl)
+                    add(pfx, "ffn.dense_res.w_down", d, rff, nl)
+        elif cfg.d_ff:
+            mlp_prefix = ("blocks.ffn." if cfg.family in ("dense", "vlm")
+                          else "shared_attn.ffn." if cfg.family == "hybrid"
+                          else "dec_blocks.mlp.")
+            n_mlp = 1 if cfg.family == "hybrid" else Ln
+            if cfg.mlp_type == "swiglu":
+                names = [("w_gate", ff, d), ("w_up", ff, d), ("w_down", d, ff)]
+            else:
+                names = [("w_in", ff, d), ("w_down", d, ff)]
+            for nm, co, ci in names:
+                add(mlp_prefix, nm, co, ci, n_mlp)
+            if cfg.family == "audio":
+                for nm, co, ci in names:
+                    add("enc_blocks.mlp.", nm, co, ci, cfg.n_encoder_layers,
+                        cfg.encoder_seq)
+
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner, Hs, N, P = ssm_mod.dims(cfg)
+        add("blocks.", "in_proj", 2 * d_inner + 2 * N + Hs, d, Ln)
+        add("blocks.", "out_proj", d, d_inner, Ln)
+
+    add("", "lm_head", cfg.padded_vocab, d, 1)
+    return specs

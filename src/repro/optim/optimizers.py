@@ -1,0 +1,231 @@
+"""Optimizers from scratch (no optax in this environment).
+
+Pure-pytree implementations of SGD+momentum and AdamW with:
+  * global-norm gradient clipping,
+  * decoupled weight decay with parameter masking (no decay on norms/
+    clips/NAS logits),
+  * optional bf16 first/second-moment storage ("optimizer-state
+    compression") — halves Adam memory, which is what lets the 671B MoE
+    config fit 16 GB/chip at 512-way sharding (DESIGN.md §5),
+  * learning-rate schedules: constant, cosine, and WSD
+    (warmup-stable-decay, MiniCPM arXiv:2404.06395 — minicpm-2b config).
+
+Interface mirrors optax: ``init(params) -> state``,
+``update(grads, state, params, step) -> (updates, state)`` where ``updates``
+are *added* to params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def wsd_schedule(lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat, then exponential-ish
+    (here linear-in-log) decay over the final ``decay`` steps."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        d_prog = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+        dec = lr * jnp.exp(jnp.log(final_frac) * d_prog)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    state_dtype: jnp.dtype = jnp.float32   # set bf16 for compressed states
+    decay_mask: Optional[Callable] = None  # path-aware mask fn(path, leaf)->bool
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=self.state_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(self, grads, state, params, step):
+        if self.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.schedule(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = -lr * mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta - lr * self.weight_decay * p.astype(jnp.float32)
+            return delta.astype(p.dtype), m32.astype(self.state_dtype), v32.astype(self.state_dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "m": treedef.unflatten([o[1] for o in out]),
+            "v": treedef.unflatten([o[2] for o in out]),
+        }
+        return updates, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Adafactor (Shazeer & Stern 2018): factored second moment, no first
+    moment.  Optimizer state for a (N, K) matrix is N + K floats instead of
+    2·N·K — this is the distributed-optimization trick that lets the
+    671B/480B MoE configs' training state fit 16 GB/chip (DESIGN.md §5).
+
+    Matrices with both trailing dims >= ``min_factor_dim`` store factored
+    row/col second-moment statistics; everything else stores the full v.
+    Update-RMS clipping replaces global-norm clipping (per the paper).
+    """
+    schedule: Callable
+    decay_pow: float = 0.8           # beta2_t = 1 - t^-decay_pow
+    eps1: float = 1e-30              # inside sqrt
+    eps2: float = 1e-3               # RMS(p) floor for relative step
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_factor_dim: int = 128
+
+    def _factored(self, shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= self.min_factor_dim
+                and shape[-2] >= self.min_factor_dim)
+
+    def init(self, params):
+        def one(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree_util.tree_map(
+            one, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(self, grads, state, params, step):
+        lr = self.schedule(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-self.decay_pow)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps1
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of v
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = g32 * jax.lax.rsqrt(vr[..., None] / denom[..., None]) \
+                    * jax.lax.rsqrt(vc[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update-RMS clipping
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            # relative step size
+            rms_p = jnp.maximum(jnp.sqrt(jnp.mean(
+                jnp.square(p.astype(jnp.float32)))), self.eps2)
+            delta = -lr * rms_p * u
+            if self.weight_decay:
+                delta = delta - lr * self.weight_decay * p.astype(jnp.float32)
+            return delta.astype(p.dtype), new_s
+
+        is_slot = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = jax.tree_util.tree_flatten(state["f"], is_leaf=is_slot)[0]
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_f = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(grads), [o[1] for o in out])
+        return updates, {"f": new_f}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    schedule: Callable
+    momentum: float = 0.9
+    nesterov: bool = False
+    clip_norm: Optional[float] = None
+
+    def init(self, params):
+        return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(self, grads, state, params, step):
+        del params
+        if self.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.schedule(step)
+
+        def upd(g, mu):
+            mu2 = self.momentum * mu + g
+            step_dir = g + self.momentum * mu2 if self.nesterov else mu2
+            return (-lr * step_dir).astype(g.dtype), mu2
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        out = [upd(g, mu) for g, mu in zip(flat_g, flat_mu)]
+        updates = treedef.unflatten([o[0] for o in out])
+        return updates, {"mu": treedef.unflatten([o[1] for o in out])}
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

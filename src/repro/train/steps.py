@@ -1,0 +1,183 @@
+"""Step factories: the production train_step / serve_step per architecture.
+
+``train_step`` is the paper's **search-phase W update** (Alg. 1 line 7 — the
+80% path that dominates wall time): forward in "search" mode (DNAS mixture of
+fake-quantized weights/activations), next-token CE, AdamW update.  The theta
+update (line 5) is built by ``make_theta_step`` and uses the Eq. 7/8
+regularizer; the launcher alternates them 20/80 like Alg. 1.
+
+Distribution: pure pjit — the step is jitted with in_shardings derived from
+dist/sharding.py rules; donate_argnums recycles the state buffers.
+
+State pytree:
+    {"params": ..., "nas": ..., "opt_w": ..., "opt_t": ..., "tau": scalar,
+     "step": scalar}
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import regularizers as reg
+from repro.models import transformer as tfm
+from repro.optim import optimizers as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    lr_theta: float = 1e-2
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    lam: float = 1e-12            # Eq. 2 regularization strength
+    objective: str = "size"       # Eq. 7 ("size") or Eq. 8 ("energy")
+    lut_name: str = "tpu_bw"
+    schedule: str = "cosine"      # cosine | wsd | constant
+    optimizer: str = "adamw"      # adamw | adafactor (factored, 100B+ configs)
+    opt_state_dtype: str = "bfloat16"   # compressed Adam moments
+    mtp_weight: float = 0.3
+    remat: bool = True
+
+    @classmethod
+    def for_arch(cls, cfg, **overrides) -> "TrainHParams":
+        """Per-arch system defaults (optimizer/schedule) from the config."""
+        kw = dict(optimizer=getattr(cfg, "optimizer", "adamw"),
+                  schedule=getattr(cfg, "lr_schedule", "cosine"))
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def make_optimizers(hp: TrainHParams):
+    if hp.schedule == "wsd":
+        sched = opt_mod.wsd_schedule(hp.lr, hp.warmup_steps,
+                                     int(hp.total_steps * 0.8),
+                                     int(hp.total_steps * 0.2) or 1)
+    elif hp.schedule == "cosine":
+        sched = opt_mod.cosine_schedule(hp.lr, hp.warmup_steps,
+                                        hp.total_steps)
+    else:
+        sched = opt_mod.constant_schedule(hp.lr)
+    if hp.optimizer == "adafactor":
+        opt_w = opt_mod.Adafactor(schedule=sched,
+                                  weight_decay=hp.weight_decay)
+    else:
+        opt_w = opt_mod.AdamW(schedule=sched, weight_decay=hp.weight_decay,
+                              clip_norm=hp.clip_norm,
+                              state_dtype=jnp.dtype(hp.opt_state_dtype))
+    opt_t = opt_mod.AdamW(schedule=opt_mod.constant_schedule(hp.lr_theta),
+                          clip_norm=None,
+                          state_dtype=jnp.dtype(hp.opt_state_dtype))
+    return opt_w, opt_t
+
+
+def init_train_state(cfg, hp: TrainHParams, key) -> dict:
+    params, nas = tfm.init_model(cfg, key)
+    opt_w, opt_t = make_optimizers(hp)
+    return {
+        "params": params,
+        "nas": nas,
+        "opt_w": opt_w.init(params),
+        "opt_t": opt_t.init(nas),
+        "tau": jnp.asarray(cfg.quant.tau0, jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _task_loss(cfg, hp, params, nas, tau, batch, mode):
+    if cfg.mtp:
+        logits, mtp_logits = tfm.forward_with_mtp(params, nas, tau, cfg,
+                                                  batch, mode, hp.remat)
+        loss = tfm.lm_loss(logits, batch)
+        if mtp_logits is not None:
+            # next-next-token targets: shift labels by one more
+            mtp_batch = {"labels": jnp.roll(batch["labels"], -1, axis=1),
+                         "mask": jnp.ones_like(batch["labels"],
+                                               jnp.float32).at[:, -1].set(0)}
+            loss = loss + hp.mtp_weight * tfm.lm_loss(mtp_logits, mtp_batch)
+        return loss
+    logits = tfm.forward(params, nas, tau, cfg, batch, mode, hp.remat)
+    return tfm.lm_loss(logits, batch)
+
+
+def make_train_step(cfg, hp: TrainHParams) -> Callable:
+    """W-update search step (the dominant workload — dry-run target)."""
+    opt_w, _ = make_optimizers(hp)
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return _task_loss(cfg, hp, params, state["nas"], state["tau"],
+                              batch, "search")
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        updates, new_opt = opt_w.update(grads, state["opt_w"],
+                                        state["params"], state["step"])
+        new_params = opt_mod.apply_updates(state["params"], updates)
+        return {
+            "params": new_params,
+            "nas": state["nas"],
+            "opt_w": new_opt,
+            "opt_t": state["opt_t"],
+            "tau": state["tau"],
+            "step": state["step"] + 1,
+        }, {"loss": loss}
+
+    return train_step
+
+
+def make_theta_step(cfg, hp: TrainHParams, tokens_per_batch: int) -> Callable:
+    """theta-update step: L_T + lambda * L_R(theta) (Alg. 1 line 5)."""
+    _, opt_t = make_optimizers(hp)
+    specs = tfm.cost_specs(cfg, tokens_per_batch)
+
+    def theta_step(state, batch):
+        def loss_fn(nas):
+            lt = _task_loss(cfg, hp, state["params"], nas, state["tau"],
+                            batch, "search")
+            flat = tfm.flatten_nas(nas)
+            lr_cost = reg.total_cost(flat, state["tau"], specs, cfg.quant,
+                                     hp.objective, hp.lut_name)
+            return lt + hp.lam * lr_cost, (lt, lr_cost)
+        (loss, (lt, lr_cost)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["nas"])
+        updates, new_opt = opt_t.update(grads, state["opt_t"], state["nas"],
+                                        state["step"])
+        new_nas = opt_mod.apply_updates(state["nas"], updates)
+        return {
+            "params": state["params"],
+            "nas": new_nas,
+            "opt_w": state["opt_w"],
+            "opt_t": new_opt,
+            "tau": state["tau"],
+            "step": state["step"] + 1,
+        }, {"loss": lt, "reg_cost": lr_cost}
+
+    return theta_step
+
+
+def make_qat_warmup_step(cfg, hp: TrainHParams) -> Callable:
+    """Alg. 1 warmup: QAT @ 8b, NAS frozen."""
+    opt_w, _ = make_optimizers(hp)
+
+    def warmup_step(state, batch):
+        def loss_fn(params):
+            return _task_loss(cfg, hp, params, None, state["tau"], batch,
+                              "qat8")
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        updates, new_opt = opt_w.update(grads, state["opt_w"],
+                                        state["params"], state["step"])
+        return {**state, "params": opt_mod.apply_updates(state["params"],
+                                                         updates),
+                "opt_w": new_opt, "step": state["step"] + 1}, {"loss": loss}
+
+    return warmup_step
+
+
+def anneal_epoch(state, cfg) -> dict:
+    """End-of-epoch tau annealing (Alg. 1 line 8)."""
+    from repro.core import mixedprec as mp
+    return {**state, "tau": mp.anneal_tau(state["tau"], cfg.quant)}

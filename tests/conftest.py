@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests must see the single real CPU device — the 512-device flag is
+# set ONLY by launch/dryrun.py (and benchmarks/roofline.py).  Guard against
+# accidental inheritance from a dry-run shell.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

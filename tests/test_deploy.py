@@ -1,0 +1,133 @@
+"""Sec. III-C deployment transform: reorder/group/pack/split must preserve
+the layer function exactly (up to integer-quantization rounding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import deploy as dpl
+from repro.core import mixedprec as mp
+from repro.core import quantizers as qz
+from repro.models import serving
+
+CFG = mp.MixedPrecConfig()
+
+
+def _searched_linear(key, c_out=32, c_in=48):
+    w = np.asarray(jax.random.normal(key, (c_out, c_in)), np.float32)
+    gamma = np.asarray(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (c_out, 3)) * 3, np.float32)
+    alpha_w = np.abs(w).max(-1)
+    return w, gamma, alpha_w
+
+
+def test_group_channels_partitions():
+    """Grouping is a permutation: every channel appears exactly once."""
+    bits = np.asarray([2, 8, 4, 4, 2, 8, 8, 2])
+    perm, sizes = dpl.group_channels(bits, (2, 4, 8), align=1)
+    assert sorted(perm.tolist()) == list(range(8))
+    assert sizes == {2: 3, 4: 2, 8: 3}
+
+
+def test_group_channels_alignment_promotes_upward():
+    """With align=4, group sizes are multiples of 4 and promotion only moves
+    channels to HIGHER precision (never down)."""
+    rng = np.random.default_rng(0)
+    bits = rng.choice([2, 4, 8], size=37)
+    perm, sizes = dpl.group_channels(bits, (2, 4, 8), align=4)
+    assert sum(sizes.values()) == 37
+    assert sorted(perm.tolist()) == list(range(37))
+    offset = 0
+    for b in (2, 4, 8):
+        group = perm[offset:offset + sizes[b]]
+        offset += sizes[b]
+        if b != 8:  # top precision absorbs the remainder
+            assert sizes[b] % 4 == 0
+        for ch in group:
+            assert bits[ch] <= b  # promotion upward only
+
+
+def test_deploy_linear_function_preserved():
+    """Deployed (reordered+packed+split) layer == frozen fake-quant layer."""
+    w, gamma, alpha_w = _searched_linear(jax.random.PRNGKey(0))
+    d = dpl.deploy_linear(w, gamma, alpha_w, None, 6.0, CFG, align=1)
+    # reference: frozen per-channel fake-quant of the float weights
+    frozen = mp.frozen_weight(jnp.asarray(w), jnp.asarray(gamma),
+                              jnp.asarray(alpha_w), CFG)
+    deq = dpl.dequantize_deployed(d)        # (c_out, c_in), canonical order
+    np.testing.assert_allclose(deq, np.asarray(frozen), atol=1e-5)
+
+
+def test_deploy_alignment_only_adds_precision():
+    """align=8 deployment must be at least as accurate as align=1."""
+    w, gamma, alpha_w = _searched_linear(jax.random.PRNGKey(1), 40, 32)
+    d1 = dpl.deploy_linear(w, gamma, alpha_w, None, 6.0, CFG, align=1)
+    d8 = dpl.deploy_linear(w, gamma, alpha_w, None, 6.0, CFG, align=8)
+    e1 = np.abs(dpl.dequantize_deployed(d1) - w).sum()
+    e8 = np.abs(dpl.dequantize_deployed(d8) - w).sum()
+    assert e8 <= e1 + 1e-5
+    assert dpl.memory_bits(d8) >= dpl.memory_bits(d1)
+
+
+def test_memory_bits_counts():
+    w, gamma, alpha_w = _searched_linear(jax.random.PRNGKey(2), 16, 24)
+    d = dpl.deploy_linear(w, gamma, alpha_w, None, 6.0, CFG, align=1)
+    # packed bytes per group: rows * ceil(24*bits/8) bytes -> 8*size bits
+    exp = sum(grp["packed"].size * 8 for grp in d.groups.values())
+    assert dpl.memory_bits(d) == exp
+    # and the total is bounded below by the ideal (unpadded) bit count
+    bits = np.asarray(jnp.argmax(jnp.asarray(gamma), -1))
+    ideal = sum(CFG.weight_bits[b] * 24 for b in bits)
+    assert dpl.memory_bits(d) >= ideal
+
+
+def test_propagate_perm_preserves_composition():
+    """Reordering layer n's outputs + permuting layer n+1's inputs is a
+    no-op on the composed function (the paper's Fig. 2 transform)."""
+    rng = np.random.default_rng(0)
+    w1 = rng.standard_normal((8, 4)).astype(np.float32)
+    w2 = rng.standard_normal((5, 8)).astype(np.float32)
+    perm = rng.permutation(8)
+    x = rng.standard_normal((3, 4)).astype(np.float32)
+    y_ref = x @ w1.T @ w2.T
+    w1p = w1[perm]
+    w2p = dpl.propagate_perm(w2, perm)
+    y = x @ w1p.T @ w2p.T
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5)
+
+
+def test_deployed_from_search_matches_dq_linear():
+    """serving.dq_linear on the deployed format == frozen reference matmul
+    with the canonical-order restoration (inv_perm)."""
+    key = jax.random.PRNGKey(4)
+    w, gamma, alpha_w = _searched_linear(key, 16, 32)
+
+    from repro.config import DeploySpec
+
+    class QCfg:
+        quant = CFG
+        deploy = DeploySpec(align=1)
+    dp = serving.deployed_from_search(w, gamma, alpha_w, None, 6.0, QCfg,
+                                      restore_order=True)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (4, 32))
+    y = serving.dq_linear(x, dp, compute_dtype=jnp.float32)
+    frozen = mp.frozen_weight(jnp.asarray(w), jnp.asarray(gamma),
+                              jnp.asarray(alpha_w), CFG)
+    y_ref = x @ frozen.T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_dq_linear_backends_agree(backend):
+    key = jax.random.PRNGKey(5)
+    from repro.config import ArchConfig
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64)
+    dp = serving.init_deployed_linear(key, 64, 128, cfg)
+    x = jax.random.normal(key, (8, 64))
+    y = serving.dq_linear(x, dp, jnp.float32, backend=backend)
+    y_ref = serving.dq_linear(x, dp, jnp.float32, backend="jnp")
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=3e-2, atol=3e-2)

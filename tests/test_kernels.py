@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp ref.py oracles
+(interpret mode executes the Pallas kernel body in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizers as qz
+from repro.kernels import ops, ref
+
+BITS = (2, 4, 8)
+
+
+def _mk_packed(key, n, k, bits):
+    w = jax.random.normal(key, (n, k), jnp.float32)
+    alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    q, scale = qz.quantize_weight_int(w, alpha, bits)
+    return qz.pack_int(q, bits), scale[:, 0], w
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("m,k,n", [
+    (8, 32, 16),          # tiny, unaligned-ish
+    (64, 256, 192),       # mid
+    (128, 512, 128),      # exactly one tile
+    (100, 384, 130),      # pad in every dim
+])
+def test_quant_matmul_matches_ref(bits, m, k, n):
+    key = jax.random.PRNGKey(bits * 1000 + m + n)
+    packed, scale, _ = _mk_packed(key, n, k, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    # pre-round x to bf16 so kernel (bf16 inputs, f32 accum) and the f32
+    # oracle see bit-identical inputs; int weights <= 127 are bf16-exact
+    x = x.astype(jnp.bfloat16).astype(jnp.float32)
+    y = ops.quant_matmul(x, packed, scale, bits, k,
+                         out_dtype=jnp.float32)
+    y_ref = ref.quant_matmul_ref(x, packed, scale, bits, k)
+    err = np.abs(np.asarray(y, np.float32) - np.asarray(y_ref, np.float32))
+    # identical inputs; only f32 accumulation order differs (chunked K loop)
+    assert err.max() <= 1e-4 * np.abs(np.asarray(y_ref)).max()
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quant_matmul_batched_leading_dims(bits):
+    key = jax.random.PRNGKey(7)
+    packed, scale, _ = _mk_packed(key, 64, 128, bits)
+    x = jax.random.normal(key, (2, 3, 128), jnp.float32)
+    x = x.astype(jnp.bfloat16).astype(jnp.float32)
+    y = ops.quant_matmul(x, packed, scale, bits, 128,
+                         out_dtype=jnp.float32)
+    assert y.shape == (2, 3, 64)
+    y_ref = ref.quant_matmul_ref(x, packed, scale, bits, 128)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_out_dtype(out_dtype):
+    key = jax.random.PRNGKey(3)
+    packed, scale, _ = _mk_packed(key, 32, 64, 4)
+    x = jax.random.normal(key, (16, 64), jnp.float32)
+    y = ops.quant_matmul(x, packed, scale, 4, 64, out_dtype=out_dtype)
+    assert y.dtype == out_dtype
+
+
+@pytest.mark.parametrize("n,k", [(16, 32), (256, 512), (200, 300), (8, 128)])
+def test_fused_mix_matches_ref(n, k):
+    key = jax.random.PRNGKey(n + k)
+    w = jax.random.normal(key, (n, k), jnp.float32)
+    gamma_hat = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (n, 3)), axis=-1)
+    alpha = jnp.max(jnp.abs(w), axis=-1)
+    y = ops.fused_mix(w, gamma_hat, alpha)
+    y_ref = ref.fused_mix_ref(w, gamma_hat, alpha)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_mix_onehot_equals_single_fq():
+    """One-hot gamma through the kernel == plain fake-quant at that bits."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
+    alpha = jnp.max(jnp.abs(w), axis=-1)
+    for i, bits in enumerate(BITS):
+        gh = jnp.zeros((32, 3)).at[:, i].set(1.0)
+        y = ops.fused_mix(w, gh, alpha)
+        exp = qz.quantize_weight(w, alpha[:, None], bits)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_zero_weight_rows():
+    """All-zero packed weights -> exactly zero output (scale irrelevant)."""
+    packed = jnp.zeros((16, 32), jnp.uint8)
+    scale = jnp.ones((16,), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    y = ops.quant_matmul(x, packed, scale, 2, 128,
+                         out_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y), 0.0)

@@ -1,0 +1,155 @@
+"""Tests for the paper's core: Eq. 3-6 effective tensors, Eq. 7/8
+regularizers, tau annealing, argmax freezing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut as lut_mod
+from repro.core import mixedprec as mp
+from repro.core import regularizers as reg
+from repro.core.regularizers import LayerCostSpec
+
+CFG = mp.MixedPrecConfig()
+
+
+def _nas(c_out=8, key=0):
+    return mp.init_nas_params(jax.random.PRNGKey(key), c_out, CFG)
+
+
+def test_softmax_tau_limits():
+    """tau -> 0 turns the softmax into argmax; tau large -> uniform."""
+    logits = jnp.asarray([1.0, 2.0, 0.5])
+    hot = mp.softmax_tau(logits, jnp.asarray(1e-3))
+    np.testing.assert_allclose(np.asarray(hot), [0, 1, 0], atol=1e-6)
+    flat = mp.softmax_tau(logits, jnp.asarray(1e3))
+    np.testing.assert_allclose(np.asarray(flat), [1 / 3] * 3, atol=1e-3)
+
+
+def test_effective_weight_is_convex_mixture():
+    """Eq. 5: effective weight lies in the convex hull of the fq copies."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    alpha = jnp.max(jnp.abs(w), axis=-1)
+    gamma = jax.random.normal(jax.random.PRNGKey(1), (8, 3))
+    eff = mp.effective_weight(w, gamma, alpha, jnp.asarray(1.0), CFG)
+    bank = jnp.stack([__import__("repro.core.quantizers",
+                                 fromlist=["quantize_weight"]).quantize_weight(
+        w, alpha[:, None], b) for b in CFG.weight_bits])
+    lo, hi = jnp.min(bank, 0), jnp.max(bank, 0)
+    assert bool(jnp.all(eff >= lo - 1e-5) and jnp.all(eff <= hi + 1e-5))
+
+
+def test_effective_weight_onehot_selects_single_precision():
+    from repro.core import quantizers as qz
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    alpha = jnp.max(jnp.abs(w), axis=-1)
+    gamma = jnp.asarray([[99., 0., 0.], [0., 99., 0.],
+                         [0., 0., 99.], [0., 99., 0.]])
+    eff = mp.effective_weight(w, gamma, alpha, jnp.asarray(0.01), CFG)
+    for i, bits in enumerate((2, 4, 2)):  # rows 0,1,3 -> argmax bits 2,4,4
+        pass
+    exp0 = qz.quantize_weight(w[0:1], alpha[0:1, None], 2)
+    np.testing.assert_allclose(np.asarray(eff[0:1]), np.asarray(exp0),
+                               atol=1e-4)
+    exp1 = qz.quantize_weight(w[1:2], alpha[1:2, None], 4)
+    np.testing.assert_allclose(np.asarray(eff[1:2]), np.asarray(exp1),
+                               atol=1e-4)
+
+
+def test_frozen_matches_argmax_mixture():
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    alpha = jnp.max(jnp.abs(w), axis=-1)
+    gamma = jax.random.normal(jax.random.PRNGKey(3), (8, 3)) * 3
+    frozen = mp.frozen_weight(w, gamma, alpha, CFG)
+    # manual: per-channel argmax pick
+    from repro.core import quantizers as qz
+    idx = np.asarray(jnp.argmax(gamma, -1))
+    for i in range(8):
+        exp = qz.quantize_weight(w[i:i + 1], alpha[i:i + 1, None],
+                                 CFG.weight_bits[idx[i]])
+        np.testing.assert_allclose(np.asarray(frozen[i:i + 1]),
+                                   np.asarray(exp), atol=1e-5)
+
+
+def test_anneal_tau_schedule():
+    """tau(k) = tau0 * e^(-0.0045 k) — Sec. III-B."""
+    tau = jnp.asarray(5.0)
+    for _ in range(10):
+        tau = mp.anneal_tau(tau, CFG)
+    np.testing.assert_allclose(float(tau), 5.0 * np.exp(-0.045), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Regularizers
+# ---------------------------------------------------------------------------
+
+def _spec(c_out=8, wpc=9, ops=1000):
+    return LayerCostSpec("l", c_out, wpc, ops)
+
+
+def test_size_cost_uniform_logits():
+    """Uniform gamma -> expected bits == mean(P_W) per channel (Eq. 7)."""
+    gamma = jnp.zeros((8, 3))
+    cost = reg.size_cost(gamma, jnp.asarray(1.0), _spec(), CFG)
+    exp = 9 * 8 * np.mean([2, 4, 8])
+    np.testing.assert_allclose(float(cost), exp, rtol=1e-5)
+
+
+def test_size_cost_layerwise_equals_perchannel_when_tied():
+    """EdMIPS 1-row gamma must cost the same as identical per-channel rows."""
+    g1 = jnp.asarray([[1.0, 2.0, 0.3]])
+    g8 = jnp.tile(g1, (8, 1))
+    c1 = reg.size_cost(g1, jnp.asarray(1.0), _spec(), CFG)
+    c8 = reg.size_cost(g8, jnp.asarray(1.0), _spec(), CFG)
+    np.testing.assert_allclose(float(c1), float(c8), rtol=1e-6)
+
+
+def test_size_cost_monotone_in_bits():
+    """Pushing logits toward 8b strictly raises Eq. 7."""
+    lo = reg.size_cost(jnp.asarray([[5.0, 0, 0]]), jnp.asarray(1.0),
+                       _spec(), CFG)
+    hi = reg.size_cost(jnp.asarray([[0, 0, 5.0]]), jnp.asarray(1.0),
+                       _spec(), CFG)
+    assert float(hi) > float(lo)
+
+
+def test_energy_cost_lut_weighting():
+    """One-hot NAS params recover exactly one LUT entry * Omega (Eq. 8)."""
+    lut = lut_mod.get_lut("mpic")
+    gamma = jnp.asarray([[0, 99.0, 0]] * 4)     # all channels 4b
+    delta = jnp.asarray([99.0, 0, 0])           # acts 2b
+    spec = _spec(c_out=4, ops=1000)
+    cost = reg.energy_cost(gamma, delta, jnp.asarray(0.01), spec, CFG, lut)
+    np.testing.assert_allclose(float(cost), 1000 * float(lut[0, 1]),
+                               rtol=1e-4)
+
+
+def test_energy_lut_properties():
+    """MPIC LUT: monotone in both precisions, 8x8 normalized to 1."""
+    lut = np.asarray(lut_mod.get_lut("mpic"))
+    assert lut[2, 2] == 1.0
+    assert (np.diff(lut, axis=0) > 0).all() and (np.diff(lut, axis=1) > 0).all()
+
+
+def test_total_cost_missing_spec_raises():
+    nas = {"lay": _nas()}
+    with pytest.raises(KeyError):
+        reg.total_cost(nas, jnp.asarray(1.0), {}, CFG, "size")
+
+
+def test_discrete_size_bits():
+    """Discrete (argmax) model size matches hand count."""
+    nas = {"l": {"gamma": jnp.asarray([[9., 0, 0], [0, 9., 0]]),
+                 "delta": jnp.zeros(3)}}
+    specs = {"l": LayerCostSpec("l", 2, 10, 100)}
+    bits = reg.discrete_size_bits(nas, specs, CFG)
+    assert bits == 10 * (2 + 4)
+
+
+def test_regularizer_gradient_direction():
+    """d(Eq.7)/d gamma_8bit > 0 > d/d gamma_2bit — the force toward fewer
+    bits that drives the search."""
+    gamma = jnp.zeros((4, 3))
+    g = jax.grad(lambda G: reg.size_cost(G, jnp.asarray(1.0), _spec(4),
+                                         CFG))(gamma)
+    assert bool(jnp.all(g[:, 2] > 0)) and bool(jnp.all(g[:, 0] < 0))

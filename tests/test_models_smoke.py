@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train step + one serve decode on CPU; asserts output shapes
+and no NaNs (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCH_IDS, get_config
+from repro.models import serving
+from repro.models import transformer as tfm
+from repro.train import steps as steps_mod
+
+ALL = list(ARCH_IDS)
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm" and cfg.n_prefix_tokens:
+        b["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_reduced_forward_all_modes(arch):
+    cfg = get_config(arch).reduced()
+    params, nas = tfm.init_model(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    for mode in ("float", "qat8", "search", "frozen"):
+        logits = tfm.forward(params, nas if mode != "qat8" else None,
+                             5.0, cfg, batch, mode, remat=False)
+        assert logits.shape == (2, 16, cfg.padded_vocab), mode
+        assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size]))), mode
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    hp = steps_mod.TrainHParams.for_arch(cfg, total_steps=4)
+    state = steps_mod.init_train_state(cfg, hp, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    step = jax.jit(steps_mod.make_train_step(cfg, hp))
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(state["step"]) == 1
+    # one theta step too (the 20% path)
+    tstep = jax.jit(steps_mod.make_theta_step(cfg, hp, 32))
+    state, m2 = tstep(state, batch)
+    assert np.isfinite(float(m2["reg_cost"])) and float(m2["reg_cost"]) > 0
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_reduced_serve_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    dparams = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    batch = {k: v for k, v in _batch(cfg).items() if k != "labels"}
+    logits, _ = serving.prefill(dparams, cfg, batch)
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size])))
+    caches = serving.init_caches(cfg, 2, 32)
+    lg, c2 = serving.decode_step(dparams, cfg,
+                                 jnp.zeros((2, 1), jnp.int32), caches,
+                                 jnp.asarray(16, jnp.int32))
+    assert lg.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(lg[..., :cfg.vocab_size])))
+    # cache tree structure preserved (donation-compatible)
+    assert jax.tree_util.tree_structure(c2) \
+        == jax.tree_util.tree_structure(caches)
+
+
+def test_train_loss_decreases_dense():
+    """A few steps on the learnable synthetic stream must reduce CE."""
+    from repro.data import pipeline as pipe
+    cfg = get_config("qwen1.5-4b").reduced()
+    hp = steps_mod.TrainHParams.for_arch(cfg, lr=3e-3, total_steps=60,
+                                         warmup_steps=5)
+    state = steps_mod.init_train_state(cfg, hp, jax.random.PRNGKey(0))
+    gen = pipe.SyntheticLM(cfg.vocab_size, 32, 8, seed=1)
+    step = jax.jit(steps_mod.make_train_step(cfg, hp))
+    it = iter(gen)
+    losses = []
+    for _ in range(60):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:5]) - 0.05,         (losses[:3], losses[-3:])
+
+
+def test_mtp_auxiliary_head():
+    cfg = get_config("deepseek-v3-671b").reduced()
+    assert cfg.mtp
+    params, nas = tfm.init_model(cfg, jax.random.PRNGKey(0))
+    logits, mtp = tfm.forward_with_mtp(params, nas, 5.0, cfg, _batch(cfg),
+                                       "search", remat=False)
+    assert mtp is not None and mtp.shape == logits.shape

@@ -1,0 +1,104 @@
+"""Unit + property tests for core/quantizers.py (Eq. 1, PACT, packing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as qz
+
+BITS = (2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quantization properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+def test_act_quant_levels(bits):
+    """Quantized activations take at most 2^bits distinct values in [0, a]."""
+    x = jnp.linspace(-1.0, 8.0, 1001)
+    y = qz.quantize_act(x, jnp.asarray(6.0), bits)
+    vals = np.unique(np.asarray(y))
+    assert len(vals) <= (1 << bits)
+    assert vals.min() >= 0.0 and vals.max() <= 6.0 + 1e-6
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_weight_quant_symmetric(bits):
+    """Signed weight quantization: symmetric levels, zero representable."""
+    w = jnp.linspace(-2.0, 2.0, 1001)
+    y = qz.quantize_weight(w, jnp.asarray(1.5), bits)
+    vals = np.unique(np.asarray(y))
+    assert len(vals) <= (1 << bits) - 1 or bits == 8
+    np.testing.assert_allclose(vals, -vals[::-1], atol=1e-6)  # symmetric
+    assert 0.0 in np.round(vals, 6)
+
+
+def test_8bit_quant_near_identity():
+    x = jnp.linspace(0.01, 5.99, 100)
+    y = qz.quantize_act(x, jnp.asarray(6.0), 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=6 / 255)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(BITS))
+@settings(max_examples=25, deadline=None)
+def test_quant_error_bounded(seed, bits):
+    """|fq(x) - clip(x)| <= step/2 — the core quantization invariant."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64) * 3, jnp.float32)
+    alpha = 2.0
+    y = qz.quantize_act(x, jnp.asarray(alpha), bits)
+    clipped = np.clip(np.asarray(x), 0, alpha)
+    step = alpha / ((1 << bits) - 1)
+    assert np.max(np.abs(np.asarray(y) - clipped)) <= step / 2 + 1e-6
+
+
+def test_ste_gradient_passthrough():
+    """d/dx fq(x) == 1 inside the clip range, 0 outside."""
+    g = jax.grad(lambda x: qz.quantize_act(x, jnp.asarray(6.0), 4))
+    assert g(jnp.asarray(3.0)) == 1.0
+    assert g(jnp.asarray(7.0)) == 0.0
+    assert g(jnp.asarray(-1.0)) == 0.0
+
+
+def test_pact_alpha_gradient():
+    """PACT: d fq/d alpha == 1 for saturated inputs, ~0 for interior."""
+    g = jax.grad(lambda a: qz.quantize_act(jnp.asarray(10.0), a, 4))
+    assert abs(float(g(jnp.asarray(6.0))) - 1.0) < 1e-5
+    g_in = jax.grad(lambda a: qz.quantize_act(jnp.asarray(1.5), a, 8))
+    assert abs(float(g_in(jnp.asarray(6.0)))) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Integer quantization + sub-byte packing roundtrips
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(BITS),
+       st.sampled_from([8, 16, 64, 256]))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(seed, bits, k):
+    rng = np.random.default_rng(seed)
+    half = (1 << (bits - 1)) - 1
+    q = jnp.asarray(rng.integers(-half, half + 1, (4, k)), jnp.int8)
+    packed = qz.pack_int(q, bits)
+    assert packed.shape == (4, k * bits // 8)
+    out = qz.unpack_int(packed, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_int_quant_dequant_error(bits):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    q, scale = qz.quantize_weight_int(w, alpha, bits)
+    back = np.asarray(q, np.float32) * np.asarray(scale)
+    step = np.asarray(alpha) / ((1 << (bits - 1)) - 1)
+    assert np.max(np.abs(back - np.asarray(w)) / step) <= 0.5 + 1e-5
+
+
+def test_weight_bank_shapes():
+    w = jnp.ones((8, 4))
+    bank = qz.weight_bank(w, jnp.ones((8, 1)))
+    assert bank.shape == (3, 8, 4)

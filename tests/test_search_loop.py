@@ -1,0 +1,95 @@
+"""Integration: Alg. 1 end-to-end on the paper's MLPerf-Tiny models, and the
+EdMIPS baseline under the identical protocol (Sec. IV-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edmips, mixedprec as mp, regularizers as reg, search
+from repro.data import pipeline as pipe
+from repro.models import tinyml
+
+
+def _setup(task_name="dae-ad", n=64, batch=16, seed=0):
+    cfg = tinyml.TINY_CONFIGS[task_name]
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params, nas = init_fn(jax.random.PRNGKey(seed))
+    data = pipe.SyntheticTiny(cfg, n=n, seed=seed)
+    epochs = lambda: data.batches(batch, seed=seed)
+    loss_fn = lambda pred, b: tinyml.task_loss(cfg, pred, b)
+    return cfg, apply_fn, specs, params, nas, epochs, loss_fn
+
+
+@pytest.mark.parametrize("objective", ["size", "energy"])
+def test_alg1_three_phases_run(objective):
+    cfg, apply_fn, specs, params, nas, epochs, loss_fn = _setup()
+    settings = search.SearchSettings(
+        cfg=cfg.quant, objective=objective, lam=1e-6,
+        warmup_epochs=1, search_epochs=2, finetune_epochs=1,
+        lut_name="mpic")
+    res = search.run_search(apply_fn, loss_fn, specs, params, nas, epochs,
+                            settings)
+    phases = [h["phase"] for h in res.history]
+    assert "warmup" in phases and "search" in phases and "finetune" in phases
+    # tau annealed during the search epochs
+    assert float(res.tau) < cfg.quant.tau0
+
+
+def test_lambda_sweep_reduces_model_size():
+    """Higher lambda must push the discrete assignment to fewer bits — the
+    mechanism behind the paper's Pareto fronts (Fig. 3)."""
+    sizes = {}
+    for lam in (1e-9, 3e-4):
+        cfg, apply_fn, specs, params, nas, epochs, loss_fn = _setup()
+        settings = search.SearchSettings(
+            cfg=cfg.quant, objective="size", lam=lam,
+            warmup_epochs=1, search_epochs=3, finetune_epochs=0)
+        res = search.run_search(apply_fn, loss_fn, specs, params, nas,
+                                epochs, settings)
+        flat = res.nas
+        sizes[lam] = reg.discrete_size_bits(flat, specs, cfg.quant)
+    assert sizes[3e-4] < sizes[1e-9]
+
+
+def test_edmips_baseline_layerwise():
+    """EdMIPS config: one gamma row per layer; search still runs."""
+    qcfg = edmips.edmips_config()
+    assert not qcfg.per_channel
+    cfg = tinyml.TINY_CONFIGS["dae-ad"]
+    import dataclasses
+    cfg = dataclasses.replace(cfg, quant=qcfg)
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params, nas = init_fn(jax.random.PRNGKey(0))
+    for site, n in nas.items():
+        assert n["gamma"].shape[0] == 1, site   # layer-wise
+    data = pipe.SyntheticTiny(cfg, n=48)
+    settings = search.SearchSettings(cfg=qcfg, objective="size", lam=1e-6,
+                                     warmup_epochs=1, search_epochs=1,
+                                     finetune_epochs=1)
+    res = search.run_search(apply_fn,
+                            lambda p, b: tinyml.task_loss(cfg, p, b),
+                            specs, params, nas,
+                            lambda: data.batches(16), settings)
+    assert res.nas is not None
+
+
+def test_channelwise_beats_edmips_in_search_space():
+    """Per-channel gamma has c_out x more NAS parameters than layer-wise —
+    the paper's Sec. III search-space claim, structurally."""
+    cw = edmips.channelwise_config()
+    lw = edmips.edmips_config()
+    n_cw = mp.init_nas_params(jax.random.PRNGKey(0), 64, cw)
+    n_lw = mp.init_nas_params(jax.random.PRNGKey(0), 64, lw)
+    assert n_cw["gamma"].size == 64 * n_lw["gamma"].size
+
+
+def test_early_stop_triggers():
+    cfg, apply_fn, specs, params, nas, epochs, loss_fn = _setup(n=32, batch=16)
+    settings = search.SearchSettings(
+        cfg=cfg.quant, objective="size", lam=0.0,   # nothing to improve
+        warmup_epochs=0, search_epochs=50, finetune_epochs=0,
+        early_stop_patience=2)
+    res = search.run_search(apply_fn, loss_fn, specs, params, nas, epochs,
+                            settings)
+    n_search = sum(1 for h in res.history if h["phase"] == "search")
+    assert n_search < 50

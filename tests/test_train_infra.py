@@ -1,0 +1,205 @@
+"""Training-infrastructure tests: optimizers, schedules, checkpointing
+(save/restore/atomicity/GC), data pipeline determinism, fault machinery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import pipeline as pipe
+from repro.dist import fault
+from repro.optim import optimizers as opt
+from repro.train import checkpoint as ck
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_params():
+    return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+
+
+@pytest.mark.parametrize("make", [
+    lambda: opt.AdamW(schedule=opt.constant_schedule(0.1)),
+    lambda: opt.Adafactor(schedule=opt.constant_schedule(0.5)),
+    lambda: opt.SGD(schedule=opt.constant_schedule(0.1)),
+])
+def test_optimizers_minimize_quadratic(make):
+    o = make()
+    params = _quad_params()
+    state = o.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for step in range(60):
+        grads = jax.grad(loss)(params)
+        upd, state = o.update(grads, state, params, jnp.asarray(step))
+        params = opt.apply_updates(params, upd)
+    assert float(loss(params)) < 0.2 * float(loss(_quad_params()))
+
+
+def test_adafactor_state_is_factored():
+    """Second moment of an (N, K) matrix stores N+K floats, not N*K."""
+    o = opt.Adafactor(schedule=opt.constant_schedule(0.1),
+                      min_factor_dim=64)
+    params = {"w": jnp.zeros((256, 512)), "small": jnp.zeros((8,))}
+    st = o.init(params)
+    assert st["f"]["w"]["vr"].shape == (256,)
+    assert st["f"]["w"]["vc"].shape == (512,)
+    assert "v" in st["f"]["small"]
+    n_state = sum(x.size for x in jax.tree_util.tree_leaves(st))
+    assert n_state < 256 * 512  # far smaller than AdamW's 2*N*K
+
+
+def test_adamw_bf16_state_compression():
+    o = opt.AdamW(schedule=opt.constant_schedule(0.1),
+                  state_dtype=jnp.bfloat16)
+    st = o.init({"w": jnp.zeros((16, 16))})
+    assert st["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_wsd_schedule_shape():
+    s = opt.wsd_schedule(1.0, warmup=10, stable=50, decay=20)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert abs(float(s(40)) - 1.0) < 1e-6          # stable plateau
+    assert float(s(75)) < 0.5                       # decaying
+    assert float(s(80)) <= 0.011                    # decayed
+
+
+def test_cosine_schedule_monotone_decay():
+    s = opt.cosine_schedule(1.0, warmup=5, total=50)
+    vals = [float(s(i)) for i in range(5, 51, 5)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing (fault tolerance)
+# ---------------------------------------------------------------------------
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 4))},
+            "step": jnp.asarray(7, jnp.int32),
+            "tau": jnp.asarray(3.3)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(7, st, meta={"data_step": 123}, block=True)
+    mgr.wait()
+    restored, step, meta = mgr.restore_latest(jax.eval_shape(lambda: st))
+    assert step == 7 and meta["data_step"] == 123
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(st["params"]["w"]))
+
+
+def test_checkpoint_keeps_latest_k(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path), keep=2)
+    st = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, st, block=True)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path):
+    """A crashed (uncommitted) save must not be offered for restore —
+    atomic-rename commit protocol."""
+    mgr = ck.CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(5, st, block=True)
+    mgr.wait()
+    # simulate a crash mid-save: stray tmp dir for step 9
+    os.makedirs(os.path.join(str(tmp_path), "tmp_step_9"), exist_ok=True)
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_restore_on_fresh_dir(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path / "empty"))
+    restored, step, meta = mgr.restore_latest(jax.eval_shape(_state))
+    assert restored is None and step is None
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_lm_deterministic():
+    a = pipe.SyntheticLM(100, 16, 8, seed=3)._gen(5)
+    b = pipe.SyntheticLM(100, 16, 8, seed=3)._gen(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_synthetic_lm_host_sharding():
+    """Two hosts each produce half the global batch, disjoint streams."""
+    h0 = pipe.SyntheticLM(100, 16, 8, host_count=2, host_id=0, seed=1)._gen(0)
+    h1 = pipe.SyntheticLM(100, 16, 8, host_count=2, host_id=1, seed=1)._gen(0)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_synthetic_lm_labels_are_shifted_tokens():
+    b = pipe.SyntheticLM(100, 16, 4, seed=0)._gen(0)
+    # labels[t] is the next token after tokens[t] by construction
+    assert b["labels"].shape == b["tokens"].shape
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_state_checkpointable():
+    gen = pipe.SyntheticLM(100, 8, 4, seed=2)
+    it = iter(gen)
+    next(it), next(it)
+    saved = gen.state.to_dict()
+    b3 = next(it)
+    gen2 = pipe.SyntheticLM(100, 8, 4, seed=2)
+    gen2.state = pipe.PipelineState.from_dict(saved)
+    b3b = next(iter(gen2))
+    np.testing.assert_array_equal(b3["tokens"], b3b["tokens"])
+
+
+def test_prefetcher_yields_all():
+    src = ({"i": np.asarray([i])} for i in range(5))
+    out = [b["i"][0] for b in pipe.Prefetcher(src, depth=2)]
+    assert out == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# Fault machinery
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_dead_host():
+    hb = fault.Heartbeat([0, 1, 2], timeout_s=10.0)
+    for h in (0, 1, 2):
+        hb.beat(h, t=100.0)
+    hb.beat(0, t=120.0)
+    hb.beat(1, t=120.0)
+    assert hb.check(now=121.0) == [2]
+    assert hb.alive() == [0, 1]
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    em = fault.ElasticMesh(model=16, chips_per_host=4)
+    assert em.shape_for(64) == (16, 16)       # 256 chips
+    shape = em.shape_for(60)                  # lost 4 hosts -> 240 chips
+    assert shape == (15, 16)                  # data axis shrinks
+    assert shape[1] == 16                     # model axis preserved
+    with pytest.raises(RuntimeError):
+        em.shape_for(1)
+
+
+def test_straggler_policy_flags_slow_host():
+    sp = fault.StragglerPolicy(threshold=1.3, window=4, min_samples=4)
+    for t in range(4):
+        sp.record(0, 1.0)
+        sp.record(1, 1.0)
+        sp.record(2, 2.0)   # consistently 2x slower
+    assert sp.stragglers() == [2]

@@ -1,0 +1,69 @@
+"""Dry-run machinery validated on the 1-device test mesh with REDUCED
+configs: lower+compile every workload kind without the 512-device flag."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_config
+from repro.launch import workloads as wk
+from repro.launch.mesh import make_test_mesh
+from repro.launch.shapes import SHAPES, ShapeSpec, cells
+
+
+def _tiny_spec(kind):
+    return ShapeSpec(f"tiny_{kind}", kind, 16, 4)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "deepseek-v3-671b",
+                                  "mamba2-780m", "zamba2-1.2b",
+                                  "whisper-small", "phi-3-vision-4.2b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_lower_compile_reduced(arch, kind):
+    cfg = get_config(arch).reduced()
+    spec = _tiny_spec(kind)
+    if kind == "train":
+        wl = wk.make_train_workload(cfg, spec)
+    elif kind == "prefill":
+        wl = wk.make_prefill_workload(cfg, spec)
+    else:
+        wl = wk.make_decode_workload(cfg, spec)
+    mesh = make_test_mesh()
+    lowered = wk.lower(wl, mesh)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_cells_enumeration_is_40():
+    cs = cells()
+    assert len(cs) == 40
+    runnable = [c for c in cs if c.runnable]
+    skipped = [c for c in cs if not c.runnable]
+    # long_500k runs only for the two sub-quadratic archs
+    assert len([c for c in runnable if c.shape == "long_500k"]) == 2
+    assert len(skipped) == 8
+    for c in skipped:
+        assert c.shape == "long_500k" and c.skip_reason
+
+
+def test_batch_struct_shapes():
+    cfg = get_config("whisper-small")
+    spec = SHAPES["train_4k"]
+    b = wk.batch_struct(cfg, spec)
+    assert b["tokens"].shape == (256, 4096)
+    assert b["frames"].shape == (256, 1500, 768)
+    cfg = get_config("phi-3-vision-4.2b")
+    b = wk.batch_struct(cfg, spec)
+    assert b["prefix_embeds"].shape == (256, 576, 3072)
+
+
+def test_decode_workload_donates_caches():
+    cfg = get_config("qwen1.5-4b").reduced()
+    wl = wk.make_decode_workload(cfg, _tiny_spec("decode"))
+    assert wl.donate == (2,)
+    assert wl.args[1].shape == (4, 1)     # one new token
+
+
+def test_tokens_per_step_accounting():
+    cfg = get_config("qwen1.5-4b").reduced()
+    wl = wk.make_train_workload(cfg, ShapeSpec("s", "train", 128, 8))
+    assert wl.tokens_per_step == 1024

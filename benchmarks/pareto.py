@@ -19,15 +19,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import PrecisionPolicy
 from repro.core import edmips, mixedprec as mp, regularizers as reg, search
 from repro.data import pipeline as pipe
 from repro.models import tinyml
 
 
-def eval_metric(cfg, apply_fn, params, nas, tau, data, mode="frozen"):
+def eval_metric(cfg, apply_fn, params, nas, data,
+                policy=PrecisionPolicy.FROZEN):
     scores = []
     for b in data.batches(32, seed=99):
-        pred = apply_fn(params, nas, jnp.asarray(tau), b, mode)
+        pred = apply_fn(params, nas, policy, b)
         scores.append(float(tinyml.task_metric(cfg, pred, b)))
     return float(np.mean(scores))
 
@@ -46,7 +48,7 @@ def run_one(task: str, qcfg: mp.MixedPrecConfig, lam: float, objective: str,
                             lambda p, b: tinyml.task_loss(cfg, p, b),
                             specs, params, nas,
                             lambda: data.batches(16, seed=seed), settings)
-    metric = eval_metric(cfg, apply_fn, res.params, res.nas, res.tau, data)
+    metric = eval_metric(cfg, apply_fn, res.params, res.nas, data)
     size = reg.discrete_size_bits(res.nas, specs, qcfg)
     energy = reg.discrete_energy(res.nas, specs, qcfg, "mpic")
     return metric, size, energy
@@ -69,7 +71,7 @@ def fixed_baseline(task: str, w_bits: int, x_bits: int,
                             lambda p, b: tinyml.task_loss(cfg, p, b),
                             specs, params, nas,
                             lambda: data.batches(16, seed=seed), settings)
-    metric = eval_metric(cfg, apply_fn, res.params, res.nas, res.tau, data)
+    metric = eval_metric(cfg, apply_fn, res.params, res.nas, data)
     size = sum(s.weights_per_channel * s.c_out * w_bits
                for s in specs.values())
     from repro.core import lut as lut_mod

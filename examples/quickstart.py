@@ -1,12 +1,13 @@
 """Quickstart: the paper's pipeline end-to-end in ~a minute on CPU.
 
 1. Build a small FC model (the AD autoencoder family) with channel-wise
-   mixed-precision search sites.
+   mixed-precision search sites, wrapped in the `repro.api.Engine` facade.
 2. Run Alg. 1 (warmup -> DNAS search -> fine-tune) against the Eq. 7
    model-size regularizer.
 3. Inspect the learned per-channel bit-widths.
-4. Deploy (Sec. III-C): reorder channels by precision, pack sub-byte,
-   and verify the deployed model computes the same function.
+4. Deploy (Sec. III-C): every searched weight becomes a packed `QTensor`,
+   then serve the deployed model and verify it computes the same function
+   as the frozen (argmax fake-quant) reference.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,51 +15,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import deploy as dpl
+from repro.api import Engine, PrecisionPolicy
 from repro.core import mixedprec as mp
 from repro.core import regularizers as reg
 from repro.core import search
 from repro.data import pipeline as pipe
 from repro.models import tinyml
 
-# 1. model + data ------------------------------------------------------------
+# 1. model + data + engine ----------------------------------------------------
 cfg = tinyml.TINY_CONFIGS["dae-ad"]
-init_fn, apply_fn, specs = tinyml.build(cfg)
-params, nas = init_fn(jax.random.PRNGKey(0))
-data = pipe.SyntheticTiny(cfg, n=128, seed=0)
-
-# 2. Alg. 1 ------------------------------------------------------------------
 settings = search.SearchSettings(
     cfg=cfg.quant, objective="size", lam=3e-5,
     warmup_epochs=1, search_epochs=4, finetune_epochs=1)
-result = search.run_search(
-    apply_fn, lambda p, b: tinyml.task_loss(cfg, p, b), specs,
-    params, nas, lambda: data.batches(16), settings)
+eng = Engine.for_tinyml(cfg, settings, key=jax.random.PRNGKey(0))
+data = pipe.SyntheticTiny(cfg, n=128, seed=0)
+epochs = lambda: data.batches(16)
+
+# 2. Alg. 1 via the engine facade --------------------------------------------
+eng.search(epochs).finetune(epochs)
 print("search history:")
-for h in result.history:
+for h in eng.history:
     print("  ", h)
 
 # 3. learned assignment -------------------------------------------------------
 print("\nper-channel bit-widths (first FC layer):")
-site = sorted(result.nas)[0]
-bits = mp.argmax_weight_bits(result.nas[site]["gamma"], cfg.quant)
+site = sorted(eng.nas)[0]
+bits = mp.argmax_weight_bits(eng.nas[site]["gamma"], cfg.quant)
 uniq, counts = np.unique(np.asarray(bits), return_counts=True)
 print(f"  {site}: " + ", ".join(f"{c} ch @ {b}b"
                                 for b, c in zip(uniq, counts)))
-size_bits = reg.discrete_size_bits(result.nas, specs, cfg.quant)
+specs = eng.specs
+size_bits = reg.discrete_size_bits(eng.nas, specs, cfg.quant)
 print(f"  total model size: {size_bits / 8e3:.1f} KB "
       f"(all-8b baseline: {sum(s.weights_per_channel * s.c_out for s in specs.values()) / 1e3:.1f} KB)")
 
-# 4. deploy + verify -----------------------------------------------------------
-w = np.asarray(result.params[site]["w"])
-d = dpl.deploy_linear(w, np.asarray(result.nas[site]["gamma"]),
-                      np.asarray(result.params[site]["aw"]), None, 6.0,
-                      cfg.quant, align=1)
-frozen = mp.frozen_weight(jnp.asarray(w),
-                          jnp.asarray(result.nas[site]["gamma"]),
-                          jnp.asarray(result.params[site]["aw"]), cfg.quant)
-err = np.abs(dpl.dequantize_deployed(d) - np.asarray(frozen)).max()
-print(f"\ndeploy transform max |deployed - frozen| = {err:.2e} (lossless)")
-print(f"deployed groups: " + ", ".join(
-    f"{grp['packed'].shape[0]} rows @ {b}b" for b, grp in
-    sorted(d.groups.items())))
+# 4. deploy + serve + verify --------------------------------------------------
+eng.deploy(align=1)
+print(f"\ndeployed model: {eng.memory_bits() / 8e3:.1f} KB packed")
+qt = eng.deployed_params[site]["w"]
+print("deployed groups: " + ", ".join(
+    f"{n} rows @ {b}b" for b, n in sorted(qt.group_sizes.items())))
+
+batch = next(iter(data.batches(16, seed=7)))
+served = eng.serve(batch, backend="pallas")         # Pallas quant_matmul path
+frozen = eng.apply_fn(eng.params, eng.nas, PrecisionPolicy.FROZEN, batch)
+err = float(jnp.max(jnp.abs(served - frozen)))
+print(f"\n|served (deployed, Pallas) - frozen reference| max = {err:.2e}")

@@ -13,6 +13,7 @@ import sys
 import jax
 import numpy as np
 
+from repro.api import PrecisionPolicy
 from repro.core import edmips, regularizers as reg, search
 from repro.data import pipeline as pipe
 from repro.models import tinyml
@@ -34,7 +35,7 @@ for method, qcfg in [("channel-wise (ours)", edmips.channelwise_config()),
                             specs, params, nas, lambda: data.batches(16),
                             settings)
     scores = [float(tinyml.task_metric(
-        cfg, apply_fn(res.params, res.nas, res.tau, b, "frozen"), b))
+        cfg, apply_fn(res.params, res.nas, PrecisionPolicy.FROZEN, b), b))
         for b in data.batches(32, seed=7)]
     size = reg.discrete_size_bits(res.nas, specs, qcfg)
     energy = reg.discrete_energy(res.nas, specs, qcfg, "mpic")

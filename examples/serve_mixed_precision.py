@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.engine import ServingSession
 from repro.config import DeploySpec, get_config
 from repro.models import serving
 
@@ -39,22 +40,11 @@ B, S, GEN = 8, 48, 24
 rng = np.random.default_rng(0)
 batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
                                jnp.int32)}
-prefill = jax.jit(lambda d, b: serving.prefill(d, cfg, b))
-decode = jax.jit(lambda d, t, c, p: serving.decode_step(d, cfg, t, c, p),
-                 donate_argnums=(2,))
-
-logits, _ = prefill(dp_mixed, batch)
-caches = serving.init_caches(cfg, B, S + GEN)
-tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+sess = ServingSession(cfg, dp_mixed, backend="jnp")
 t0 = time.time()
-outs = [tok]
-for i in range(GEN):
-    logits, caches = decode(dp_mixed, tok, caches,
-                            jnp.asarray(S + i, jnp.int32))
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    outs.append(tok)
-jax.block_until_ready(tok)
+gen_ids, _ = sess.generate(batch, gen=GEN, max_len=S + GEN)
+jax.block_until_ready(gen_ids)
 dt = time.time() - t0
 print(f"decoded {GEN} steps x {B} requests in {dt:.2f}s "
-      f"({GEN * B / dt:.0f} tok/s)")
-print("generated ids (req 0):", np.asarray(jnp.concatenate(outs, 1))[0][:12])
+      f"({GEN * B / dt:.0f} tok/s, incl. prefill + compile)")
+print("generated ids (req 0):", np.asarray(gen_ids)[0][:12])

@@ -1,0 +1,32 @@
+"""`repro.api` — the typed surface of the mixed-precision system.
+
+One import gives every call surface the paper's method passes through:
+
+* :class:`PrecisionPolicy` / :class:`Phase` — typed phase dispatch (replaces
+  the old string ``mode`` argument everywhere);
+* :class:`QTensor` — the packed mixed-precision tensor pytree (replaces the
+  offline-only ``DeployedLinear``); flows through jit/vmap into the Pallas
+  kernels;
+* ``qlinear`` / ``qconv2d`` — the single quantization-aware layer entry
+  points (re-exported from models/layers.py), dispatching on the policy and
+  on whether the weight leaf is a float array or a QTensor;
+* :class:`Engine` — the search -> finetune -> deploy -> serve facade.
+
+See docs/api_migration.md for the old-API -> new-API mapping.
+"""
+from repro.api.engine import Engine
+from repro.api.policy import Phase, PrecisionPolicy, as_policy
+from repro.api.qtensor import QTensor
+
+
+def __getattr__(name):
+    # late-bound: models.layers imports repro.api.policy/qtensor, so the
+    # layer entry points re-export lazily to avoid a circular import.
+    if name in ("qlinear", "qconv2d"):
+        from repro.models import layers as L
+        return getattr(L, name)
+    raise AttributeError(name)
+
+
+__all__ = ["Engine", "Phase", "PrecisionPolicy", "QTensor", "as_policy",
+           "qlinear", "qconv2d"]

@@ -1,0 +1,219 @@
+"""`Engine` — the lifecycle facade over Alg. 1 + the Sec. III-C deploy.
+
+Examples and launchers used to hand-wire the phase transitions (warmup ->
+search -> fine-tune -> offline deploy -> serving loop).  The Engine owns one
+model's journey end-to-end:
+
+    eng = Engine.for_tinyml(tinyml.TINY_CONFIGS["dae-ad"], settings)
+    eng.search(data_epochs)          # Alg. 1 warmup + DNAS search
+    eng.finetune(data_epochs)        # Alg. 1 fine-tune (argmax frozen)
+    eng.deploy(align=1)              # every searched w -> QTensor (packed)
+    logits = eng.serve(batch, backend="pallas")   # jitted deployed forward
+
+``deploy`` rewrites the params tree in place of nothing: each NAS site's
+float master weight becomes a :class:`QTensor` (reordered, packed sub-byte,
+carrying the argmaxed activation quantization), everything else (biases,
+folded BN) is kept verbatim.  Because QTensor is a pytree, the deployed
+params tree jits/vmaps like the float one — ``serve`` is literally the same
+``apply_fn`` under ``PrecisionPolicy.deployed``.
+
+The search/finetune phases are model-agnostic (anything exposing
+``(init_fn, apply_fn, specs)`` + a loss works); ``deploy`` additionally
+requires a flat site-keyed params tree — ``Engine.for_tinyml`` wires the
+paper's MLPerf-Tiny models, which satisfy both.  Nested scan-stacked LM
+trees deploy per site via ``models.serving.deployed_from_search``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.policy import PrecisionPolicy
+from repro.api.qtensor import QTensor
+
+
+class Engine:
+    def __init__(self, init_fn: Callable, apply_fn: Callable, specs: dict,
+                 loss_fn: Callable, settings, quant_cfg, key=None):
+        from repro.core.search import SearchDriver
+        self.apply_fn = apply_fn
+        self.loss_fn = loss_fn
+        self.specs = specs
+        self.settings = settings
+        self.quant_cfg = quant_cfg
+        key = jax.random.PRNGKey(0) if key is None else key
+        params, nas = init_fn(key)
+        self.driver = SearchDriver(apply_fn, loss_fn, specs, params, nas,
+                                   settings)
+        self.deployed_params: Optional[dict] = None
+        self._serve_fn = None
+
+    @classmethod
+    def for_tinyml(cls, cfg, settings=None, key=None) -> "Engine":
+        """Engine over one MLPerf-Tiny task (models/tinyml.py)."""
+        from repro.core.search import SearchSettings
+        from repro.models import tinyml
+        init_fn, apply_fn, specs = tinyml.build(cfg)
+        settings = settings or SearchSettings(cfg=cfg.quant)
+        loss_fn = lambda pred, b: tinyml.task_loss(cfg, pred, b)
+        return cls(init_fn, apply_fn, specs, loss_fn, settings, cfg.quant,
+                   key=key)
+
+    # -- phase transitions ---------------------------------------------------
+    @property
+    def params(self) -> dict:
+        return self.driver.params
+
+    @property
+    def nas(self) -> dict:
+        return self.driver.nas
+
+    @property
+    def history(self) -> list:
+        return self.driver.history
+
+    def search(self, data_epochs: Callable[[], Iterable]) -> "Engine":
+        """Alg. 1 phases 1+2: QAT warmup then the DNAS search."""
+        self.driver.warmup(data_epochs)
+        self.driver.search(data_epochs)
+        return self
+
+    def finetune(self, data_epochs: Callable[[], Iterable],
+                 epochs: Optional[int] = None) -> "Engine":
+        """Alg. 1 phase 3: theta frozen (argmax), W trained."""
+        self.driver.finetune(data_epochs, epochs=epochs)
+        return self
+
+    def deploy(self, align: int = 1) -> dict:
+        """Sec. III-C offline transform: searched float weights -> QTensor.
+
+        Returns (and stores) the deployed params tree.  Channel order is
+        restored after each matmul (``restore_order=True``) so downstream
+        structure (BN, residuals, the next layer's c_in) is untouched.
+
+        Operates on **flat site-keyed params trees** (models/tinyml.py
+        style: ``params[site]["w"]`` with ``site in nas``).  Nested /
+        scan-stacked trees (models/transformer.py) deploy through
+        ``models.serving.deployed_from_search`` per site instead; passing
+        one here raises rather than silently serving float weights.
+        """
+        from repro.core import deploy as dpl
+        params, nas = self.driver.params, self.driver.nas
+        sites = [n for n in params if n in nas]
+        if not sites:
+            raise ValueError(
+                "no NAS site keys found at the top level of the params tree "
+                "— Engine.deploy expects a flat site-keyed model (tinyml); "
+                "nested trees must be deployed per site via "
+                "models.serving.deployed_from_search")
+        deployed = {}
+        for name, p in params.items():
+            if name in nas:
+                site_p = dict(p)
+                qt = dpl.deploy_linear(
+                    np.asarray(p["w"]), np.asarray(nas[name]["gamma"]),
+                    np.asarray(p["aw"]), np.asarray(nas[name]["delta"]),
+                    float(np.asarray(p["ax"])), self.quant_cfg, align=align,
+                    restore_order=True)
+                site_p["w"] = qt
+                site_p.pop("aw", None)
+                site_p.pop("ax", None)
+                deployed[name] = site_p
+            else:
+                deployed[name] = p
+        self.deployed_params = deployed
+        self._serve_fn = None
+        return deployed
+
+    def memory_bits(self) -> int:
+        """Deployed model size in bits (sum over QTensor leaves)."""
+        assert self.deployed_params is not None, "deploy() first"
+        total = 0
+        for p in self.deployed_params.values():
+            if isinstance(p, dict) and isinstance(p.get("w"), QTensor):
+                total += p["w"].memory_bits
+        return total
+
+    def serve(self, batch, backend: str = "pallas"):
+        """Jitted deployed forward (the Pallas quant_matmul path by default).
+
+        The first call compiles; subsequent calls with same-shaped batches
+        reuse the executable.
+        """
+        assert self.deployed_params is not None, "deploy() first"
+        if self._serve_fn is None or self._serve_backend != backend:
+            policy = PrecisionPolicy.deployed(backend)
+            self._serve_fn = jax.jit(
+                lambda dp, b: self.apply_fn(dp, None, policy, b))
+            self._serve_backend = backend
+        return self._serve_fn(self.deployed_params, batch)
+
+    def result(self):
+        return self.driver.result()
+
+
+class ServingSession:
+    """Batched prefill + decode over a deployed LM (models/serving.py).
+
+    Owns the jitted prefill/decode executables (decode donates its caches)
+    so launchers stop hand-wiring them:
+
+        sess = ServingSession(cfg, dparams, backend="jnp")
+        tokens = sess.generate(batch, gen=16, max_len=48)
+    """
+
+    def __init__(self, cfg, dparams, backend: str = "jnp"):
+        from repro.models import serving
+        self.cfg, self.dparams, self.backend = cfg, dparams, backend
+        self._serving = serving
+        self.prefill = jax.jit(
+            lambda dp, b: serving.prefill(dp, cfg, b, backend))
+        self.decode = jax.jit(
+            lambda dp, t, c, pos: serving.decode_step(dp, cfg, t, c, pos,
+                                                      backend),
+            donate_argnums=(2,))
+
+    def init_caches(self, batch: int, max_len: int):
+        return self._serving.init_caches(self.cfg, batch, max_len)
+
+    @staticmethod
+    def _embed_caches(prefill_caches, ring):
+        """Right-pad the S-deep prefill caches into the max_len ring.
+
+        Each leaf differs from its ring counterpart in at most the sequence
+        axis; zero-padding IS the empty-slot convention (decode masks by
+        position), so generation really attends to the prompt."""
+        def one(pc, full):
+            if pc.shape == full.shape:
+                return pc.astype(full.dtype)
+            diff = [i for i, (a, b) in enumerate(zip(pc.shape, full.shape))
+                    if a != b]
+            assert len(diff) == 1, (pc.shape, full.shape)
+            widths = [(0, 0)] * pc.ndim
+            widths[diff[0]] = (0, full.shape[diff[0]] - pc.shape[diff[0]])
+            return jnp.pad(pc, widths).astype(full.dtype)
+        return jax.tree_util.tree_map(one, prefill_caches, ring)
+
+    def generate(self, batch: dict, gen: int, max_len: Optional[int] = None):
+        """Greedy decode ``gen`` tokens after a full prefill.
+
+        Returns ``(tokens (B, gen+1), prefill_logits)``.  The prefill's
+        S-deep caches are padded into a ``max_len`` ring so every decode
+        step attends to the full prompt history.
+        """
+        B, S = batch["tokens"].shape
+        max_len = max_len or (S + gen)
+        prefill_logits, pf_caches = self.prefill(self.dparams, batch)
+        caches = self._embed_caches(pf_caches, self.init_caches(B, max_len))
+        tokens = jnp.argmax(prefill_logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tokens]
+        for i in range(gen):
+            logits, caches = self.decode(self.dparams, tokens, caches,
+                                         jnp.asarray(S + i, jnp.int32))
+            tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tokens)
+        return jnp.concatenate(out, axis=1), prefill_logits

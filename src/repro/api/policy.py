@@ -1,0 +1,105 @@
+"""`PrecisionPolicy` — the typed replacement for the stringly ``mode`` arg.
+
+One value describes which of the paper's phases a forward pass runs in and
+carries the phase's parameters:
+
+* ``PrecisionPolicy.FLOAT``            — no quantization (reference path)
+* ``PrecisionPolicy.QAT8``             — fixed 8-bit PACT QAT (warmup)
+* ``PrecisionPolicy.search(tau)``      — DNAS mixture, Eq. 4-6; ``tau`` is the
+  softmax temperature (a traced scalar — annealing does not retrace)
+* ``PrecisionPolicy.FROZEN``           — argmax assignment (fine-tuning)
+* ``PrecisionPolicy.deployed(backend)``— true-integer packed weights
+  (:class:`repro.api.qtensor.QTensor` leaves); ``backend`` picks the jnp
+  fallback or the Pallas ``quant_matmul`` kernel
+
+The policy is a registered pytree: the phase and backend are static aux data
+(so jitted functions specialize per phase — exactly like the old string, but
+typed) while ``tau`` is a leaf (so the annealed temperature flows through
+``jit`` without recompilation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Phase(enum.Enum):
+    FLOAT = "float"
+    QAT8 = "qat8"
+    SEARCH = "search"
+    FROZEN = "frozen"
+    DEPLOYED = "deployed"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    phase: Phase
+    tau: Optional[jnp.ndarray] = None   # SEARCH only
+    backend: str = "jnp"                # DEPLOYED only: "jnp" | "pallas"
+
+    # Singletons FLOAT / QAT8 / FROZEN / DEPLOYED for the parameter-free
+    # phases are assigned right below the class body.
+
+    @classmethod
+    def search(cls, tau) -> "PrecisionPolicy":
+        return cls(Phase.SEARCH, jnp.asarray(tau, jnp.float32))
+
+    @classmethod
+    def deployed(cls, backend: str = "jnp") -> "PrecisionPolicy":
+        assert backend in ("jnp", "pallas"), backend
+        return cls(Phase.DEPLOYED, backend=backend)
+
+    @property
+    def trains_nas(self) -> bool:
+        return self.phase is Phase.SEARCH
+
+    @property
+    def needs_nas(self) -> bool:
+        return self.phase in (Phase.SEARCH, Phase.FROZEN)
+
+    def __repr__(self) -> str:
+        if self.phase is Phase.SEARCH:
+            return "PrecisionPolicy.search(tau)"
+        if self.phase is Phase.DEPLOYED:
+            return f"PrecisionPolicy.deployed({self.backend!r})"
+        return f"PrecisionPolicy.{self.phase.name}"
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        if self.tau is None:
+            return (), (self.phase, False, self.backend)
+        return (self.tau,), (self.phase, True, self.backend)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        phase, has_tau, backend = aux
+        return cls(phase, children[0] if has_tau else None, backend)
+
+
+PrecisionPolicy.FLOAT = PrecisionPolicy(Phase.FLOAT)
+PrecisionPolicy.QAT8 = PrecisionPolicy(Phase.QAT8)
+PrecisionPolicy.FROZEN = PrecisionPolicy(Phase.FROZEN)
+PrecisionPolicy.DEPLOYED = PrecisionPolicy(Phase.DEPLOYED)
+
+
+def as_policy(mode, tau=None, backend: str = "jnp") -> PrecisionPolicy:
+    """Coerce a legacy string (or a policy) into a :class:`PrecisionPolicy`.
+
+    Exists for the migration guide / downstream callers; in-repo code passes
+    policies directly.  ``backend`` applies to ``"deployed"`` only.
+    """
+    if isinstance(mode, PrecisionPolicy):
+        return mode
+    phase = Phase(mode)
+    if phase is Phase.SEARCH:
+        if tau is None:
+            raise ValueError("search policy requires tau")
+        return PrecisionPolicy.search(tau)
+    if phase is Phase.DEPLOYED:
+        return PrecisionPolicy.deployed(backend)
+    return PrecisionPolicy(phase)

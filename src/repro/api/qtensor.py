@@ -1,0 +1,192 @@
+"""`QTensor` — one typed, jit/vmap-capable mixed-precision tensor.
+
+The Sec. III-C deploy transform of a searched linear map produces, per
+weight, up to |P_W| fixed-precision channel groups (channels reordered so
+each group is contiguous), packed sub-byte into uint8.  ``QTensor`` carries
+exactly that:
+
+* ``packed``   — tuple of ``(rows_b, ceil(c_in * b / 8))`` uint8 arrays, one
+  per non-empty precision group, ascending bit-width;
+* ``scales``   — tuple of ``(rows_b,)`` float32 per-channel dequant steps;
+* ``inv_perm`` — ``(c_out,)`` int32 restoring the canonical output channel
+  order; the static ``restore_order`` flag says whether ``matmul`` applies
+  it (when False the consumer instead permutes the next layer's ``c_in`` —
+  the paper's Fig. 2 transform, see
+  :func:`repro.core.deploy.propagate_perm`);
+* static aux: the ``bits`` tuple, logical ``(c_out, c_in)``, the layer-wise
+  activation quantization (``act_bits``/``act_scale``) and, for convolution
+  weights, the original kernel tail shape.
+
+Because it is a **registered pytree** (arrays are leaves, geometry is aux
+data), a whole deployed model is just a params tree with ``QTensor`` leaves:
+it flows through ``jax.jit`` / ``jax.vmap`` / ``device_put`` unchanged, and
+``matmul`` routes each precision group through the Pallas
+``quant_matmul`` kernel (``backend="pallas"``) or the jnp fallback.
+
+This replaces the old offline-only ``core.deploy.DeployedLinear`` numpy
+holder; the search-time, fine-tune, and serving paths now share one type.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantizers as qz
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    packed: tuple                 # tuple[jnp.ndarray] uint8, per group
+    scales: tuple                 # tuple[jnp.ndarray] f32,  per group
+    inv_perm: Optional[jnp.ndarray]   # (c_out,) i32; None = identity
+    bits: tuple                   # static: ascending bit-widths, len==len(packed)
+    c_out: int
+    c_in: int                     # logical contraction dim (pre-padding)
+    act_bits: int = 8
+    act_scale: float = 1.0
+    kernel_shape: Optional[tuple] = None   # conv tail (c_in/g, kh, kw)
+    restore_order: bool = True    # matmul outputs canonical channel order
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten_with_keys(self):
+        children = (
+            (jax.tree_util.GetAttrKey("packed"), self.packed),
+            (jax.tree_util.GetAttrKey("scales"), self.scales),
+            (jax.tree_util.GetAttrKey("inv_perm"), self.inv_perm),
+        )
+        aux = (self.bits, self.c_out, self.c_in, self.act_bits,
+               self.act_scale, self.kernel_shape, self.restore_order)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales, inv_perm = children
+        return cls(packed, scales, inv_perm, *aux)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_assignment(cls, w, bits_per_channel, alpha_w,
+                        bitwidths=(2, 4, 8), align: int = 1,
+                        restore_order: bool = True,
+                        act_bits: int = 8, act_scale: float = 1.0
+                        ) -> "QTensor":
+        """Pack a float weight under an explicit per-channel assignment.
+
+        ``w`` is ``(c_out, ...)``; trailing dims flatten into the contraction
+        axis (conv kernels keep their tail shape for ``dense()``).
+        """
+        from repro.core import deploy as dpl   # local: avoid import cycle
+        w = np.asarray(w, np.float32)
+        kernel_shape = tuple(w.shape[1:]) if w.ndim > 2 else None
+        w2 = w.reshape(w.shape[0], -1)
+        c_out, c_in = w2.shape
+        bits_per_channel = np.asarray(bits_per_channel)
+        alpha = np.asarray(alpha_w, np.float32)
+        if alpha.ndim == 0:
+            alpha = np.broadcast_to(alpha, (c_out,)).copy()
+        perm, sizes = dpl.group_channels(bits_per_channel, bitwidths,
+                                         align=align)
+        packed, scales, used_bits = [], [], []
+        offset = 0
+        for b in sorted(bitwidths):
+            n = sizes[b]
+            if n == 0:
+                continue
+            idx = perm[offset: offset + n]
+            offset += n
+            q, step = qz.quantize_weight_int(
+                jnp.asarray(w2[idx]), jnp.asarray(alpha[idx][:, None]), b)
+            q = np.asarray(q)
+            f = qz.pack_factor(b)
+            if c_in % f:
+                q = np.pad(q, ((0, 0), (0, f - c_in % f)))
+            packed.append(jnp.asarray(qz.pack_int(jnp.asarray(q), b)))
+            scales.append(jnp.asarray(step).reshape(-1).astype(jnp.float32))
+            used_bits.append(b)
+        inv_perm = jnp.asarray(np.argsort(perm), jnp.int32)
+        return cls(tuple(packed), tuple(scales), inv_perm,
+                   tuple(used_bits), c_out, c_in,
+                   act_bits=act_bits, act_scale=act_scale,
+                   kernel_shape=kernel_shape, restore_order=restore_order)
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def group_sizes(self) -> dict:
+        return {b: p.shape[-2] for b, p in zip(self.bits, self.packed)}
+
+    @property
+    def perm(self) -> np.ndarray:
+        """Deployed channel order (original index per deployed row)."""
+        if self.inv_perm is None:
+            return np.arange(self.c_out)
+        return np.argsort(np.asarray(self.inv_perm))
+
+    @property
+    def memory_bits(self) -> int:
+        """Deployed model-size contribution in bits (the Pareto x-axis)."""
+        return sum(int(p.size) * 8 for p in self.packed)
+
+    # -- compute ------------------------------------------------------------
+    def _dequantize_groups(self) -> jnp.ndarray:
+        """Float weight stack in **deployed** (group-contiguous) order."""
+        outs = []
+        for b, p, s in zip(self.bits, self.packed, self.scales):
+            w_int = qz.unpack_int(p, b)[..., : self.c_in]
+            outs.append(w_int.astype(jnp.float32) * s[..., None])
+        return jnp.concatenate(outs, axis=-2) if len(outs) > 1 else outs[0]
+
+    def dequantize_canonical(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Float ``(c_out, c_in)`` in canonical channel order regardless of
+        ``restore_order`` — the analysis/reference view (tests, Pareto)."""
+        w = self._dequantize_groups()
+        if self.inv_perm is not None:
+            w = jnp.take(w, self.inv_perm, axis=-2)
+        return w.astype(dtype)
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Float ``(c_out, c_in)`` view in the same channel order ``matmul``
+        produces: canonical when ``restore_order`` (the default), deployed
+        (group-contiguous) otherwise — so dense-view consumers always agree
+        with the packed runtime path."""
+        w = self._dequantize_groups()
+        if self.restore_order and self.inv_perm is not None:
+            w = jnp.take(w, self.inv_perm, axis=-2)
+        return w.astype(dtype)
+
+    def dense(self, dtype=jnp.float32) -> jnp.ndarray:
+        """``dequantize`` with the conv kernel tail restored."""
+        w = self.dequantize(dtype)
+        if self.kernel_shape is not None:
+            w = w.reshape((self.c_out,) + self.kernel_shape)
+        return w
+
+    def matmul(self, x: jnp.ndarray, compute_dtype=jnp.float32,
+               backend: str = "jnp") -> jnp.ndarray:
+        """``x (..., c_in) -> (..., c_out)``: per-precision sub-GEMMs whose
+        outputs concatenate (the paper's parallel sub-convolutions), then the
+        canonical-order restore when ``restore_order``.  ``backend="pallas"``
+        runs each sub-GEMM through the fused unpack+dequant+GEMM kernel
+        (kernels/quant_matmul.py); this method owns the concat/restore so the
+        two backends cannot drift."""
+        if backend == "pallas":
+            from repro.kernels import ops as kops
+
+            def gemm(b, p, s):
+                return kops.quant_matmul(x, p, s, b, self.c_in, compute_dtype)
+        else:
+            def gemm(b, p, s):
+                w_int = qz.unpack_int(p, b)[..., : self.c_in]
+                w = (w_int.astype(jnp.float32)
+                     * s[..., None]).astype(compute_dtype)
+                return jnp.einsum("...i,oi->...o", x.astype(compute_dtype), w)
+        outs = [gemm(b, p, s)
+                for b, p, s in zip(self.bits, self.packed, self.scales)]
+        y = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+        if self.restore_order and self.inv_perm is not None:
+            y = jnp.take(y, self.inv_perm, axis=-1)
+        return y

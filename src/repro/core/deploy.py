@@ -1,4 +1,4 @@
-"""Deployment transform (Sec. III-C) — TPU-adapted.
+"""Deployment transform (Sec. III-C) — TPU-adapted, producing ``QTensor``.
 
 The paper's offline pipeline for a searched layer:
 
@@ -6,7 +6,8 @@ The paper's offline pipeline for a searched layer:
 2. **reorder** the filters, grouping channels by bit-width (this permutes the
    layer's output channels);
 3. **propagate** the permutation to the *next* layer's C_in axis so every
-   weight still multiplies the right activation;
+   weight still multiplies the right activation (or carry ``inv_perm`` and
+   restore canonical order after the matmul — structurally equivalent);
 4. **split** the layer into |P_W| fixed-precision sub-layers whose outputs
    concatenate (activations are layer-wise quantized, so concat is free).
 
@@ -15,44 +16,26 @@ multiples of the 128-wide lane dimension, so after grouping we *promote* up to
 127 channels per boundary to the next-higher precision to round group sizes up
 to 128 (promotion is upward only — it can only add representational power, so
 accuracy is never hurt; memory cost of padding is <= (|P_W|-1)*127 channels).
-The resulting per-precision groups are packed sub-byte (int2 x4 / int4 x2 per
-byte) for HBM storage and consumed by kernels/quant_matmul.py as up to three
-dense sub-GEMMs — the direct analogue of the paper's three sub-convolutions.
 
-Everything here is offline/one-time (numpy-style, outside jit), exactly as in
-the paper ("performed offline and does not have run-time overheads").
+The output of :func:`deploy_linear` is a :class:`repro.api.qtensor.QTensor` —
+a registered pytree carrying the packed sub-byte groups, per-channel scales
+and the channel permutation.  Unlike the numpy ``DeployedLinear`` it
+replaces, a ``QTensor`` flows straight through ``jax.jit``/``jax.vmap`` into
+the Pallas ``quant_matmul`` kernels, so the same object serves offline
+analysis (``memory_bits``) and the production serving path
+(models/serving.py).  The grouping itself stays offline/one-time, exactly as
+in the paper ("performed offline and does not have run-time overheads").
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api.qtensor import QTensor
 from repro.core import mixedprec as mp
 from repro.core import quantizers as qz
-
-
-@dataclasses.dataclass
-class DeployedLinear:
-    """One searched linear map after the deploy transform.
-
-    ``groups`` maps bit-width -> dict with:
-       packed   (c_group, c_in // pack_factor) uint8   packed weight rows
-       scale    (c_group,) float32                     per-channel dequant step
-    ``perm`` is the channel permutation applied to the output (original index
-    of each deployed output channel) — the *next* layer's C_in must be
-    permuted with it; ``inv_perm`` undoes it for the final layer.
-    ``act_bits``/``act_scale`` give the layer-wise activation quantization.
-    """
-    groups: dict
-    perm: np.ndarray
-    inv_perm: np.ndarray
-    act_bits: int
-    act_scale: float
-    c_out: int
-    c_in: int
 
 
 def group_channels(bits_per_channel: np.ndarray,
@@ -93,56 +76,33 @@ def group_channels(bits_per_channel: np.ndarray,
 
 
 def deploy_linear(w: np.ndarray, gamma: np.ndarray, alpha_w: np.ndarray,
-                  delta: np.ndarray, alpha_x: float,
-                  cfg: mp.MixedPrecConfig, align: int = 1) -> DeployedLinear:
-    """Full Sec. III-C transform for one linear map ``w`` of shape (c_out, c_in)."""
+                  delta: Optional[np.ndarray], alpha_x: float,
+                  cfg: mp.MixedPrecConfig, align: int = 1,
+                  restore_order: bool = True) -> QTensor:
+    """Full Sec. III-C transform of one searched map ``w`` -> ``QTensor``.
+
+    ``w`` is ``(c_out, ...)`` (trailing dims flatten into the contraction
+    axis; conv kernels keep their tail shape inside the QTensor).  With
+    ``restore_order=False`` the QTensor keeps deployed channel order and the
+    caller must permute the next layer's ``c_in`` with ``.perm``
+    (:func:`propagate_perm`).
+    """
     w = np.asarray(w, dtype=np.float32)
-    c_out, c_in = w.shape
+    c_out = w.shape[0]
     g = np.asarray(gamma).reshape(-1, np.asarray(gamma).shape[-1])
     bits = np.asarray(mp.argmax_weight_bits(jnp.asarray(g), cfg))
     if bits.shape[0] == 1:
         bits = np.broadcast_to(bits, (c_out,)).copy()
-    perm, sizes = group_channels(bits, cfg.weight_bits, align=align)
-    alpha = np.asarray(alpha_w, dtype=np.float32)
-    if alpha.ndim == 0:
-        alpha = np.broadcast_to(alpha, (c_out,)).copy()
-
-    groups = {}
-    offset = 0
-    for b in sorted(cfg.weight_bits):
-        n = sizes[b]
-        if n == 0:
-            continue
-        idx = perm[offset: offset + n]
-        offset += n
-        wq, scale = qz.quantize_weight_int(
-            jnp.asarray(w[idx]), jnp.asarray(alpha[idx][:, None]), b)
-        wq = np.asarray(wq)
-        f = qz.pack_factor(b)
-        if c_in % f:
-            pad = f - c_in % f
-            wq = np.pad(wq, ((0, 0), (0, pad)))
-        packed = np.asarray(qz.pack_int(jnp.asarray(wq), b))
-        groups[b] = {
-            "packed": packed,
-            "scale": np.asarray(scale).reshape(-1),
-            "rows": idx,
-        }
 
     if delta is None:
         act_bits = cfg.fixed_act_bits
     else:
         act_bits = int(np.asarray(mp.argmax_act_bits(jnp.asarray(delta), cfg)))
     levels = (1 << act_bits) - 1
-    return DeployedLinear(
-        groups=groups,
-        perm=perm,
-        inv_perm=np.argsort(perm),
-        act_bits=act_bits,
-        act_scale=float(max(alpha_x, 1e-6)) / levels,
-        c_out=c_out,
-        c_in=c_in,
-    )
+    return QTensor.from_assignment(
+        w, bits, np.asarray(alpha_w, np.float32),
+        bitwidths=cfg.weight_bits, align=align, restore_order=restore_order,
+        act_bits=act_bits, act_scale=float(max(alpha_x, 1e-6)) / levels)
 
 
 def propagate_perm(next_w: np.ndarray, perm: np.ndarray) -> np.ndarray:
@@ -151,20 +111,16 @@ def propagate_perm(next_w: np.ndarray, perm: np.ndarray) -> np.ndarray:
     return np.asarray(next_w)[:, perm]
 
 
-def dequantize_deployed(d: DeployedLinear) -> np.ndarray:
-    """Reconstruct the float weight matrix (deployed channel order undone).
+def dequantize_deployed(qt: QTensor) -> np.ndarray:
+    """Reconstruct the float weight matrix (canonical channel order).
 
     Used by tests to assert the deploy transform is lossless w.r.t. the
-    frozen (argmax) fake-quantized weights.
+    frozen (argmax) fake-quantized weights — canonical channel order even
+    for ``restore_order=False`` tensors.
     """
-    out = np.zeros((d.c_out, d.c_in), dtype=np.float32)
-    for b, grp in d.groups.items():
-        unpacked = np.asarray(qz.unpack_int(jnp.asarray(grp["packed"]), b))
-        unpacked = unpacked[:, : d.c_in]
-        out[grp["rows"]] = unpacked.astype(np.float32) * grp["scale"][:, None]
-    return out
+    return np.asarray(qt.dequantize_canonical(jnp.float32))
 
 
-def memory_bits(d: DeployedLinear) -> int:
+def memory_bits(qt: QTensor) -> int:
     """Deployed model-size contribution in bits (the Pareto x-axis)."""
-    return sum(grp["packed"].size * 8 for grp in d.groups.values())
+    return qt.memory_bits

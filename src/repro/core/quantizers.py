@@ -138,16 +138,18 @@ def pack_int(q: jnp.ndarray, bits: int) -> jnp.ndarray:
     mask = (1 << bits) - 1
     u = (q.astype(jnp.int32) & mask).astype(jnp.uint8)
     u = u.reshape(*q.shape[:-1], q.shape[-1] // f, f)
-    shifts = jnp.arange(f, dtype=jnp.uint8) * bits
-    return jnp.bitwise_or.reduce(
-        (u << shifts).astype(jnp.uint8), axis=-1
-    ) if hasattr(jnp.bitwise_or, "reduce") else _pack_fold(u, shifts)
+    return _pack_fold(u, bits)
 
 
-def _pack_fold(u: jnp.ndarray, shifts: jnp.ndarray) -> jnp.ndarray:
+def _pack_fold(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """OR-fold the trailing pack axis of unsigned lanes into single bytes.
+
+    Value ``j`` of byte ``b`` sits at bit ``j * bits`` — the layout
+    ``unpack_int`` and the Pallas kernel's in-VMEM unpack both assume.
+    """
     out = jnp.zeros(u.shape[:-1], dtype=jnp.uint8)
     for i in range(u.shape[-1]):
-        out = out | (u[..., i] << shifts[i]).astype(jnp.uint8)
+        out = out | (u[..., i] << jnp.uint8(i * bits)).astype(jnp.uint8)
     return out
 
 

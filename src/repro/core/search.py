@@ -11,12 +11,18 @@ Phases (Sec. III-B):
 
 The module is model-agnostic: models expose
 
-    apply_fn(params, nas, tau, batch, mode) -> predictions
+    apply_fn(params, nas, policy, batch) -> predictions
 
-with ``mode`` in {"float", "qat8", "search", "frozen"} and a ``specs`` dict
-(LayerCostSpec per NAS layer).  The EdMIPS baseline (core/edmips.py) reuses
-this exact loop with layer-wise gamma — the paper runs both under *identical*
-training protocols for fairness (Sec. IV-B), and so do we.
+with ``policy`` a :class:`repro.api.PrecisionPolicy` (QAT8 during warmup,
+search(tau) during the search, FROZEN during fine-tuning) and a ``specs``
+dict (LayerCostSpec per NAS layer).  The EdMIPS baseline (core/edmips.py)
+reuses this exact loop with layer-wise gamma — the paper runs both under
+*identical* training protocols for fairness (Sec. IV-B), and so do we.
+
+:class:`SearchDriver` exposes the phases individually (warmup / search /
+finetune share one pair of optimizer states), which is what the
+``repro.api.Engine`` facade drives; :func:`run_search` composes all three
+for one-shot callers.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ from typing import Callable, Iterable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import PrecisionPolicy
 from repro.core import mixedprec as mp
 from repro.core import regularizers as reg
 from repro.optim import optimizers as opt_mod
@@ -57,116 +64,167 @@ class SearchResult:
     settings: SearchSettings
 
 
-def _make_steps(apply_fn: Callable, loss_fn: Callable, specs: dict,
-                s: SearchSettings):
-    """Build the three jitted step functions once per search."""
-    opt_w = opt_mod.AdamW(schedule=opt_mod.constant_schedule(s.lr_w),
-                          clip_norm=1.0)
-    opt_t = opt_mod.AdamW(schedule=opt_mod.constant_schedule(s.lr_theta),
-                          clip_norm=None)
+class SearchDriver:
+    """Stateful Alg. 1 executor: one optimizer pair across all phases.
 
-    @jax.jit
-    def warmup_step(params, ow, step, batch):
-        def lt(p):
-            pred = apply_fn(p, None, jnp.asarray(s.cfg.tau0), batch, "qat8")
-            return loss_fn(pred, batch)
-        loss, grads = jax.value_and_grad(lt)(params)
-        upd, ow = opt_w.update(grads, ow, params, step)
-        return opt_mod.apply_updates(params, upd), ow, loss
+    ``data_epochs()`` returns a fresh iterable of batches for one epoch (the
+    caller controls batching/sharding/shuffling).  Phases may be driven
+    individually (the Engine facade does) or via :func:`run_search`.
+    """
 
-    @jax.jit
-    def theta_step(params, nas, tau, ot, step, batch):
-        def lfull(n):
-            pred = apply_fn(params, n, tau, batch, "search")
-            lt = loss_fn(pred, batch)
-            lr = reg.total_cost(n, tau, specs, s.cfg, s.objective, s.lut_name)
-            return lt + s.lam * lr, (lt, lr)
-        (loss, (lt, lr)), grads = jax.value_and_grad(lfull, has_aux=True)(nas)
-        upd, ot = opt_t.update(grads, ot, nas, step)
-        return opt_mod.apply_updates(nas, upd), ot, lt, lr
+    def __init__(self, apply_fn: Callable, loss_fn: Callable, specs: dict,
+                 params: dict, nas: dict, settings: SearchSettings):
+        s = settings
+        self.apply_fn, self.loss_fn, self.specs = apply_fn, loss_fn, specs
+        self.settings = s
+        self.params, self.nas = params, nas
+        self.tau = jnp.asarray(s.cfg.tau0, jnp.float32)
+        self.history: list = []
+        self.step = 0
 
-    @jax.jit
-    def w_step(params, nas, tau, ow, step, batch):
-        def lt(p):
-            pred = apply_fn(p, nas, tau, batch, "search")
-            return loss_fn(pred, batch)
-        loss, grads = jax.value_and_grad(lt)(params)
-        upd, ow = opt_w.update(grads, ow, params, step)
-        return opt_mod.apply_updates(params, upd), ow, loss
+        opt_w = opt_mod.AdamW(schedule=opt_mod.constant_schedule(s.lr_w),
+                              clip_norm=1.0)
+        opt_t = opt_mod.AdamW(schedule=opt_mod.constant_schedule(s.lr_theta),
+                              clip_norm=None)
+        self._opt_w, self._opt_t = opt_w, opt_t
+        self._ow = opt_w.init(params)
+        self._ot = opt_t.init(nas)
 
-    @jax.jit
-    def finetune_step(params, nas, ow, step, batch):
-        def lt(p):
-            pred = apply_fn(p, nas, jnp.asarray(1.0), batch, "frozen")
-            return loss_fn(pred, batch)
-        loss, grads = jax.value_and_grad(lt)(params)
-        upd, ow = opt_w.update(grads, ow, params, step)
-        return opt_mod.apply_updates(params, upd), ow, loss
+        @jax.jit
+        def warmup_step(params, ow, step, batch):
+            def lt(p):
+                pred = apply_fn(p, None, PrecisionPolicy.QAT8, batch)
+                return loss_fn(pred, batch)
+            loss, grads = jax.value_and_grad(lt)(params)
+            upd, ow = opt_w.update(grads, ow, params, step)
+            return opt_mod.apply_updates(params, upd), ow, loss
 
-    return opt_w, opt_t, warmup_step, theta_step, w_step, finetune_step
+        @jax.jit
+        def theta_step(params, nas, tau, ot, step, batch):
+            def lfull(n):
+                pred = apply_fn(params, n, PrecisionPolicy.search(tau), batch)
+                lt = loss_fn(pred, batch)
+                lr = reg.total_cost(n, tau, specs, s.cfg, s.objective,
+                                    s.lut_name)
+                return lt + s.lam * lr, (lt, lr)
+            (_, (lt, lr)), grads = jax.value_and_grad(
+                lfull, has_aux=True)(nas)
+            upd, ot = opt_t.update(grads, ot, nas, step)
+            return opt_mod.apply_updates(nas, upd), ot, lt, lr
+
+        @jax.jit
+        def w_step(params, nas, tau, ow, step, batch):
+            def lt(p):
+                pred = apply_fn(p, nas, PrecisionPolicy.search(tau), batch)
+                return loss_fn(pred, batch)
+            loss, grads = jax.value_and_grad(lt)(params)
+            upd, ow = opt_w.update(grads, ow, params, step)
+            return opt_mod.apply_updates(params, upd), ow, loss
+
+        @jax.jit
+        def finetune_step(params, nas, ow, step, batch):
+            def lt(p):
+                pred = apply_fn(p, nas, PrecisionPolicy.FROZEN, batch)
+                return loss_fn(pred, batch)
+            loss, grads = jax.value_and_grad(lt)(params)
+            upd, ow = opt_w.update(grads, ow, params, step)
+            return opt_mod.apply_updates(params, upd), ow, loss
+
+        self._warmup_step, self._theta_step = warmup_step, theta_step
+        self._w_step, self._finetune_step = w_step, finetune_step
+
+    # -- Phase 1: warmup (Alg. 1 l.1-2) -------------------------------------
+    def warmup(self, data_epochs: Callable[[], Iterable],
+               epochs: Optional[int] = None) -> "SearchDriver":
+        for ep in range(self.settings.warmup_epochs if epochs is None
+                        else epochs):
+            loss = None
+            for batch in data_epochs():
+                self.params, self._ow, loss = self._warmup_step(
+                    self.params, self._ow, jnp.asarray(self.step), batch)
+                self.step += 1
+            entry = {"phase": "warmup", "epoch": ep}
+            if loss is not None:     # guard: epoch may yield zero batches
+                entry["loss"] = float(loss)
+            self.history.append(entry)
+        return self
+
+    # -- Phase 2: search (Alg. 1 l.3-8) --------------------------------------
+    def search(self, data_epochs: Callable[[], Iterable],
+               epochs: Optional[int] = None) -> "SearchDriver":
+        s = self.settings
+        best_cost, stall = None, 0
+        for ep in range(s.search_epochs if epochs is None else epochs):
+            batches = list(data_epochs())
+            lt = lr = loss = None
+            n_theta = min(len(batches),
+                          max(1, int(len(batches) * s.theta_frac)))
+            for batch in batches[:n_theta]:         # 20%: update theta
+                self.nas, self._ot, lt, lr = self._theta_step(
+                    self.params, self.nas, self.tau, self._ot,
+                    jnp.asarray(self.step), batch)
+                self.step += 1
+            for batch in batches[n_theta:]:         # 80%: update W
+                self.params, self._ow, loss = self._w_step(
+                    self.params, self.nas, self.tau, self._ow,
+                    jnp.asarray(self.step), batch)
+                self.step += 1
+            self.tau = mp.anneal_tau(self.tau, s.cfg)        # Alg. 1 l.8
+            entry = {"phase": "search", "epoch": ep, "tau": float(self.tau)}
+            if lt is not None:       # guard: short/empty epochs write no
+                entry["task_loss"] = float(lt)       # stale loss values
+            if lr is not None:
+                entry["reg_cost"] = float(lr)
+            self.history.append(entry)
+            if lr is None:
+                continue             # nothing to early-stop on
+            cost = float(lr)
+            if best_cost is not None and \
+                    cost >= best_cost * (1 - s.early_stop_rtol):
+                stall += 1
+                if stall >= s.early_stop_patience:
+                    break
+            else:
+                best_cost, stall = cost, 0
+        return self
+
+    # -- Phase 3: fine-tune (Alg. 1 l.9-11) ----------------------------------
+    def finetune(self, data_epochs: Callable[[], Iterable],
+                 epochs: Optional[int] = None,
+                 eval_fn: Optional[Callable] = None) -> "SearchDriver":
+        for ep in range(self.settings.finetune_epochs if epochs is None
+                        else epochs):
+            loss = None
+            for batch in data_epochs():
+                self.params, self._ow, loss = self._finetune_step(
+                    self.params, self.nas, self._ow,
+                    jnp.asarray(self.step), batch)
+                self.step += 1
+            entry = {"phase": "finetune", "epoch": ep}
+            if loss is not None:
+                entry["loss"] = float(loss)
+            if eval_fn is not None:
+                entry["metric"] = float(eval_fn(self.params, self.nas,
+                                                PrecisionPolicy.FROZEN))
+            self.history.append(entry)
+        return self
+
+    def result(self) -> SearchResult:
+        return SearchResult(params=self.params, nas=self.nas, tau=self.tau,
+                            history=self.history, settings=self.settings)
 
 
 def run_search(apply_fn: Callable, loss_fn: Callable, specs: dict,
                params: dict, nas: dict, data_epochs: Callable[[], Iterable],
                settings: SearchSettings,
                eval_fn: Optional[Callable] = None) -> SearchResult:
-    """Execute Alg. 1 end to end.
+    """Execute Alg. 1 end to end (warmup -> search -> fine-tune).
 
-    ``data_epochs()`` returns a fresh iterable of batches for one epoch (the
-    caller controls batching/sharding/shuffling).  ``eval_fn(params, nas,
-    tau, mode)`` optionally reports a validation metric into the history.
+    ``eval_fn(params, nas, policy)`` optionally reports a validation metric
+    into the fine-tune history entries.
     """
-    s = settings
-    opt_w, opt_t, warmup_step, theta_step, w_step, finetune_step = _make_steps(
-        apply_fn, loss_fn, specs, s)
-
-    ow = opt_w.init(params)
-    ot = opt_t.init(nas)
-    tau = jnp.asarray(s.cfg.tau0, jnp.float32)
-    history = []
-    step = 0
-
-    # -- Phase 1: warmup (Alg. 1 l.1-2) -------------------------------------
-    for ep in range(s.warmup_epochs):
-        for batch in data_epochs():
-            params, ow, loss = warmup_step(params, ow, jnp.asarray(step), batch)
-            step += 1
-        history.append({"phase": "warmup", "epoch": ep, "loss": float(loss)})
-
-    # -- Phase 2: search (Alg. 1 l.3-8) --------------------------------------
-    best_cost, stall = None, 0
-    for ep in range(s.search_epochs):
-        batches = list(data_epochs())
-        n_theta = max(1, int(len(batches) * s.theta_frac))
-        for batch in batches[:n_theta]:         # 20%: update theta
-            nas, ot, lt, lr = theta_step(params, nas, tau, ot,
-                                         jnp.asarray(step), batch)
-            step += 1
-        for batch in batches[n_theta:]:         # 80%: update W
-            params, ow, loss = w_step(params, nas, tau, ow,
-                                      jnp.asarray(step), batch)
-            step += 1
-        tau = mp.anneal_tau(tau, s.cfg)          # Alg. 1 l.8
-        cost = float(lr)
-        history.append({"phase": "search", "epoch": ep, "task_loss": float(lt),
-                        "reg_cost": cost, "tau": float(tau)})
-        if best_cost is not None and cost >= best_cost * (1 - s.early_stop_rtol):
-            stall += 1
-            if stall >= s.early_stop_patience:
-                break
-        else:
-            best_cost, stall = cost, 0
-
-    # -- Phase 3: fine-tune (Alg. 1 l.9-11) ----------------------------------
-    for ep in range(s.finetune_epochs):
-        for batch in data_epochs():
-            params, ow, loss = finetune_step(params, nas, ow,
-                                             jnp.asarray(step), batch)
-            step += 1
-        entry = {"phase": "finetune", "epoch": ep, "loss": float(loss)}
-        if eval_fn is not None:
-            entry["metric"] = float(eval_fn(params, nas, tau, "frozen"))
-        history.append(entry)
-
-    return SearchResult(params=params, nas=nas, tau=tau, history=history,
-                        settings=s)
+    driver = SearchDriver(apply_fn, loss_fn, specs, params, nas, settings)
+    driver.warmup(data_epochs)
+    driver.search(data_epochs)
+    driver.finetune(data_epochs, eval_fn=eval_fn)
+    return driver.result()

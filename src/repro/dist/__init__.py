@@ -1,0 +1,1 @@
+"""Distribution utilities: sharding-rules engine and fault machinery."""

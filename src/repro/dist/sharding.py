@@ -1,0 +1,221 @@
+"""Sharding-rules engine: parameter-path -> PartitionSpec mapping.
+
+One declarative rule table maps every leaf of the train / serve state trees
+onto the (data, model) mesh (launch/mesh.py):
+
+* **column-parallel** weights ``(c_out, c_in)`` put c_out on ``model``; the
+  c_in axis is FSDP-sharded on ``data`` only when the leaf is large enough
+  (> ``fsdp_min_size`` elements) for the gather to amortize.
+* **row-parallel** weights (``w_down``/``wo``/``out_proj`` — the projections
+  whose *input* is already model-sharded) put c_in on ``model`` and FSDP
+  c_out on ``data``.
+* **MoE expert** stacks ``(L, E, c_out, c_in)`` put experts on ``model``
+  (expert parallelism) and c_in on ``data``.
+* **KV caches** ``(..., B, H, S, hd)`` put batch on ``data`` and heads on
+  ``model`` (right-aligned so leading layer-stack axes replicate).
+* everything that matches no rule (NAS gammas, norms, scales, biases,
+  scalars) replicates.
+
+Every assignment passes a **divisibility gate**: an axis whose extent the
+mesh-axis size does not divide falls back to replicated on that axis (the
+Megatron vocab-padding story makes the fallback rare in practice), and the
+decision is recorded in ``self.decisions`` for ``explain()``.
+
+``constrain`` is the in-model activation annotation: a no-op unless an
+``activation_sharding(mesh)`` context is active, so pure-CPU tests and
+single-device smoke runs never touch collectives.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Axis tokens used by the in-model ``constrain`` calls.
+_AXIS_OF = {"D": "data", "M": "model", None: None}
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    """Enable ``constrain`` annotations for code run inside this context."""
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def constrain(x, *tokens):
+    """Annotate intermediate ``x`` with a (data/model) layout.
+
+    ``tokens`` are per-axis: "D" -> data, "M" -> model, None -> replicated.
+    Outside an ``activation_sharding`` context this is the identity, so model
+    code can annotate unconditionally.
+    """
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    assert len(tokens) == x.ndim, (tokens, x.shape)
+    spec = []
+    for tok, extent in zip(tokens, x.shape):
+        ax = _AXIS_OF[tok]
+        if ax is not None and extent % mesh.shape[ax] == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+@dataclasses.dataclass
+class Decision:
+    path: str
+    shape: tuple
+    spec: P
+    note: str
+
+
+# Names whose *input* axis is model-sharded (output of a column-parallel
+# projection feeds them): shard c_in on model, c_out on data (FSDP).
+_ROW_PARALLEL = ("w_down", "wo", "out_proj")
+# Stacked MoE expert weights: (L, E, c_out, c_in).
+_EXPERT = ("we_gate", "we_up", "we_down")
+# KV-cache leaves: (stack..., B, H, S, hd).
+_CACHE_LEAVES = ("k", "v", "ckv", "krope", "k_scale", "v_scale", "ckv_scale")
+
+
+class ShardingRules:
+    """Path-pattern -> PartitionSpec engine for one mesh."""
+
+    def __init__(self, mesh: Mesh, fsdp: bool = True, moe_ep2d: bool = False,
+                 kv_seq_shard: bool = False, fsdp_min_size: int = 1 << 20):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.moe_ep2d = moe_ep2d          # experts across model *and* data
+        self.kv_seq_shard = kv_seq_shard  # shard cache seq axis on data
+        self.fsdp_min_size = fsdp_min_size
+        self.decisions: list[Decision] = []
+
+    # Token-level axis size; tests monkeypatch this to simulate big meshes.
+    def _axis_size(self, tok: str) -> int:
+        return self.mesh.shape[_AXIS_OF[tok]]
+
+    def _gate(self, tokens: Sequence[Optional[str]], shape, notes: list):
+        """Divisibility gate: replicate any axis the mesh does not divide."""
+        out = []
+        for tok, extent in zip(tokens, shape):
+            if tok is None:
+                out.append(None)
+                continue
+            size = self._axis_size(tok)
+            if extent % size:
+                notes.append(f"dim {extent} % {_AXIS_OF[tok]}={size} != 0 "
+                             f"-> replicate")
+                out.append(None)
+            else:
+                out.append(_AXIS_OF[tok])
+        return out
+
+    def _leaf_tokens(self, path: str, shape) -> tuple[list, str]:
+        """Raw (pre-gate) axis tokens for one leaf, plus the rule name."""
+        parts = path.split("/")
+        leaf = parts[-1]
+        parent = parts[-2] if len(parts) > 1 else ""
+        big = 1
+        for d in shape:
+            big *= d
+        fsdp_on = self.fsdp and big >= self.fsdp_min_size
+
+        in_cache = "caches" in parts or leaf in _CACHE_LEAVES
+        if in_cache and len(shape) >= 4:
+            # right-aligned (B, H, S, hd); leading stack axes replicate
+            toks = [None] * (len(shape) - 4)
+            toks += ["D", "M", "D" if self.kv_seq_shard else None, None]
+            return toks, "kv-cache"
+
+        is_weight = leaf in ("w", "packed", "scale", "embed", "router") or \
+            parent in _EXPERT or parent in _ROW_PARALLEL or \
+            any(n in parts for n in ("lm_head", "embed"))
+        if leaf in ("gamma", "delta", "aw", "ax") or len(shape) <= 1:
+            return [None] * len(shape), "replicate (nas/small)"
+
+        # QTensor (repro.api.qtensor) leaves: packed rows carry the deployed
+        # output channels -> model axis; scales follow their rows.
+        if "packed" in parts and len(shape) >= 2:
+            return [None] * (len(shape) - 2) + ["M", None], "qtensor-packed"
+        if ("scales" in parts or leaf == "scale") and len(shape) >= 1:
+            # per-channel dequant steps: rows axis is LAST
+            return [None] * (len(shape) - 1) + ["M"], "qtensor-scale"
+        if "inv_perm" in parts:
+            return [None] * len(shape), "replicate (perm)"
+
+        # MoE expert stacks: (E, c_out, c_in) or (L, E, c_out, c_in)
+        if any(n in parts for n in _EXPERT) and len(shape) >= 3:
+            toks = [None] * (len(shape) - 3)
+            toks += ["M", None, "D" if fsdp_on else None]
+            if self.moe_ep2d:
+                toks[-3] = "M"
+            return toks, "moe-expert"
+
+        if is_weight and len(shape) >= 2:
+            row = any(n in parts for n in _ROW_PARALLEL)
+            lead = [None] * (len(shape) - 2)
+            if row:
+                return lead + ["D" if fsdp_on else None, "M"], "row-parallel"
+            return lead + ["M", "D" if fsdp_on else None], "column-parallel"
+
+        return [None] * len(shape), "replicate (default)"
+
+    def spec_for(self, path: str, shape) -> P:
+        toks, rule = self._leaf_tokens(path, tuple(shape))
+        notes: list[str] = []
+        axes = self._gate(toks, shape, notes)
+        spec = P(*axes)
+        self.decisions.append(Decision(path, tuple(shape), spec,
+                                       "; ".join([rule] + notes)))
+        return spec
+
+    def tree_shardings(self, tree):
+        """NamedSharding pytree matching ``tree`` (arrays or SDStructs)."""
+        def one(key_path, leaf):
+            path = "/".join(_key_str(k) for k in key_path)
+            shape = getattr(leaf, "shape", ())
+            return NamedSharding(self.mesh, self.spec_for(path, shape))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    def explain(self) -> str:
+        lines = [f"{d.path}  {d.shape} -> {d.spec}   [{d.note}]"
+                 for d in self.decisions]
+        return "\n".join(lines)
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def batch_specs(mesh: Mesh, batch):
+    """Data-parallel shardings for one host batch: leading axis on ``data``
+    when divisible, else replicated."""
+    data = mesh.shape["data"]
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 1 and shape[0] % data == 0:
+            return NamedSharding(mesh, P("data", *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+    return jax.tree_util.tree_map(one, batch)

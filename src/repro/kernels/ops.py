@@ -67,6 +67,16 @@ def quant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     return y[:M, :N].reshape(*lead, N)
 
 
+def qtensor_matmul(x: jnp.ndarray, qt, out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """``x (..., c_in) @ QTensor -> (..., c_out)`` on the Pallas path.
+
+    Typed entry point for :class:`repro.api.qtensor.QTensor`.  The group
+    loop, concat and order-restore live in ``QTensor.matmul`` (single source
+    of truth for both backends); this wrapper just pins the Pallas backend.
+    """
+    return qt.matmul(x, out_dtype, backend="pallas")
+
+
 @functools.partial(jax.jit, static_argnames=("bitwidths",))
 def fused_mix(w: jnp.ndarray, gamma_hat: jnp.ndarray, alpha: jnp.ndarray,
               bitwidths=(2, 4, 8)) -> jnp.ndarray:

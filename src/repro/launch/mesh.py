@@ -37,17 +37,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"visible — the dry-run entrypoint must set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             f"any jax import (launch/dryrun.py does)")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices[:n])
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over the real host devices for smoke tests."""
     n = data * model
     devices = jax.devices()[:n]
-    return jax.make_mesh(
-        (data, model), SINGLE_POD_AXES,
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-        devices=devices)
+    return Mesh(np.asarray(devices).reshape((data, model)), SINGLE_POD_AXES)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.engine import ServingSession
 from repro.config import ARCH_IDS, get_config
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_test_mesh, make_production_mesh
@@ -61,14 +62,11 @@ def main() -> None:
             rng.standard_normal((B, cfg.n_prefix_tokens, cfg.d_model)),
             jnp.float32)
 
-    prefill = jax.jit(lambda dp, b: serving.prefill(dp, cfg, b,
-                                                    args.backend))
-    decode = jax.jit(lambda dp, t, c, pos: serving.decode_step(
-        dp, cfg, t, c, pos, args.backend), donate_argnums=(2,))
+    sess = ServingSession(cfg, dparams, backend=args.backend)
 
     with mesh:
         t0 = time.time()
-        logits, pf_caches = prefill(dparams, batch)
+        logits, pf_caches = sess.prefill(dparams, batch)
         logits.block_until_ready()
         t_prefill = time.time() - t0
         print(f"prefill: {B}x{S} tokens in {t_prefill:.2f}s "
@@ -77,13 +75,13 @@ def main() -> None:
         # decode loop against fresh max_len caches (prefill caches are
         # S-deep; production pads them into the ring — here we re-init for
         # shape stability and measure steady-state decode)
-        caches = serving.init_caches(cfg, B, max_len)
+        caches = sess.init_caches(B, max_len)
         tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out = [tokens]
         t0 = time.time()
         for i in range(args.gen):
-            logits, caches = decode(dparams, tokens, caches,
-                                    jnp.asarray(S + i, jnp.int32))
+            logits, caches = sess.decode(dparams, tokens, caches,
+                                         jnp.asarray(S + i, jnp.int32))
             tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             out.append(tokens)
         tokens.block_until_ready()

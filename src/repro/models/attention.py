@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.api.policy import PrecisionPolicy
 from repro.models import layers as L
 
 
@@ -149,7 +150,7 @@ def gqa_core(q, k, v, n_heads: int, n_kv: int, causal: bool,
 # GQA block: train/prefill and cached-decode paths
 # ---------------------------------------------------------------------------
 
-def gqa_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+def gqa_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
                 x: jnp.ndarray, positions: jnp.ndarray, causal: bool = True,
                 k_chunk: int = 1024) -> jnp.ndarray:
     """Full-sequence GQA with RoPE. x: (B, S, d)."""
@@ -157,11 +158,11 @@ def gqa_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = cfg.cdtype
     getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
-    q = L.qlinear(x, p["wq"], getn("wq"), tau, mode, cfg.quant, compute_dtype=cd,
+    q = L.qlinear(x, p["wq"], getn("wq"), policy, cfg.quant, compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
-    k = L.qlinear(x, p["wk"], getn("wk"), tau, mode, cfg.quant, compute_dtype=cd,
+    k = L.qlinear(x, p["wk"], getn("wk"), policy, cfg.quant, compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
-    v = L.qlinear(x, p["wv"], getn("wv"), tau, mode, cfg.quant, compute_dtype=cd,
+    v = L.qlinear(x, p["wv"], getn("wv"), policy, cfg.quant, compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
     q = constrain(q.reshape(B, S, H, hd), "D", None, "M", None)
     k = constrain(k.reshape(B, S, KV, hd), "D", None, "M", None)
@@ -173,7 +174,7 @@ def gqa_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
         k = L.apply_rope(k, cos, sin, rot)
     o = gqa_core(q, k, v, H, KV, causal, k_chunk=k_chunk)
     o = o.reshape(B, S, H * hd)
-    return L.qlinear(o, p["wo"], getn("wo"), tau, mode, cfg.quant,
+    return L.qlinear(o, p["wo"], getn("wo"), policy, cfg.quant,
                      compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
 
@@ -196,7 +197,7 @@ def _quant_per_token(t):
     return q, scale
 
 
-def gqa_decode(p: dict, mode_params, cfg, x: jnp.ndarray, cache: dict,
+def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
                pos: jnp.ndarray, dq_linear) -> tuple[jnp.ndarray, dict]:
     """One-token decode with int8 KV cache.
 
@@ -249,7 +250,7 @@ def gqa_decode(p: dict, mode_params, cfg, x: jnp.ndarray, cache: dict,
 # MLA (DeepSeek-V3): latent KV compression; decode uses weight absorption
 # ---------------------------------------------------------------------------
 
-def mla_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+def mla_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
                 x: jnp.ndarray, positions: jnp.ndarray,
                 k_chunk: int = 1024) -> jnp.ndarray:
     """Full-sequence MLA (train/prefill): expand latents to per-head k/v."""
@@ -260,21 +261,21 @@ def mla_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     cd = cfg.cdtype
     getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
 
-    cq = L.qlinear(x, p["wq_a"], getn("wq_a"), tau, mode, cfg.quant,
+    cq = L.qlinear(x, p["wq_a"], getn("wq_a"), policy, cfg.quant,
                    compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
     cq = L.rmsnorm(cq, p["q_norm"])
-    q = L.qlinear(cq, p["wq_b"], getn("wq_b"), tau, mode, cfg.quant,
+    q = L.qlinear(cq, p["wq_b"], getn("wq_b"), policy, cfg.quant,
                   compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)).reshape(B, S, H, nope + rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
 
-    ckv = L.qlinear(x, p["wkv_a"], getn("wkv_a"), tau, mode, cfg.quant,
+    ckv = L.qlinear(x, p["wkv_a"], getn("wkv_a"), policy, cfg.quant,
                     compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
     c_kv, k_rope = ckv[..., :kvr], ckv[..., kvr:]
     c_kv = L.rmsnorm(c_kv, p["kv_norm"])
-    kv = L.qlinear(c_kv, p["wkv_b"], getn("wkv_b"), tau, mode, cfg.quant,
+    kv = L.qlinear(c_kv, p["wkv_b"], getn("wkv_b"), policy, cfg.quant,
                    compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)).reshape(B, S, H, nope + vd)
     k_nope, v = kv[..., :nope], kv[..., nope:]
@@ -288,7 +289,7 @@ def mla_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
     o = gqa_core(q_full, k_full, v, H, H, causal=True, k_chunk=k_chunk)
     o = o.reshape(B, S, H * vd)
-    return L.qlinear(o, p["wo"], getn("wo"), tau, mode, cfg.quant,
+    return L.qlinear(o, p["wo"], getn("wo"), policy, cfg.quant,
                      compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
 
@@ -364,7 +365,7 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
 # Cross-attention (whisper decoder): KV from encoder output, not causal.
 # ---------------------------------------------------------------------------
 
-def cross_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+def cross_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
                   x: jnp.ndarray, enc: jnp.ndarray,
                   k_chunk: int = 1024) -> jnp.ndarray:
     B, S, _ = x.shape
@@ -372,17 +373,17 @@ def cross_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = cfg.cdtype
     getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
-    q = L.qlinear(x, p["wq"], getn("wq"), tau, mode, cfg.quant,
+    q = L.qlinear(x, p["wq"], getn("wq"), policy, cfg.quant,
                   compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)).reshape(B, S, H, hd)
-    k = L.qlinear(enc, p["wk"], getn("wk"), tau, mode, cfg.quant,
+    k = L.qlinear(enc, p["wk"], getn("wk"), policy, cfg.quant,
                   compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)).reshape(B, Se, KV, hd)
-    v = L.qlinear(enc, p["wv"], getn("wv"), tau, mode, cfg.quant,
+    v = L.qlinear(enc, p["wv"], getn("wv"), policy, cfg.quant,
                   compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)).reshape(B, Se, KV, hd)
     o = gqa_core(q, k, v, H, KV, causal=False, k_chunk=k_chunk)
     o = o.reshape(B, S, H * hd)
-    return L.qlinear(o, p["wo"], getn("wo"), tau, mode, cfg.quant,
+    return L.qlinear(o, p["wo"], getn("wo"), policy, cfg.quant,
                      compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))

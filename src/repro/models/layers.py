@@ -1,12 +1,19 @@
 """Quantization-aware neural-net primitives (pure functional JAX).
 
 Every weight that the paper's method searches over goes through
-:func:`qlinear` / :func:`qconv2d`, which dispatch on ``mode``:
+:func:`qlinear` / :func:`qconv2d` — the single entry points of the
+``repro.api`` surface.  They dispatch on a typed
+:class:`repro.api.PrecisionPolicy` (never a string) **and** on the weight
+leaf's type:
 
-  float    — no quantization (reference / float baseline)
-  qat8     — fixed 8-bit PACT QAT (warmup phase, Alg. 1 l.1-2)
-  search   — DNAS mixture, Eq. 4-6 (search phase)
-  frozen   — argmax assignment (fine-tuning phase)
+  PrecisionPolicy.FLOAT          — no quantization (reference / baseline)
+  PrecisionPolicy.QAT8           — fixed 8-bit PACT QAT (warmup, Alg. 1 l.1-2)
+  PrecisionPolicy.search(tau)    — DNAS mixture, Eq. 4-6 (search phase)
+  PrecisionPolicy.FROZEN         — argmax assignment (fine-tuning phase)
+  PrecisionPolicy.deployed(bk)   — true-integer packed weights; the weight
+                                   leaf is a :class:`repro.api.QTensor` and
+                                   each precision group runs as a sub-GEMM
+                                   (``bk="pallas"`` -> kernels/quant_matmul)
 
 The NAS state for a layer-site is a dict {"gamma","delta"}; the quantizer
 clips live in the *params* tree ({"aw","ax"}) because they train with W, not
@@ -24,6 +31,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import Phase, PrecisionPolicy
+from repro.api.qtensor import QTensor
 from repro.core import mixedprec as mp
 from repro.core import quantizers as qz
 
@@ -73,23 +82,37 @@ def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32) -> dict:
 # Quantization-aware apply
 # ---------------------------------------------------------------------------
 
-def _quant_pair(x, w, p, nas, tau, mode, qcfg: mp.MixedPrecConfig,
-                signed_act: bool):
-    """Return (x', w') after mode-appropriate fake quantization."""
-    if mode == "float":
+def _quant_pair(x, w, p, nas, policy: PrecisionPolicy,
+                qcfg: mp.MixedPrecConfig, signed_act: bool):
+    """Return (x', w') after policy-appropriate fake quantization."""
+    if policy.phase is Phase.FLOAT:
         return x, w
     aw = p["aw"].reshape((w.shape[0],) + (1,) * (w.ndim - 1))
     ax = p["ax"]
-    if mode == "qat8":
+    if policy.phase is Phase.QAT8:
         return (qz.quantize_act_any(x, ax, 8, signed_act),
                 qz.quantize_weight(w, aw, 8))
-    if mode == "search":
-        return (mp.effective_act(x, nas["delta"], ax, tau, qcfg, signed_act),
-                mp.effective_weight(w, nas["gamma"], p["aw"], tau, qcfg))
-    if mode == "frozen":
+    if policy.phase is Phase.SEARCH:
+        return (mp.effective_act(x, nas["delta"], ax, policy.tau, qcfg,
+                                 signed_act),
+                mp.effective_weight(w, nas["gamma"], p["aw"], policy.tau,
+                                    qcfg))
+    if policy.phase is Phase.FROZEN:
         return (mp.frozen_act(x, nas["delta"], ax, qcfg, signed_act),
                 mp.frozen_weight(w, nas["gamma"], p["aw"], qcfg))
-    raise ValueError(f"unknown mode {mode!r}")
+    raise ValueError(f"unhandled policy {policy!r}")
+
+
+def deployed_act(x: jnp.ndarray, qt: QTensor, signed: bool) -> jnp.ndarray:
+    """Layer-wise activation quantization of the deployed path.
+
+    ``qt.act_scale`` stores the *unsigned* step ``alpha_x / (2^b - 1)``
+    (core/deploy.py), so the learned PACT clip is recovered as
+    ``act_scale * levels`` and the signed/unsigned step fall out of the
+    quantizer itself — numerically identical to the fine-tune phase's
+    ``frozen_act`` with the same argmaxed delta, for either signedness."""
+    alpha = jnp.asarray(qt.act_scale * ((1 << qt.act_bits) - 1))
+    return qz.quantize_act_any(x, alpha, qt.act_bits, signed)
 
 
 def partial_dtype_of(cfg):
@@ -98,17 +121,32 @@ def partial_dtype_of(cfg):
     return jnp.dtype(pd) if pd else None
 
 
-def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict], tau, mode: str,
-            qcfg: mp.MixedPrecConfig, signed_act: bool = True,
-            compute_dtype=None, partial_dtype=None) -> jnp.ndarray:
+def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict],
+            policy: PrecisionPolicy, qcfg: mp.MixedPrecConfig,
+            signed_act: bool = True, compute_dtype=None,
+            partial_dtype=None) -> jnp.ndarray:
     """Quantization-aware linear: x (..., c_in) @ w (c_out, c_in)^T.
+
+    The single linear entry point for every phase: when the weight leaf is a
+    :class:`QTensor` (``policy`` DEPLOYED), each precision group runs as a
+    packed sub-GEMM (Pallas kernel or jnp fallback per ``policy.backend``);
+    otherwise the float master weight is fake-quantized per the policy.
 
     ``partial_dtype`` sets the dot's preferred_element_type: with bf16 the
     TP partial sums cross the ICI at half width (collective compression —
     §Perf knob; default keeps the backend's f32 accumulation).
     """
     w = p["w"]
-    x, w = _quant_pair(x, w, p, nas, tau, mode, qcfg, signed_act)
+    if isinstance(w, QTensor):
+        xq = deployed_act(x, w, signed_act)
+        y = w.matmul(xq, compute_dtype or jnp.float32, policy.backend)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
+    if policy.phase is Phase.DEPLOYED:
+        raise TypeError("DEPLOYED policy requires a QTensor weight leaf "
+                        "(run engine.deploy / core.deploy.deploy_linear)")
+    x, w = _quant_pair(x, w, p, nas, policy, qcfg, signed_act)
     if compute_dtype is not None:
         x, w = x.astype(compute_dtype), w.astype(compute_dtype)
     if partial_dtype is not None:
@@ -121,15 +159,25 @@ def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict], tau, mode: str,
     return y
 
 
-def qconv2d(x: jnp.ndarray, p: dict, nas: Optional[dict], tau, mode: str,
-            qcfg: mp.MixedPrecConfig, stride: int = 1, padding: str = "SAME",
+def qconv2d(x: jnp.ndarray, p: dict, nas: Optional[dict],
+            policy: PrecisionPolicy, qcfg: mp.MixedPrecConfig,
+            stride: int = 1, padding: str = "SAME",
             groups: int = 1, signed_act: bool = False) -> jnp.ndarray:
     """Quantization-aware NHWC conv with (c_out, c_in/g, kh, kw) weights.
 
     ``signed_act=False`` matches the paper's post-ReLU unsigned activations.
+    A QTensor weight (deployed phase) is dequantized to its dense kernel and
+    convolved — the weights are stored packed (the paper's memory win); the
+    conv-as-im2col-GEMM kernel routing is a follow-up.
     """
     w = p["w"]
-    x, w = _quant_pair(x, w, p, nas, tau, mode, qcfg, signed_act)
+    if isinstance(w, QTensor):
+        x = deployed_act(x, w, signed_act)
+        w = w.dense(jnp.float32)
+    elif policy.phase is Phase.DEPLOYED:
+        raise TypeError("DEPLOYED policy requires a QTensor weight leaf")
+    else:
+        x, w = _quant_pair(x, w, p, nas, policy, qcfg, signed_act)
     # lax wants (kh, kw, c_in/g, c_out) for NHWC/HWIO
     kernel = jnp.transpose(w, (2, 3, 1, 0))
     y = jax.lax.conv_general_dilated(

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.api.policy import Phase, PrecisionPolicy
 from repro.models import layers as L
 
 
@@ -80,26 +81,30 @@ def init_moe(key, cfg, dtype) -> tuple[dict, dict]:
     return params, nas
 
 
-def _expert_weights(p, nas, tau, mode, qcfg):
-    """Mode-appropriate fake quantization of stacked (E, c_out, c_in) weights."""
+def _expert_weights(p, nas, policy, qcfg):
+    """Policy-appropriate fake quantization of stacked (E, c_out, c_in)
+    weights; a QTensor leaf (deployed) dequantizes to the dense stack."""
+    from repro.api.qtensor import QTensor
     from repro.core import mixedprec as mp
     from repro.core import quantizers as qz
     w = p["w"]
+    if isinstance(w, QTensor):
+        return w.dequantize(jnp.float32)
     E, co, ci = w.shape
-    if mode == "float":
+    if policy.phase is Phase.FLOAT:
         return w
     aw = p["aw"].reshape(E * co)
     wf = w.reshape(E * co, ci)
-    if mode == "qat8":
+    if policy.phase is Phase.QAT8:
         out = qz.quantize_weight(wf, aw[:, None], 8)
-    elif mode == "search":
+    elif policy.phase is Phase.SEARCH:
         g = nas["gamma"].reshape(E * co, -1)
-        out = mp.effective_weight(wf, g, aw, tau, qcfg)
-    elif mode == "frozen":
+        out = mp.effective_weight(wf, g, aw, policy.tau, qcfg)
+    elif policy.phase is Phase.FROZEN:
         g = nas["gamma"].reshape(E * co, -1)
         out = mp.frozen_weight(wf, g, aw, qcfg)
     else:
-        raise ValueError(mode)
+        raise ValueError(policy)
     return out.reshape(E, co, ci)
 
 
@@ -136,7 +141,7 @@ def dispatch_indices(experts: jnp.ndarray, n_experts: int, capacity: int
     return dest_sorted[inv], keep_sorted[inv], order
 
 
-def moe_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+def moe_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
                 x: jnp.ndarray) -> jnp.ndarray:
     """x: (B, S, d) -> (B, S, d)."""
     B, S, d = x.shape
@@ -148,7 +153,7 @@ def moe_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
 
     # router in float32 (precision-sensitive; analogous to the paper keeping
     # first/last layers at 8b)
-    logits = L.qlinear(xt, p["router"], None, tau, "float", cfg.quant,
+    logits = L.qlinear(xt, p["router"], None, PrecisionPolicy.FLOAT, cfg.quant,
                        compute_dtype=jnp.float32)
     routing = "sigmoid" if cfg.n_shared_experts else "softmax"
     gates, topi = route_topk(logits, k, routing)             # (T,k)
@@ -170,9 +175,9 @@ def moe_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     # (E, C, d) buffer and all-reduces it per layer (§Perf measurement)
     buf = constrain(buf.reshape(E, capacity, d), "M", "D", None)
 
-    wg = _expert_weights(p["we_gate"], getn("we_gate"), tau, mode, cfg.quant).astype(cd)
-    wu = _expert_weights(p["we_up"], getn("we_up"), tau, mode, cfg.quant).astype(cd)
-    wd = _expert_weights(p["we_down"], getn("we_down"), tau, mode, cfg.quant).astype(cd)
+    wg = _expert_weights(p["we_gate"], getn("we_gate"), policy, cfg.quant).astype(cd)
+    wu = _expert_weights(p["we_up"], getn("we_up"), policy, cfg.quant).astype(cd)
+    wd = _expert_weights(p["we_down"], getn("we_down"), policy, cfg.quant).astype(cd)
     h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
                  jnp.einsum("ecd,efd->ecf", buf, wu))
     out_buf = constrain(jnp.einsum("ecf,edf->ecd", h, wd),
@@ -187,21 +192,21 @@ def moe_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     if cfg.n_shared_experts:
         sp = p["shared"]
         h = L.swiglu(
-            L.qlinear(xt, sp["w_gate"], getn("shared.w_gate"), tau, mode,
+            L.qlinear(xt, sp["w_gate"], getn("shared.w_gate"), policy,
                       cfg.quant, compute_dtype=cd),
-            L.qlinear(xt, sp["w_up"], getn("shared.w_up"), tau, mode,
+            L.qlinear(xt, sp["w_up"], getn("shared.w_up"), policy,
                       cfg.quant, compute_dtype=cd))
-        out = out + L.qlinear(h, sp["w_down"], getn("shared.w_down"), tau,
-                              mode, cfg.quant, compute_dtype=cd)
+        out = out + L.qlinear(h, sp["w_down"], getn("shared.w_down"),
+                              policy, cfg.quant, compute_dtype=cd)
     if cfg.dense_residual_ff:
         dp = p["dense_res"]
         h = L.swiglu(
-            L.qlinear(xt, dp["w_gate"], getn("dense_res.w_gate"), tau, mode,
+            L.qlinear(xt, dp["w_gate"], getn("dense_res.w_gate"), policy,
                       cfg.quant, compute_dtype=cd),
-            L.qlinear(xt, dp["w_up"], getn("dense_res.w_up"), tau, mode,
+            L.qlinear(xt, dp["w_up"], getn("dense_res.w_up"), policy,
                       cfg.quant, compute_dtype=cd))
-        out = out + L.qlinear(h, dp["w_down"], getn("dense_res.w_down"), tau,
-                              mode, cfg.quant, compute_dtype=cd)
+        out = out + L.qlinear(h, dp["w_down"], getn("dense_res.w_down"),
+                              policy, cfg.quant, compute_dtype=cd)
     return out.reshape(B, S, d).astype(x.dtype)
 
 

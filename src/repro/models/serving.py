@@ -15,13 +15,11 @@ becomes a latency/energy saving on TPU (DESIGN.md §2).
 
 Formats
 -------
-DeployedLinear (dict):
-  groups: {bits: {"packed": (rows_b, ceil(c_in*bits/8)) uint8,
-                  "scale": (rows_b,) f32}}
-  bias:   optional (c_out,)
-  inv_perm: optional (c_out,) i32 — restores canonical channel order for
-            structure-sensitive consumers (attention heads, residual stream)
-MoE expert weights carry a leading E axis on every leaf.
+A deployed linear is ``{"w": repro.api.QTensor[, "bias": (c_out,)]}`` — the
+QTensor (a registered pytree) carries the packed per-precision groups,
+per-channel scales and the optional canonical-order restore permutation
+(structure-sensitive consumers: attention heads, residual stream).  MoE
+expert weights carry a leading E axis on the QTensor's leaves.
 """
 from __future__ import annotations
 
@@ -32,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.qtensor import QTensor
 from repro.core import quantizers as qz
 from repro.models import attention as attn
 from repro.models import layers as L
@@ -50,11 +49,12 @@ def init_deployed_linear(key, c_in: int, c_out: int, cfg,
 
     ``expert_axis``: if >0, adds a leading expert dimension E=expert_axis to
     every leaf (MoE).  Weights are synthesized then truly quantized+packed so
-    dry-run tensors have exactly the deployed bytes.
+    dry-run tensors have exactly the deployed bytes.  Static assignments are
+    built group-contiguous, so no permutation is carried.
     """
     sizes = cfg.deploy.group_sizes(c_out, sorted(cfg.quant.weight_bits))
     E = max(expert_axis, 1)
-    groups = {}
+    packed_groups, scale_groups, used_bits = [], [], []
     for b, n in sizes.items():
         if n == 0:
             continue
@@ -65,11 +65,14 @@ def init_deployed_linear(key, c_in: int, c_out: int, cfg,
         alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
         q, scale = qz.quantize_weight_int(w, alpha, b)
         packed = qz.pack_int(q, b)                     # (E, n, ci_pad/f)
-        grp = {"packed": packed if expert_axis else packed[0],
-               "scale": (scale[..., 0] if expert_axis else scale[0, :, 0]
-                         ).astype(jnp.float32)}
-        groups[b] = grp
-    out = {"groups": groups}
+        packed_groups.append(packed if expert_axis else packed[0])
+        scale_groups.append((scale[..., 0] if expert_axis
+                             else scale[0, :, 0]).astype(jnp.float32))
+        used_bits.append(b)
+    qt = QTensor(tuple(packed_groups), tuple(scale_groups), None,
+                 tuple(used_bits), c_out, c_in,
+                 act_bits=cfg.deploy.act_bits, restore_order=False)
+    out = {"w": qt}
     if bias:
         out["bias"] = jnp.zeros((E, c_out) if expert_axis else (c_out,),
                                 jnp.bfloat16)
@@ -80,78 +83,36 @@ def dq_linear(x: jnp.ndarray, dp: dict, compute_dtype=jnp.bfloat16,
               backend: str = "jnp") -> jnp.ndarray:
     """Apply a deployed linear: x (..., c_in) -> (..., c_out).
 
-    Per precision group: unpack sub-byte rows, dequantize with per-channel
-    scales, dense matmul; outputs concatenate along c_out (deployed channel
-    order).  ``backend="pallas"`` routes each sub-GEMM through the fused
-    quant_matmul kernel instead (TPU path).
+    Thin wrapper over :meth:`QTensor.matmul` (per-precision sub-GEMMs whose
+    outputs concatenate; ``backend="pallas"`` routes each through the fused
+    quant_matmul kernel) plus the optional bias.
     """
-    c_in = x.shape[-1]
-    outs = []
-    for b in sorted(dp["groups"]):
-        grp = dp["groups"][b]
-        if backend == "pallas":
-            from repro.kernels import ops as kops
-            y = kops.quant_matmul(x, grp["packed"], grp["scale"], b, c_in,
-                                  compute_dtype)
-        else:
-            w_int = qz.unpack_int(grp["packed"], b)[..., :c_in]   # (rows, c_in)
-            w = (w_int.astype(jnp.float32)
-                 * grp["scale"][..., None]).astype(compute_dtype)
-            y = jnp.einsum("...i,oi->...o", x.astype(compute_dtype), w)
-        outs.append(y)
-    y = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
-    if "inv_perm" in dp:
-        y = jnp.take(y, dp["inv_perm"], axis=-1)
+    y = dp["w"].matmul(x, compute_dtype, backend)
     if "bias" in dp:
         y = y + dp["bias"].astype(y.dtype)
     return y
 
 
-def dq_expert_weights(dp: dict, c_in: int, compute_dtype=jnp.bfloat16
-                      ) -> jnp.ndarray:
+def dq_expert_weights(dp: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
     """Unpack+dequant stacked MoE expert weights -> (E, c_out, c_in)."""
-    outs = []
-    for b in sorted(dp["groups"]):
-        grp = dp["groups"][b]
-        w_int = qz.unpack_int(grp["packed"], b)[..., :c_in]  # (E, rows, c_in)
-        outs.append((w_int.astype(jnp.float32)
-                     * grp["scale"][..., None]).astype(compute_dtype))
-    return jnp.concatenate(outs, axis=-2) if len(outs) > 1 else outs[0]
+    return dp["w"].dequantize(compute_dtype)
 
 
-def dense_view(dp: dict, c_in: int, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+def dense_view(dp: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
     """Full dense (c_out, c_in) view of a deployed linear (for absorption)."""
-    w = dq_expert_weights({"groups": dp["groups"]}, c_in, compute_dtype) \
-        if dp["groups"][sorted(dp["groups"])[0]]["packed"].ndim == 3 else None
-    if w is not None:
-        return w
-    outs = []
-    for b in sorted(dp["groups"]):
-        grp = dp["groups"][b]
-        w_int = qz.unpack_int(grp["packed"], b)[..., :c_in]
-        outs.append((w_int.astype(jnp.float32)
-                     * grp["scale"][..., None]).astype(compute_dtype))
-    w = jnp.concatenate(outs, axis=0)
-    if "inv_perm" in dp:
-        w = jnp.take(w, dp["inv_perm"], axis=0)
-    return w
+    return dp["w"].dequantize(compute_dtype)
 
 
 def deployed_from_search(w, gamma, alpha_w, delta, alpha_x, cfg,
                          restore_order: bool = False) -> dict:
     """Real Sec. III-C transform of a searched linear into deployed format."""
     from repro.core import deploy as dpl
-    d = dpl.deploy_linear(np.asarray(w), np.asarray(gamma),
-                          np.asarray(alpha_w),
-                          None if delta is None else np.asarray(delta),
-                          float(alpha_x), cfg.quant, align=cfg.deploy.align)
-    groups = {b: {"packed": jnp.asarray(g["packed"]),
-                  "scale": jnp.asarray(g["scale"])}
-              for b, g in d.groups.items()}
-    out = {"groups": groups}
-    if restore_order:
-        out["inv_perm"] = jnp.asarray(d.inv_perm, jnp.int32)
-    return out
+    qt = dpl.deploy_linear(np.asarray(w), np.asarray(gamma),
+                           np.asarray(alpha_w),
+                           None if delta is None else np.asarray(delta),
+                           float(alpha_x), cfg.quant, align=cfg.deploy.align,
+                           restore_order=restore_order)
+    return {"w": qt}
 
 
 # ---------------------------------------------------------------------------
@@ -372,9 +333,9 @@ def _deployed_moe(p, cfg, x, backend="jnp"):
     src = jnp.repeat(jnp.arange(T), k)
     buf = jnp.zeros((E * capacity, d), cd).at[dest].add(
         jnp.where(keep[:, None], xt[src].astype(cd), 0)).reshape(E, capacity, d)
-    wg = dq_expert_weights(p["we_gate"], d, cd)
-    wu = dq_expert_weights(p["we_up"], d, cd)
-    wd = dq_expert_weights(p["we_down"], ff, cd)
+    wg = dq_expert_weights(p["we_gate"], cd)
+    wu = dq_expert_weights(p["we_up"], cd)
+    wd = dq_expert_weights(p["we_down"], cd)
     h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
                  jnp.einsum("ecd,efd->ecf", buf, wu))
     out_buf = jnp.einsum("ecf,edf->ecd", h, wd).reshape(E * capacity, d)
@@ -595,10 +556,9 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
             if cfg.use_mla:
                 a, c2 = attn.mla_decode(
                     p["attn"], cfg, hn, c, pos, dq,
-                    lambda name: dense_view(p["attn"][name],
-                                            cfg.kv_lora_rank, cd))
+                    lambda name: dense_view(p["attn"][name], cd))
             else:
-                a, c2 = attn.gqa_decode(p["attn"], None, cfg, hn, c, pos, dq)
+                a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq)
             h = h + a.astype(h.dtype)
             f = _deployed_ffn_full(p["ffn"], cfg,
                                    L.apply_norm(h, p["ln2"], cfg.norm), backend)
@@ -618,7 +578,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
         while start < Ltot:
             c_att = jax.tree_util.tree_map(lambda t: t[g], caches["attn"])
             hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
-            a, c2 = attn.gqa_decode(dparams["shared_attn"]["attn"], None, cfg,
+            a, c2 = attn.gqa_decode(dparams["shared_attn"]["attn"], cfg,
                                     hn, c_att, pos, dq)
             x = x + a.astype(x.dtype)
             f = _deployed_ffn_full(
@@ -648,8 +608,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
         def body(h, pc):
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
-            a, c2 = attn.gqa_decode(p["attn"], None, cfg, hn, c["self"], pos,
-                                    dq)
+            a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c["self"], pos, dq)
             h = h + a.astype(h.dtype)
             xa = _cross_decode(p["xattn"], cfg,
                                L.apply_norm(h, p["ln2"], cfg.norm), c["cross"],

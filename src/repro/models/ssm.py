@@ -133,14 +133,14 @@ def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     return y, hT
 
 
-def mamba2_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
+def mamba2_forward(p: dict, nas: Optional[dict], policy, cfg,
                    x: jnp.ndarray) -> jnp.ndarray:
     """Full-sequence Mamba2 block. x: (B, S, d) -> (B, S, d)."""
     B, S, d = x.shape
     d_inner, H, N, P = dims(cfg)
     cd = cfg.cdtype
     getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
-    zxbcdt = L.qlinear(x, p["in_proj"], getn("in_proj"), tau, mode, cfg.quant,
+    zxbcdt = L.qlinear(x, p["in_proj"], getn("in_proj"), policy, cfg.quant,
                        compute_dtype=cd)
     z = zxbcdt[..., :d_inner]
     xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
@@ -157,7 +157,7 @@ def mamba2_forward(p: dict, nas: Optional[dict], tau, mode: str, cfg,
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(B, S, d_inner).astype(cd)
     y = L.rmsnorm(y * jax.nn.silu(z.astype(cd)), p["norm"])
-    return L.qlinear(y, p["out_proj"], getn("out_proj"), tau, mode, cfg.quant,
+    return L.qlinear(y, p["out_proj"], getn("out_proj"), policy, cfg.quant,
                      compute_dtype=cd)
 
 

@@ -7,6 +7,10 @@
 
 Models are described as op lists consumed by a tiny interpreter, which gives
 init / quant-aware apply / LayerCostSpec generation from one description.
+``apply_fn(params, nas, policy, batch)`` takes a
+:class:`repro.api.PrecisionPolicy`; with QTensor weight leaves
+(engine.deploy output) and ``PrecisionPolicy.deployed(...)`` the same
+interpreter serves the packed model.
 BatchNorm is represented as a per-channel scale+bias (the folded form used at
 deployment — QAT pipelines fold BN into the preceding conv).
 
@@ -23,6 +27,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import PrecisionPolicy
 from repro.core import mixedprec as mp
 from repro.core.regularizers import LayerCostSpec
 from repro.models import layers as L
@@ -215,7 +220,7 @@ def build(cfg: TinyConfig):
         return params, nas
 
     # --- apply ---------------------------------------------------------------
-    def apply_fn(params, nas, tau, batch, mode):
+    def apply_fn(params, nas, policy, batch):
         x = batch["x"]
         if len(cfg.input_shape) == 1 and x.ndim == 2:
             x = x[:, None, None, :]          # AD vectors as 1x1 images
@@ -223,30 +228,30 @@ def build(cfg: TinyConfig):
         bn_i = 0
         for op, g in geom:
             if op == "conv":
-                x = L.qconv2d(x, params[g["name"]], getn(g["name"]), tau,
-                              mode, cfg.quant, stride=g["s"])
+                x = L.qconv2d(x, params[g["name"]], getn(g["name"]),
+                              policy, cfg.quant, stride=g["s"])
             elif op == "dwconv":
-                x = L.qconv2d(x, params[g["name"]], getn(g["name"]), tau,
-                              mode, cfg.quant, stride=g["s"],
+                x = L.qconv2d(x, params[g["name"]], getn(g["name"]),
+                              policy, cfg.quant, stride=g["s"],
                               groups=g["cin"])
             elif op == "resblock":
                 sc = x
-                h1 = L.qconv2d(x, params[g["n1"]], getn(g["n1"]), tau, mode,
+                h1 = L.qconv2d(x, params[g["n1"]], getn(g["n1"]), policy,
                                cfg.quant, stride=g["s"])
                 h1 = jax.nn.relu(_bn(h1, params[g["n1"] + "_bn"]))
-                h2 = L.qconv2d(h1, params[g["n2"]], getn(g["n2"]), tau, mode,
+                h2 = L.qconv2d(h1, params[g["n2"]], getn(g["n2"]), policy,
                                cfg.quant)
                 h2 = _bn(h2, params[g["n2"] + "_bn"])
                 if "nshort" in g:
                     sc = L.qconv2d(sc, params[g["nshort"]], getn(g["nshort"]),
-                                   tau, mode, cfg.quant, stride=g["s"])
+                                   policy, cfg.quant, stride=g["s"])
                     sc = _bn(sc, params[g["nshort"] + "_bn"])
                 x = jax.nn.relu(h2 + sc)
             elif op == "fc":
                 if x.ndim == 4:
                     x = x.reshape(x.shape[0], -1)
-                x = L.qlinear(x, params[g["name"]], getn(g["name"]), tau,
-                              mode, cfg.quant, signed_act=False)
+                x = L.qlinear(x, params[g["name"]], getn(g["name"]),
+                              policy, cfg.quant, signed_act=False)
             elif op == "bn":
                 x = _bn(x, params[f"bn{bn_i}"])
                 bn_i += 1

@@ -9,13 +9,14 @@ python loop over groups with static slices.
 Interface (all pure functions):
 
   init_model(cfg, key)          -> (params, nas)
-  forward(params, nas, tau, cfg, batch, mode) -> logits  (full sequence)
+  forward(params, nas, cfg, batch, policy) -> logits  (full sequence)
   lm_loss(logits, batch)        -> scalar CE
   cost_specs(cfg, tokens)       -> {site: LayerCostSpec}  for Eq. 7/8
 
-``mode`` is one of float|qat8|search|frozen (models/layers.py).  ``batch`` is
-a dict with "tokens"/"labels" (+ "prefix_embeds" for vlm, "frames" for
-audio).  The deployed / serving path lives in models/serving.py.
+``policy`` is a :class:`repro.api.PrecisionPolicy` (FLOAT / QAT8 /
+search(tau) / FROZEN — see models/layers.py).  ``batch`` is a dict with
+"tokens"/"labels" (+ "prefix_embeds" for vlm, "frames" for audio).  The
+deployed / serving path lives in models/serving.py.
 """
 from __future__ import annotations
 
@@ -25,6 +26,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import PrecisionPolicy
 from repro.core.regularizers import LayerCostSpec
 from repro.models import attention as attn
 from repro.models import layers as L
@@ -49,22 +51,22 @@ def init_mlp(key, cfg, d_in: int, d_ff: int, dtype) -> tuple[dict, dict]:
     return p, n
 
 
-def mlp_forward(p, nas, tau, mode, cfg, x):
+def mlp_forward(p, nas, policy, cfg, x):
     cd = cfg.cdtype
     getn = (lambda n: nas[n]) if nas is not None else (lambda n: None)
     if cfg.mlp_type == "swiglu":
         h = L.swiglu(
-            L.qlinear(x, p["w_gate"], getn("w_gate"), tau, mode, cfg.quant,
+            L.qlinear(x, p["w_gate"], getn("w_gate"), policy, cfg.quant,
                       compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)),
-            L.qlinear(x, p["w_up"], getn("w_up"), tau, mode, cfg.quant,
+            L.qlinear(x, p["w_up"], getn("w_up"), policy, cfg.quant,
                       compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)))
     else:
-        h = jax.nn.gelu(L.qlinear(x, p["w_in"], getn("w_in"), tau, mode,
+        h = jax.nn.gelu(L.qlinear(x, p["w_in"], getn("w_in"), policy,
                                   cfg.quant, compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg)))
-    return L.qlinear(h, p["w_down"], getn("w_down"), tau, mode, cfg.quant,
+    return L.qlinear(h, p["w_down"], getn("w_down"), policy, cfg.quant,
                      compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
 
@@ -88,22 +90,22 @@ def init_block(key, cfg, dtype) -> tuple[dict, dict]:
     return p, n
 
 
-def block_forward(p, nas, tau, mode, cfg, x, positions):
+def block_forward(p, nas, policy, cfg, x, positions):
     sub = (lambda pre: {k[len(pre):]: v for k, v in nas.items()
                         if k.startswith(pre)}) if nas is not None else (lambda pre: None)
     h = L.apply_norm(x, p["ln1"], cfg.norm)
     if cfg.use_mla:
-        a = attn.mla_forward(p["attn"], sub("attn."), tau, mode, cfg, h,
+        a = attn.mla_forward(p["attn"], sub("attn."), policy, cfg, h,
                              positions)
     else:
-        a = attn.gqa_forward(p["attn"], sub("attn."), tau, mode, cfg, h,
+        a = attn.gqa_forward(p["attn"], sub("attn."), policy, cfg, h,
                              positions)
     x = x + a.astype(x.dtype)
     h = L.apply_norm(x, p["ln2"], cfg.norm)
     if cfg.n_experts:
-        f = moe_mod.moe_forward(p["ffn"], sub("ffn."), tau, mode, cfg, h)
+        f = moe_mod.moe_forward(p["ffn"], sub("ffn."), policy, cfg, h)
     else:
-        f = mlp_forward(p["ffn"], sub("ffn."), tau, mode, cfg, h)
+        f = mlp_forward(p["ffn"], sub("ffn."), policy, cfg, h)
     return x + f.astype(x.dtype)
 
 
@@ -113,9 +115,9 @@ def init_mamba_block(key, cfg, dtype) -> tuple[dict, dict]:
     return p, n_in
 
 
-def mamba_block_forward(p, nas, tau, mode, cfg, x):
+def mamba_block_forward(p, nas, policy, cfg, x):
     h = L.apply_norm(x, p["ln"], cfg.norm)
-    return x + ssm_mod.mamba2_forward(p, nas, tau, mode, cfg, h).astype(x.dtype)
+    return x + ssm_mod.mamba2_forward(p, nas, policy, cfg, h).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -227,12 +229,11 @@ def _scan_blocks(block_fn, params_blocks, nas_blocks, x, remat: bool = True):
     return x
 
 
-def forward(params, nas, tau, cfg, batch, mode: str,
+def forward(params, nas, cfg, batch, policy: PrecisionPolicy,
             remat: bool = True) -> jnp.ndarray:
     """Full-sequence forward -> logits (B, S, vocab)."""
-    tau = jnp.asarray(tau, jnp.float32)
     if cfg.family == "audio":
-        return _forward_encdec(params, nas, tau, cfg, batch, mode, remat)
+        return _forward_encdec(params, nas, cfg, batch, policy, remat)
 
     x = _embed_inputs(params, cfg, batch)
     B, S, _ = x.shape
@@ -240,20 +241,20 @@ def forward(params, nas, tau, cfg, batch, mode: str,
 
     if cfg.family in ("dense", "vlm", "moe"):
         def bf(h, p, n):
-            return block_forward(p, n, tau, mode, cfg, h, positions)
+            return block_forward(p, n, policy, cfg, h, positions)
         x = _scan_blocks(bf, params["blocks"], None if nas is None
                          else nas["blocks"], x, remat)
     elif cfg.family == "ssm":
         def bf(h, p, n):
-            return mamba_block_forward(p, n, tau, mode, cfg, h)
+            return mamba_block_forward(p, n, policy, cfg, h)
         x = _scan_blocks(bf, params["blocks"], None if nas is None
                          else nas["blocks"], x, remat)
     elif cfg.family == "hybrid":
-        x = _forward_hybrid(params, nas, tau, cfg, x, positions, mode, remat)
+        x = _forward_hybrid(params, nas, cfg, x, positions, policy, remat)
 
     x = L.apply_norm(x, params["ln_f"], cfg.norm)
     head_nas = nas["lm_head"] if nas is not None else None
-    logits = L.qlinear(x, params["lm_head"], head_nas, tau, mode, cfg.quant,
+    logits = L.qlinear(x, params["lm_head"], head_nas, policy, cfg.quant,
                        compute_dtype=cfg.cdtype)
     return _mask_pad(logits.astype(jnp.float32), cfg)
 
@@ -266,19 +267,19 @@ def _mask_pad(logits: jnp.ndarray, cfg) -> jnp.ndarray:
     return jnp.where(keep, logits, -1e9)
 
 
-def _forward_hybrid(params, nas, tau, cfg, x, positions, mode, remat):
+def _forward_hybrid(params, nas, cfg, x, positions, policy, remat):
     """zamba2: mamba backbone + shared attention block every ``attn_every``."""
     Ltot, k = cfg.n_layers, cfg.attn_every
     p_sa = params["shared_attn"]
     n_sa = nas["shared_attn"] if nas is not None else None
 
     def bf(h, p, n):
-        return mamba_block_forward(p, n, tau, mode, cfg, h)
+        return mamba_block_forward(p, n, policy, cfg, h)
 
     start = 0
     while start < Ltot:
         # shared attention block at every group boundary (layers 0, k, 2k, ..)
-        x = block_forward(p_sa, n_sa, tau, mode, cfg, x, positions)
+        x = block_forward(p_sa, n_sa, policy, cfg, x, positions)
         stop = min(start + k, Ltot)
         pg = jax.tree_util.tree_map(lambda t: t[start:stop], params["blocks"])
         ng = (jax.tree_util.tree_map(lambda t: t[start:stop], nas["blocks"])
@@ -288,7 +289,7 @@ def _forward_hybrid(params, nas, tau, cfg, x, positions, mode, remat):
     return x
 
 
-def _forward_encdec(params, nas, tau, cfg, batch, mode, remat):
+def _forward_encdec(params, nas, cfg, batch, policy, remat):
     """whisper: stub frame embeddings -> encoder; tokens -> decoder."""
     cd = cfg.cdtype
     enc = batch["frames"].astype(cd)                 # (B, Se, d) stub frontend
@@ -299,11 +300,11 @@ def _forward_encdec(params, nas, tau, cfg, batch, mode, remat):
     def ebf(h, p, n):
         sub = (lambda pre: {kk[len(pre):]: v for kk, v in n.items()
                             if kk.startswith(pre)}) if n is not None else (lambda pre: None)
-        a = attn.gqa_forward(p["attn"], sub("attn."), tau, mode, cfg,
+        a = attn.gqa_forward(p["attn"], sub("attn."), policy, cfg,
                              L.apply_norm(h, p["ln1"], cfg.norm), positions_e,
                              causal=False)
         h = h + a.astype(h.dtype)
-        f = mlp_forward(p["mlp"], sub("mlp."), tau, mode, cfg,
+        f = mlp_forward(p["mlp"], sub("mlp."), policy, cfg,
                         L.apply_norm(h, p["ln2"], cfg.norm))
         return h + f.astype(h.dtype)
 
@@ -319,14 +320,14 @@ def _forward_encdec(params, nas, tau, cfg, batch, mode, remat):
     def dbf(h, p, n):
         sub = (lambda pre: {kk[len(pre):]: v for kk, v in n.items()
                             if kk.startswith(pre)}) if n is not None else (lambda pre: None)
-        a = attn.gqa_forward(p["attn"], sub("attn."), tau, mode, cfg,
+        a = attn.gqa_forward(p["attn"], sub("attn."), policy, cfg,
                              L.apply_norm(h, p["ln1"], cfg.norm), positions,
                              causal=True)
         h = h + a.astype(h.dtype)
-        xa = attn.cross_forward(p["xattn"], sub("xattn."), tau, mode, cfg,
+        xa = attn.cross_forward(p["xattn"], sub("xattn."), policy, cfg,
                                 L.apply_norm(h, p["ln2"], cfg.norm), enc)
         h = h + xa.astype(h.dtype)
-        f = mlp_forward(p["mlp"], sub("mlp."), tau, mode, cfg,
+        f = mlp_forward(p["mlp"], sub("mlp."), policy, cfg,
                         L.apply_norm(h, p["ln3"], cfg.norm))
         return h + f.astype(h.dtype)
 
@@ -334,7 +335,7 @@ def _forward_encdec(params, nas, tau, cfg, batch, mode, remat):
                      None if nas is None else nas["dec_blocks"], x, remat)
     x = L.apply_norm(x, params["ln_f"], cfg.norm)
     head_nas = nas["lm_head"] if nas is not None else None
-    logits = L.qlinear(x, params["lm_head"], head_nas, tau, mode, cfg.quant,
+    logits = L.qlinear(x, params["lm_head"], head_nas, policy, cfg.quant,
                        compute_dtype=cd,
                   partial_dtype=L.partial_dtype_of(cfg))
     return _mask_pad(logits.astype(jnp.float32), cfg)
@@ -353,19 +354,19 @@ def lm_loss(logits: jnp.ndarray, batch: dict) -> jnp.ndarray:
     return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
-def forward_with_mtp(params, nas, tau, cfg, batch, mode, remat=True):
+def forward_with_mtp(params, nas, cfg, batch, policy, remat=True):
     """DeepSeek MTP: main CE + 0.3 x next-next-token CE via one extra block."""
-    logits = forward(params, nas, tau, cfg, batch, mode, remat)
+    logits = forward(params, nas, cfg, batch, policy, remat)
     if not cfg.mtp:
         return logits, None
     x = _embed_inputs(params, cfg, batch)
     positions = jnp.arange(x.shape[1])
     n_mtp = nas["mtp_block"] if nas is not None else None
-    h = block_forward(params["mtp_block"], n_mtp, tau, mode, cfg,
+    h = block_forward(params["mtp_block"], n_mtp, policy, cfg,
                       L.apply_norm(x, params["mtp_ln"], cfg.norm), positions)
     head_nas = nas["lm_head"] if nas is not None else None
     mtp_logits = L.qlinear(L.apply_norm(h, params["ln_f"], cfg.norm),
-                           params["lm_head"], head_nas, tau, mode, cfg.quant,
+                           params["lm_head"], head_nas, policy, cfg.quant,
                            compute_dtype=cfg.cdtype)
     return logits, mtp_logits.astype(jnp.float32)
 

@@ -1,8 +1,9 @@
 """Step factories: the production train_step / serve_step per architecture.
 
 ``train_step`` is the paper's **search-phase W update** (Alg. 1 line 7 — the
-80% path that dominates wall time): forward in "search" mode (DNAS mixture of
-fake-quantized weights/activations), next-token CE, AdamW update.  The theta
+80% path that dominates wall time): forward under ``PrecisionPolicy.search``
+(DNAS mixture of fake-quantized weights/activations), next-token CE, AdamW
+update.  The theta
 update (line 5) is built by ``make_theta_step`` and uses the Eq. 7/8
 regularizer; the launcher alternates them 20/80 like Alg. 1.
 
@@ -22,6 +23,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import PrecisionPolicy
 from repro.core import regularizers as reg
 from repro.models import transformer as tfm
 from repro.optim import optimizers as opt_mod
@@ -89,10 +91,10 @@ def init_train_state(cfg, hp: TrainHParams, key) -> dict:
     }
 
 
-def _task_loss(cfg, hp, params, nas, tau, batch, mode):
+def _task_loss(cfg, hp, params, nas, policy, batch):
     if cfg.mtp:
-        logits, mtp_logits = tfm.forward_with_mtp(params, nas, tau, cfg,
-                                                  batch, mode, hp.remat)
+        logits, mtp_logits = tfm.forward_with_mtp(params, nas, cfg,
+                                                  batch, policy, hp.remat)
         loss = tfm.lm_loss(logits, batch)
         if mtp_logits is not None:
             # next-next-token targets: shift labels by one more
@@ -101,7 +103,7 @@ def _task_loss(cfg, hp, params, nas, tau, batch, mode):
                                                jnp.float32).at[:, -1].set(0)}
             loss = loss + hp.mtp_weight * tfm.lm_loss(mtp_logits, mtp_batch)
         return loss
-    logits = tfm.forward(params, nas, tau, cfg, batch, mode, hp.remat)
+    logits = tfm.forward(params, nas, cfg, batch, policy, hp.remat)
     return tfm.lm_loss(logits, batch)
 
 
@@ -111,8 +113,8 @@ def make_train_step(cfg, hp: TrainHParams) -> Callable:
 
     def train_step(state, batch):
         def loss_fn(params):
-            return _task_loss(cfg, hp, params, state["nas"], state["tau"],
-                              batch, "search")
+            return _task_loss(cfg, hp, params, state["nas"],
+                              PrecisionPolicy.search(state["tau"]), batch)
         loss, grads = jax.value_and_grad(loss_fn)(state["params"])
         updates, new_opt = opt_w.update(grads, state["opt_w"],
                                         state["params"], state["step"])
@@ -136,8 +138,8 @@ def make_theta_step(cfg, hp: TrainHParams, tokens_per_batch: int) -> Callable:
 
     def theta_step(state, batch):
         def loss_fn(nas):
-            lt = _task_loss(cfg, hp, state["params"], nas, state["tau"],
-                            batch, "search")
+            lt = _task_loss(cfg, hp, state["params"], nas,
+                            PrecisionPolicy.search(state["tau"]), batch)
             flat = tfm.flatten_nas(nas)
             lr_cost = reg.total_cost(flat, state["tau"], specs, cfg.quant,
                                      hp.objective, hp.lut_name)
@@ -165,8 +167,8 @@ def make_qat_warmup_step(cfg, hp: TrainHParams) -> Callable:
 
     def warmup_step(state, batch):
         def loss_fn(params):
-            return _task_loss(cfg, hp, params, None, state["tau"], batch,
-                              "qat8")
+            return _task_loss(cfg, hp, params, None, PrecisionPolicy.QAT8,
+                              batch)
         loss, grads = jax.value_and_grad(loss_fn)(state["params"])
         updates, new_opt = opt_w.update(grads, state["opt_w"],
                                         state["params"], state["step"])

@@ -1,5 +1,6 @@
 """Sec. III-C deployment transform: reorder/group/pack/split must preserve
-the layer function exactly (up to integer-quantization rounding)."""
+the layer function exactly (up to integer-quantization rounding).  The
+transform's output is a repro.api.QTensor (registered pytree)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,7 +74,7 @@ def test_memory_bits_counts():
     w, gamma, alpha_w = _searched_linear(jax.random.PRNGKey(2), 16, 24)
     d = dpl.deploy_linear(w, gamma, alpha_w, None, 6.0, CFG, align=1)
     # packed bytes per group: rows * ceil(24*bits/8) bytes -> 8*size bits
-    exp = sum(grp["packed"].size * 8 for grp in d.groups.values())
+    exp = sum(int(p.size) * 8 for p in d.packed)
     assert dpl.memory_bits(d) == exp
     # and the total is bounded below by the ideal (unpadded) bit count
     bits = np.asarray(jnp.argmax(jnp.asarray(gamma), -1))
@@ -131,3 +132,70 @@ def test_dq_linear_backends_agree(backend):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(y_ref, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+def test_group_channels_align_128_promotes_upward_only():
+    """MXU-lane alignment: with align=128 every non-top group size is a
+    multiple of 128 and NO channel is ever demoted to fewer bits."""
+    rng = np.random.default_rng(7)
+    bits = rng.choice([2, 4, 8], size=500, p=[0.3, 0.5, 0.2])
+    perm, sizes = dpl.group_channels(bits, (2, 4, 8), align=128)
+    assert sorted(perm.tolist()) == list(range(500))
+    assert sum(sizes.values()) == 500
+    for b in (2, 4):                       # top group absorbs the remainder
+        assert sizes[b] % 128 == 0
+    offset = 0
+    for b in (2, 4, 8):
+        for ch in perm[offset:offset + sizes[b]]:
+            assert bits[ch] <= b           # upward-only promotion
+        offset += sizes[b]
+
+
+def test_group_channels_align_128_small_layer_collapses_upward():
+    """c_out < align: everything must end in the top-precision group (the
+    only one exempt from alignment) — never dropped, never demoted."""
+    bits = np.asarray([2, 4, 2, 8, 4, 4, 2, 8])
+    perm, sizes = dpl.group_channels(bits, (2, 4, 8), align=128)
+    assert sizes == {2: 0, 4: 0, 8: 8}
+    assert sorted(perm.tolist()) == list(range(8))
+
+
+def test_align_128_perm_propagates_to_next_layer_c_in():
+    """Full two-layer check at align=128: layer-1 deployed WITHOUT runtime
+    order restore + layer-2's c_in permuted via propagate_perm == canonical
+    composition (the paper's Fig. 2 pipeline on MXU-aligned groups)."""
+    rng = np.random.default_rng(3)
+    c1, c2 = 256, 64
+    w1 = rng.standard_normal((c1, 48)).astype(np.float32)
+    w2 = rng.standard_normal((c2, c1)).astype(np.float32)
+    gamma = rng.standard_normal((c1, 3)).astype(np.float32) * 3
+    alpha1 = np.abs(w1).max(-1)
+    qt1 = dpl.deploy_linear(w1, gamma, alpha1, None, 6.0, CFG, align=128,
+                            restore_order=False)
+    sizes = qt1.group_sizes
+    for b, n in list(sorted(sizes.items()))[:-1]:
+        assert n % 128 == 0                # aligned non-top groups
+    x = jnp.asarray(rng.standard_normal((4, 48)), jnp.float32)
+    # deployed-order layer 1 output + perm-propagated layer 2
+    h_deployed = qt1.matmul(x, jnp.float32)          # deployed channel order
+    w2p = dpl.propagate_perm(w2, qt1.perm)
+    y = h_deployed @ jnp.asarray(w2p).T
+    # canonical reference: align-promotion changes (raises) some channels'
+    # precision vs the raw argmax, so the reference is the QTensor's own
+    # canonical-order dequantized weight, not the align=1 frozen weight
+    w1_canon = qt1.dequantize_canonical(jnp.float32)
+    h_canon = x @ w1_canon.T
+    y_ref = h_canon @ jnp.asarray(w2).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-3)
+    # and inv_perm undoes the deployed order exactly
+    h_restored = jnp.take(h_deployed, jnp.asarray(qt1.inv_perm), axis=-1)
+    np.testing.assert_allclose(np.asarray(h_restored), np.asarray(h_canon),
+                               rtol=1e-4, atol=1e-4)
+    # promotion is upward-only: every channel's deployed bits >= argmax bits
+    argmax_bits = np.asarray(mp.argmax_weight_bits(jnp.asarray(gamma), CFG))
+    offset = 0
+    for b in sorted(qt1.bits):
+        rows = qt1.perm[offset:offset + qt1.group_sizes[b]]
+        assert (argmax_bits[rows] <= b).all()
+        offset += qt1.group_sizes[b]

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import PrecisionPolicy
 from repro.config import ARCH_IDS, get_config
 from repro.models import serving
 from repro.models import transformer as tfm
@@ -32,15 +33,17 @@ def _batch(cfg, B=2, S=16, seed=0):
 
 
 @pytest.mark.parametrize("arch", ALL)
-def test_reduced_forward_all_modes(arch):
+def test_reduced_forward_all_policies(arch):
     cfg = get_config(arch).reduced()
     params, nas = tfm.init_model(cfg, jax.random.PRNGKey(0))
     batch = _batch(cfg)
-    for mode in ("float", "qat8", "search", "frozen"):
-        logits = tfm.forward(params, nas if mode != "qat8" else None,
-                             5.0, cfg, batch, mode, remat=False)
-        assert logits.shape == (2, 16, cfg.padded_vocab), mode
-        assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size]))), mode
+    for policy in (PrecisionPolicy.FLOAT, PrecisionPolicy.QAT8,
+                   PrecisionPolicy.search(5.0), PrecisionPolicy.FROZEN):
+        logits = tfm.forward(params, nas if policy.needs_nas else None,
+                             cfg, batch, policy, remat=False)
+        assert logits.shape == (2, 16, cfg.padded_vocab), policy
+        assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size]))), \
+            policy
 
 
 @pytest.mark.parametrize("arch", ALL)
@@ -99,6 +102,7 @@ def test_mtp_auxiliary_head():
     cfg = get_config("deepseek-v3-671b").reduced()
     assert cfg.mtp
     params, nas = tfm.init_model(cfg, jax.random.PRNGKey(0))
-    logits, mtp = tfm.forward_with_mtp(params, nas, 5.0, cfg, _batch(cfg),
-                                       "search", remat=False)
+    logits, mtp = tfm.forward_with_mtp(params, nas, cfg, _batch(cfg),
+                                       PrecisionPolicy.search(5.0),
+                                       remat=False)
     assert mtp is not None and mtp.shape == logits.shape

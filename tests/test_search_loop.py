@@ -93,3 +93,48 @@ def test_early_stop_triggers():
                             settings)
     n_search = sum(1 for h in res.history if h["phase"] == "search")
     assert n_search < 50
+
+
+def test_run_search_zero_batches_no_crash():
+    """Regression: an epoch source yielding ZERO batches must not raise
+    UnboundLocalError on the history writes (loss/lt/lr guards)."""
+    cfg, apply_fn, specs, params, nas, _, loss_fn = _setup(n=32)
+    settings = search.SearchSettings(
+        cfg=cfg.quant, objective="size", lam=1e-6,
+        warmup_epochs=1, search_epochs=2, finetune_epochs=1)
+    res = search.run_search(apply_fn, loss_fn, specs, params, nas,
+                            lambda: iter(()), settings)
+    assert len(res.history) == 4          # entries written, no stale losses
+    for h in res.history:
+        assert "loss" not in h and "task_loss" not in h and \
+            "reg_cost" not in h
+    # tau still annealed per search epoch
+    assert float(res.tau) < cfg.quant.tau0
+
+
+def test_run_search_fewer_batches_than_theta_split():
+    """A 1-batch epoch (< 1/theta_frac) sends everything to the theta update
+    and leaves the W loop empty — must still record the search epoch."""
+    cfg, apply_fn, specs, params, nas, _, loss_fn = _setup(n=16, batch=16)
+    settings = search.SearchSettings(
+        cfg=cfg.quant, objective="size", lam=1e-6, theta_frac=0.2,
+        warmup_epochs=0, search_epochs=1, finetune_epochs=0)
+    data = pipe.SyntheticTiny(cfg, n=16, seed=0)
+    res = search.run_search(apply_fn, loss_fn, specs, params, nas,
+                            lambda: data.batches(16), settings)
+    entry = [h for h in res.history if h["phase"] == "search"][0]
+    assert "task_loss" in entry and "reg_cost" in entry
+
+
+def test_search_driver_phases_individually():
+    """SearchDriver (the Engine's substrate) drives phases separately while
+    sharing optimizer state."""
+    cfg, apply_fn, specs, params, nas, epochs, loss_fn = _setup(n=32)
+    settings = search.SearchSettings(
+        cfg=cfg.quant, objective="size", lam=1e-6,
+        warmup_epochs=1, search_epochs=1, finetune_epochs=1)
+    d = search.SearchDriver(apply_fn, loss_fn, specs, params, nas, settings)
+    d.warmup(epochs).search(epochs).finetune(epochs)
+    res = d.result()
+    assert [h["phase"] for h in res.history] == \
+        ["warmup", "search", "finetune"]

@@ -87,6 +87,34 @@ def bench_kernels() -> list[str]:
     return rows
 
 
+def bench_tinyml() -> list[str]:
+    """Deployed MLPerf-Tiny forward, fully packed, jnp vs Pallas conv path.
+
+    Engine.deploy -> Engine.serve end-to-end: convs run as im2col
+    patch-GEMMs over packed sub-byte groups (QTensor.conv2d), depthwise
+    convs through the grouped per-channel path.  CPU-interpret timings are
+    correctness-path numbers, not TPU perf.
+    """
+    from repro.api import Engine
+    from repro.data import pipeline as pipe
+    from repro.models import tinyml
+    rows = ["tinyml:model,backend,ms_per_batch,packed_kB"]
+    for name in ("dae-ad", "resnet8-cifar10", "dscnn-kws",
+                 "mobilenetv1-vww"):
+        cfg = tinyml.TINY_CONFIGS[name]
+        eng = Engine.for_tinyml(cfg, key=jax.random.PRNGKey(0))
+        # mixed per-channel groups without paying for a search
+        eng.randomize_nas(0)
+        eng.deploy(align=1)
+        batch = next(iter(pipe.SyntheticTiny(cfg, n=8, seed=0).batches(4)))
+        kb = eng.memory_bits() / 8e3
+        for backend in ("jnp", "pallas"):
+            dt, _ = _time(lambda: eng.serve(batch, backend=backend),
+                          n=3, warmup=1)
+            rows.append(f"tinyml:{name},{backend},{dt * 1e3:.1f},{kb:.1f}")
+    return rows
+
+
 def bench_serving() -> list[str]:
     from repro.config import get_config
     from repro.models import serving
@@ -130,6 +158,7 @@ def bench_roofline() -> list[str]:
 SECTIONS = {
     "deploy": bench_deploy,
     "kernels": bench_kernels,
+    "tinyml": bench_tinyml,
     "serving": bench_serving,
     "roofline": bench_roofline,
     "pareto": bench_pareto,

@@ -8,6 +8,9 @@
 4. Deploy (Sec. III-C): every searched weight becomes a packed `QTensor`,
    then serve the deployed model and verify it computes the same function
    as the frozen (argmax fake-quant) reference.
+5. Packed conv forward: a ResNet-8 deploys and serves through the
+   im2col patch-GEMM conv path (`QTensor.conv2d` -> Pallas quant_matmul)
+   — no dense kernel is materialized (docs/deployed_conv.md).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -61,3 +64,16 @@ served = eng.serve(batch, backend="pallas")         # Pallas quant_matmul path
 frozen = eng.apply_fn(eng.params, eng.nas, PrecisionPolicy.FROZEN, batch)
 err = float(jnp.max(jnp.abs(served - frozen)))
 print(f"\n|served (deployed, Pallas) - frozen reference| max = {err:.2e}")
+
+# 5. packed conv forward: ResNet-8 through the im2col patch-GEMM path -------
+conv_cfg = tinyml.TINY_CONFIGS["resnet8-cifar10"]
+conv_eng = Engine.for_tinyml(conv_cfg, key=jax.random.PRNGKey(1))
+conv_eng.randomize_nas(1)   # mixed per-channel groups without a search
+conv_eng.deploy(align=1)
+conv_batch = next(iter(pipe.SyntheticTiny(conv_cfg, n=8, seed=1).batches(4)))
+conv_served = conv_eng.serve(conv_batch, backend="pallas")
+conv_frozen = conv_eng.apply_fn(conv_eng.params, conv_eng.nas,
+                                PrecisionPolicy.FROZEN, conv_batch)
+conv_err = float(jnp.max(jnp.abs(conv_served - conv_frozen)))
+print(f"\nresnet8 packed conv (Pallas, {conv_eng.memory_bits() / 8e3:.1f} KB):"
+      f" |served - frozen| max = {conv_err:.2e}")

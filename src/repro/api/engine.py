@@ -88,6 +88,23 @@ class Engine:
         self.driver.finetune(data_epochs, epochs=epochs)
         return self
 
+    def randomize_nas(self, seed: int = 0) -> "Engine":
+        """Randomize the NAS logits in place (bench / demo / test utility).
+
+        Gives ``deploy`` genuinely mixed per-channel precision groups
+        without paying for a search.  Never part of the paper's pipeline —
+        Alg. 1 *learns* these logits; this exists so parity harnesses,
+        benchmarks and examples exercise the multi-group deployed paths
+        from one recipe (tests/test_conv_parity.py pins it).
+        """
+        rng = np.random.default_rng(seed)
+        for site in self.nas.values():
+            site["gamma"] = jnp.asarray(
+                rng.standard_normal(site["gamma"].shape) * 3, jnp.float32)
+            site["delta"] = jnp.asarray(
+                rng.standard_normal(site["delta"].shape), jnp.float32)
+        return self
+
     def deploy(self, align: int = 1) -> dict:
         """Sec. III-C offline transform: searched float weights -> QTensor.
 
@@ -141,8 +158,12 @@ class Engine:
     def serve(self, batch, backend: str = "pallas"):
         """Jitted deployed forward (the Pallas quant_matmul path by default).
 
-        The first call compiles; subsequent calls with same-shaped batches
-        reuse the executable.
+        ``backend`` threads through ``PrecisionPolicy.deployed`` into every
+        layer: linears run packed sub-GEMMs and convs run packed im2col
+        patch-GEMMs (``QTensor.conv2d``) — the four MLPerf-Tiny models serve
+        fully packed with no dense kernel re-materialization.  The first
+        call compiles; subsequent calls with same-shaped batches reuse the
+        executable.
         """
         assert self.deployed_params is not None, "deploy() first"
         if self._serve_fn is None or self._serve_backend != backend:

@@ -22,6 +22,9 @@ data), a whole deployed model is just a params tree with ``QTensor`` leaves:
 it flows through ``jax.jit`` / ``jax.vmap`` / ``device_put`` unchanged, and
 ``matmul`` routes each precision group through the Pallas
 ``quant_matmul`` kernel (``backend="pallas"``) or the jnp fallback.
+``conv2d`` lowers an NHWC conv to im2col patches (kernels/quant_conv.py)
+and delegates to ``matmul`` — the deployed conv path never materializes a
+dense float kernel (depthwise convs take a grouped per-channel fall-back).
 
 This replaces the old offline-only ``core.deploy.DeployedLinear`` numpy
 holder; the search-time, fine-tune, and serving paths now share one type.
@@ -132,12 +135,27 @@ class QTensor:
         return sum(int(p.size) * 8 for p in self.packed)
 
     # -- compute ------------------------------------------------------------
+    def _group_dense(self, b: int, p: jnp.ndarray, s: jnp.ndarray,
+                     compute_dtype) -> jnp.ndarray:
+        """Unpack + dequant ONE precision group to ``(rows_b, c_in)`` — the
+        jnp fall-back's small per-group materialization (never the whole
+        canonical weight)."""
+        w_int = qz.unpack_int(p, b)[..., : self.c_in]
+        return (w_int.astype(jnp.float32) * s[..., None]).astype(compute_dtype)
+
+    def _concat_restore(self, outs: list) -> jnp.ndarray:
+        """Concat per-precision group outputs (deployed channel order) and
+        restore canonical order — the single tail shared by ``matmul`` and
+        both ``conv2d`` paths so the backends/layouts cannot drift."""
+        y = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+        if self.restore_order and self.inv_perm is not None:
+            y = jnp.take(y, self.inv_perm, axis=-1)
+        return y
+
     def _dequantize_groups(self) -> jnp.ndarray:
         """Float weight stack in **deployed** (group-contiguous) order."""
-        outs = []
-        for b, p, s in zip(self.bits, self.packed, self.scales):
-            w_int = qz.unpack_int(p, b)[..., : self.c_in]
-            outs.append(w_int.astype(jnp.float32) * s[..., None])
+        outs = [self._group_dense(b, p, s, jnp.float32)
+                for b, p, s in zip(self.bits, self.packed, self.scales)]
         return jnp.concatenate(outs, axis=-2) if len(outs) > 1 else outs[0]
 
     def dequantize_canonical(self, dtype=jnp.float32) -> jnp.ndarray:
@@ -173,20 +191,76 @@ class QTensor:
         runs each sub-GEMM through the fused unpack+dequant+GEMM kernel
         (kernels/quant_matmul.py); this method owns the concat/restore so the
         two backends cannot drift."""
+        if x.shape[-1] != self.c_in:
+            raise ValueError(
+                f"x contraction dim {x.shape[-1]} != c_in {self.c_in} "
+                "(both backends reject this — the Pallas kernel would "
+                "otherwise zero-pad and compute silently wrong outputs)")
         if backend == "pallas":
             from repro.kernels import ops as kops
 
             def gemm(b, p, s):
-                return kops.quant_matmul(x, p, s, b, self.c_in, compute_dtype)
+                # compute_dtype reaches the kernel's MXU dot as well as the
+                # output cast: f32 (the default) is the bit-parity path with
+                # the fake-quant reference, bf16 the TPU fast path.
+                return kops.quant_matmul(x, p, s, b, self.c_in,
+                                         out_dtype=compute_dtype,
+                                         compute_dtype=compute_dtype)
         else:
             def gemm(b, p, s):
-                w_int = qz.unpack_int(p, b)[..., : self.c_in]
-                w = (w_int.astype(jnp.float32)
-                     * s[..., None]).astype(compute_dtype)
+                w = self._group_dense(b, p, s, compute_dtype)
                 return jnp.einsum("...i,oi->...o", x.astype(compute_dtype), w)
         outs = [gemm(b, p, s)
                 for b, p, s in zip(self.bits, self.packed, self.scales)]
-        y = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
-        if self.restore_order and self.inv_perm is not None:
-            y = jnp.take(y, self.inv_perm, axis=-1)
-        return y
+        return self._concat_restore(outs)
+
+    def conv2d(self, x: jnp.ndarray, stride=1, padding: str = "SAME",
+               groups: int = 1, compute_dtype=jnp.float32,
+               backend: str = "jnp") -> jnp.ndarray:
+        """NHWC conv ``x (N, H, W, C) -> (N, Ho, Wo, c_out)`` fully packed.
+
+        The deployed realization of the paper's parallel per-precision
+        sub-convolutions: the input is lowered to im2col patches once
+        (feature axis channel-major — the exact ``(c_out, c_in*kh*kw)``
+        contraction layout this QTensor packs), then **delegates to**
+        :meth:`matmul`, so the per-group sub-GEMMs, Pallas/jnp backend
+        split, concat and canonical-order restore are one code path for
+        linear and conv and cannot drift.  No dense float kernel is ever
+        materialized.
+
+        Depthwise weights (``groups == c_out``, kernel tail ``(1, kh, kw)``
+        — DS-CNN/MobileNetV1 ``dwconv``) contract only the ``kh*kw`` taps of
+        their own channel, which is not a single GEMM; they take the grouped
+        fall-back below: per-precision-group gather of the channel-major
+        patches + a tiny ``(rows, kh*kw)`` group unpack (the same amount the
+        jnp matmul fall-back unpacks), identical for both backends.
+        """
+        if self.kernel_shape is None:
+            raise TypeError("conv2d requires a conv QTensor "
+                            "(kernel_shape is None — this is a linear map)")
+        from repro.kernels import quant_conv as qc
+
+        kh, kw = self.kernel_shape[-2:]
+        if groups == 1:
+            patches = qc.im2col(x, kh, kw, stride, padding)
+            return self.matmul(patches, compute_dtype, backend)
+        if groups != self.c_out or self.kernel_shape[0] != 1 \
+                or x.shape[-1] != groups:
+            raise NotImplementedError(
+                f"grouped conv with groups={groups} (c_out={self.c_out}, "
+                f"kernel_shape={self.kernel_shape}): only groups=1 and "
+                "depthwise (groups == c_out, tail (1, kh, kw)) are packed")
+        # -- depthwise fall-back: per-channel tap contraction ---------------
+        patches = qc.depthwise_patches(x, kh, kw, stride, padding)
+        if self.inv_perm is not None:
+            # gather input channels into deployed (group-contiguous) order;
+            # traced-safe (jnp.argsort, not the numpy .perm property)
+            patches = jnp.take(patches, jnp.argsort(self.inv_perm), axis=-2)
+        outs, offset = [], 0
+        for b, p, s in zip(self.bits, self.packed, self.scales):
+            rows = p.shape[-2]
+            w = self._group_dense(b, p, s, compute_dtype)   # (rows, kh*kw)
+            seg = patches[..., offset: offset + rows, :].astype(compute_dtype)
+            outs.append(jnp.einsum("...ck,ck->...c", seg, w))
+            offset += rows
+        return self._concat_restore(outs)

@@ -23,8 +23,12 @@ and the channel permutation.  Unlike the numpy ``DeployedLinear`` it
 replaces, a ``QTensor`` flows straight through ``jax.jit``/``jax.vmap`` into
 the Pallas ``quant_matmul`` kernels, so the same object serves offline
 analysis (``memory_bits``) and the production serving path
-(models/serving.py).  The grouping itself stays offline/one-time, exactly as
-in the paper ("performed offline and does not have run-time overheads").
+(models/serving.py).  Conv weights keep their kernel tail shape inside the
+QTensor and serve through ``QTensor.conv2d`` — im2col patch-GEMMs over the
+same packed groups (kernels/quant_conv.py), so the conv-dominated MLPerf
+Tiny models never re-materialize a dense kernel either (see
+docs/deployed_conv.md).  The grouping itself stays offline/one-time, exactly
+as in the paper ("performed offline and does not have run-time overheads").
 """
 from __future__ import annotations
 
@@ -82,10 +86,11 @@ def deploy_linear(w: np.ndarray, gamma: np.ndarray, alpha_w: np.ndarray,
     """Full Sec. III-C transform of one searched map ``w`` -> ``QTensor``.
 
     ``w`` is ``(c_out, ...)`` (trailing dims flatten into the contraction
-    axis; conv kernels keep their tail shape inside the QTensor).  With
-    ``restore_order=False`` the QTensor keeps deployed channel order and the
-    caller must permute the next layer's ``c_in`` with ``.perm``
-    (:func:`propagate_perm`).
+    axis; conv kernels keep their tail shape inside the QTensor, and their
+    channel-major flattening matches the im2col patch layout
+    ``QTensor.conv2d`` contracts against).  With ``restore_order=False`` the
+    QTensor keeps deployed channel order and the caller must permute the
+    next layer's ``c_in`` with ``.perm`` (:func:`propagate_perm`).
     """
     w = np.asarray(w, dtype=np.float32)
     c_out = w.shape[0]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import quantizers as qz
 from repro.kernels import fake_quant as fq_kernel
+from repro.kernels import quant_conv as qc_kernel
 from repro.kernels import quant_matmul as qm_kernel
 
 # interpret=True executes the kernel body in Python on CPU (validation);
@@ -33,23 +34,30 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "c_in", "out_dtype", "bm", "bn",
-                                    "bk"))
+                                    "bk", "compute_dtype"))
 def quant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
                  bits: int, c_in: int, out_dtype=jnp.bfloat16,
-                 bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
+                 bm: int = 128, bn: int = 128, bk: int = 512,
+                 compute_dtype=jnp.bfloat16) -> jnp.ndarray:
     """x (..., c_in) @ dequant(packed (n, ceil(c_in/f))) -> (..., n)."""
     f = qz.pack_factor(bits)
+    Kp = packed.shape[1] * f                     # pack-padded c_in
+    if x.shape[-1] != c_in:
+        raise ValueError(
+            f"x contraction dim {x.shape[-1]} != c_in {c_in} — for conv "
+            "patches this means the im2col width does not match the packed "
+            "kernel's C*kh*kw")
+    if not 0 <= Kp - c_in < f:
+        raise ValueError(
+            f"packed K {Kp} (= {packed.shape[1]} bytes * {f}) does not "
+            f"correspond to c_in {c_in} at {bits} bits")
     lead = x.shape[:-1]
     M = 1
     for d in lead:
         M *= d
-    x2 = x.reshape(M, x.shape[-1]).astype(jnp.bfloat16)
+    x2 = x.reshape(M, x.shape[-1]).astype(compute_dtype)
     N = packed.shape[0]
-    Kp = packed.shape[1] * f                     # padded c_in
-    x2 = _pad_to(x2, 1, Kp - x.shape[-1] + x.shape[-1]) if Kp != x.shape[-1] \
-        else x2
-    if Kp != x2.shape[1]:
-        x2 = jnp.pad(x2, ((0, 0), (0, Kp - x2.shape[1])))
+    x2 = _pad_to(x2, 1, Kp)                      # exactly Kp (single pad)
     # choose tile sizes that divide (pad where they don't)
     bm_ = min(bm, max(8, 1 << (M - 1).bit_length())) if M < bm else bm
     x2 = _pad_to(x2, 0, bm_)
@@ -63,7 +71,8 @@ def quant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
             break
     y = qm_kernel.quant_matmul_2d(x2, packed_p, scale_p, bits, bm=bm_,
                                   bn=min(bn, packed_p.shape[0]), bk=bk_,
-                                  interpret=INTERPRET, out_dtype=out_dtype)
+                                  interpret=INTERPRET, out_dtype=out_dtype,
+                                  compute_dtype=compute_dtype)
     return y[:M, :N].reshape(*lead, N)
 
 
@@ -75,6 +84,40 @@ def qtensor_matmul(x: jnp.ndarray, qt, out_dtype=jnp.bfloat16) -> jnp.ndarray:
     of truth for both backends); this wrapper just pins the Pallas backend.
     """
     return qt.matmul(x, out_dtype, backend="pallas")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "c_in", "kernel_hw", "stride",
+                                    "padding", "out_dtype", "compute_dtype"))
+def quant_conv2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                 bits: int, c_in: int, kernel_hw: tuple, stride=1,
+                 padding: str = "SAME", out_dtype=jnp.float32,
+                 compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Packed conv of ONE precision group: im2col + fused patch-GEMM.
+
+    ``x (N, H, W, C)`` NHWC against ``packed (n, ceil(c_in/f))`` where
+    ``c_in = C * kh * kw`` is the flattened contraction axis (channel-major,
+    matching ``(c_out, C, kh, kw).reshape(c_out, -1)``) -> ``(N, Ho, Wo, n)``.
+    The dense float kernel is never materialized: packed bytes stream into
+    the quant_matmul kernel and unpack in VMEM.  Group concat / channel-order
+    restore for a multi-precision ``QTensor`` live in ``QTensor.conv2d``.
+    """
+    kh, kw = kernel_hw
+    patches = qc_kernel.im2col(x, kh, kw, stride, padding)
+    return quant_matmul(patches, packed, scale, bits, c_in,
+                        out_dtype=out_dtype, compute_dtype=compute_dtype)
+
+
+def qtensor_conv2d(x: jnp.ndarray, qt, stride=1, padding: str = "SAME",
+                   groups: int = 1, out_dtype=jnp.float32) -> jnp.ndarray:
+    """NHWC ``x`` * conv :class:`QTensor` -> ``(N, Ho, Wo, c_out)``, Pallas.
+
+    Mirror of :func:`qtensor_matmul` for convolutions: the im2col, group
+    loop, concat and order-restore live in ``QTensor.conv2d`` (single source
+    of truth for both backends); this wrapper just pins the Pallas backend.
+    """
+    return qt.conv2d(x, stride=stride, padding=padding, groups=groups,
+                     compute_dtype=out_dtype, backend="pallas")
 
 
 @functools.partial(jax.jit, static_argnames=("bitwidths",))

@@ -1,0 +1,58 @@
+"""im2col patch extraction for the packed quantized conv path.
+
+The deployed conv of a searched layer (Sec. III-C) never materializes a
+dense float kernel: the NHWC input is lowered to im2col patches whose
+feature axis matches the ``QTensor`` contraction layout, and each
+per-precision channel group then runs as a patch-GEMM through the fused
+unpack+dequant+GEMM Pallas kernel (kernels/quant_matmul.py) — the paper's
+"parallel sub-convolutions" realized as sub-GEMMs over shared patches.
+
+Layout contract (load-bearing, asserted by tests/test_kernels.py):
+``lax.conv_general_dilated_patches`` with NHWC dimension numbers emits the
+patch feature axis **channel-major** — feature ``c * kh * kw + i * kw + j``
+is input channel ``c`` at kernel tap ``(i, j)`` — which is exactly how a
+``(c_out, c_in, kh, kw)`` weight flattens to the ``(c_out, c_in * kh * kw)``
+contraction matrix a ``QTensor`` packs.  Patches therefore multiply packed
+groups directly, with no re-ordering in between.
+
+Depthwise convolutions (DS-CNN / MobileNetV1 ``dwconv``) contract only over
+the ``kh * kw`` taps of each channel — not a single GEMM — so they take the
+grouped-patch fall-back: :func:`depthwise_patches` exposes the per-channel
+patch view and the per-precision-group contraction happens in
+``QTensor.conv2d`` (still packed in HBM; only the tiny ``(rows, kh*kw)``
+group slices unpack, same as the jnp matmul fall-back).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _norm_stride(stride: Union[int, Sequence[int]]) -> tuple:
+    return (stride, stride) if isinstance(stride, int) else tuple(stride)
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride=1,
+           padding: str = "SAME") -> jnp.ndarray:
+    """NHWC ``x (N, H, W, C)`` -> patches ``(N, Ho, Wo, C * kh * kw)``.
+
+    Feature axis is channel-major (see module docstring), so
+    ``patches @ w.reshape(c_out, -1).T`` equals the dense conv.
+    """
+    return lax.conv_general_dilated_patches(
+        x, (kh, kw), _norm_stride(stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def depthwise_patches(x: jnp.ndarray, kh: int, kw: int, stride=1,
+                      padding: str = "SAME") -> jnp.ndarray:
+    """NHWC ``x (N, H, W, C)`` -> ``(N, Ho, Wo, C, kh * kw)``.
+
+    The per-channel patch view of a depthwise conv: output channel ``c``
+    contracts its own ``kh * kw`` taps only.  The reshape is free because
+    the im2col feature axis is channel-major.
+    """
+    p = im2col(x, kh, kw, stride, padding)
+    return p.reshape(*p.shape[:-1], x.shape[-1], kh * kw)

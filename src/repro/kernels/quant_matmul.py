@@ -52,11 +52,11 @@ def _unpack_block(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 def _kernel(x_ref, p_ref, s_ref, o_ref, *, bits: int, k_steps: int,
-            out_dtype):
+            out_dtype, compute_dtype):
     k = pl.program_id(2)
     w_int = _unpack_block(p_ref[...], bits)                 # (bn, bk) int8
     x = x_ref[...]                                          # (bm, bk)
-    acc = jnp.dot(x.astype(jnp.bfloat16), w_int.astype(jnp.bfloat16).T,
+    acc = jnp.dot(x.astype(compute_dtype), w_int.astype(compute_dtype).T,
                   preferred_element_type=jnp.float32)       # (bm, bn)
 
     @pl.when(k == 0)
@@ -75,8 +75,16 @@ def _kernel(x_ref, p_ref, s_ref, o_ref, *, bits: int, k_steps: int,
 def quant_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
                     bits: int, *, bm: int = 128, bn: int = 128,
                     bk: int = 512, interpret: bool = True,
-                    out_dtype=jnp.float32) -> jnp.ndarray:
-    """x (M, K) x packed (N, K/f) -> (M, N) f32; M/N/K already padded."""
+                    out_dtype=jnp.float32,
+                    compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x (M, K) x packed (N, K/f) -> (M, N) f32; M/N/K already padded.
+
+    ``compute_dtype`` is the MXU input dtype: bf16 (default, the TPU fast
+    path — int weights <= 127 are bf16-exact so only the activations round)
+    or f32 (full-precision parity with the fake-quant reference at the cost
+    of MXU passes — what ``QTensor.matmul``/``conv2d`` use by default).
+    Accumulation is always f32.
+    """
     M, K = x.shape
     N = packed.shape[0]
     f = qz.pack_factor(bits)
@@ -85,7 +93,7 @@ def quant_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     assert bk % f == 0 and packed.shape[1] == K // f
     k_steps = K // bk
     kern = functools.partial(_kernel, bits=bits, k_steps=k_steps,
-                             out_dtype=out_dtype)
+                             out_dtype=out_dtype, compute_dtype=compute_dtype)
     out = pl.pallas_call(
         kern,
         grid=(M // bm, N // bn, k_steps),

@@ -166,18 +166,23 @@ def qconv2d(x: jnp.ndarray, p: dict, nas: Optional[dict],
     """Quantization-aware NHWC conv with (c_out, c_in/g, kh, kw) weights.
 
     ``signed_act=False`` matches the paper's post-ReLU unsigned activations.
-    A QTensor weight (deployed phase) is dequantized to its dense kernel and
-    convolved — the weights are stored packed (the paper's memory win); the
-    conv-as-im2col-GEMM kernel routing is a follow-up.
+    A QTensor weight (deployed phase) runs fully packed: each precision
+    group is an im2col patch-GEMM through the fused unpack+dequant+GEMM
+    Pallas kernel (``policy.backend == "pallas"``) or the jnp fallback —
+    ``QTensor.conv2d`` owns the routing, and no dense float kernel is ever
+    materialized (depthwise convs use its grouped per-channel path).
     """
     w = p["w"]
     if isinstance(w, QTensor):
-        x = deployed_act(x, w, signed_act)
-        w = w.dense(jnp.float32)
-    elif policy.phase is Phase.DEPLOYED:
+        xq = deployed_act(x, w, signed_act)
+        y = w.conv2d(xq, stride=stride, padding=padding, groups=groups,
+                     compute_dtype=jnp.float32, backend=policy.backend)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    if policy.phase is Phase.DEPLOYED:
         raise TypeError("DEPLOYED policy requires a QTensor weight leaf")
-    else:
-        x, w = _quant_pair(x, w, p, nas, policy, qcfg, signed_act)
+    x, w = _quant_pair(x, w, p, nas, policy, qcfg, signed_act)
     # lax wants (kh, kw, c_in/g, c_out) for NHWC/HWIO
     kernel = jnp.transpose(w, (2, 3, 1, 0))
     y = jax.lax.conv_general_dilated(

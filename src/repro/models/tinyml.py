@@ -9,8 +9,10 @@ Models are described as op lists consumed by a tiny interpreter, which gives
 init / quant-aware apply / LayerCostSpec generation from one description.
 ``apply_fn(params, nas, policy, batch)`` takes a
 :class:`repro.api.PrecisionPolicy`; with QTensor weight leaves
-(engine.deploy output) and ``PrecisionPolicy.deployed(...)`` the same
-interpreter serves the packed model.
+(engine.deploy output) and ``PrecisionPolicy.deployed(backend)`` the same
+interpreter serves the packed model — convs as im2col patch-GEMMs through
+the Pallas quant_matmul kernel (``backend="pallas"``), depthwise convs
+through the grouped per-channel path (``QTensor.conv2d``).
 BatchNorm is represented as a per-channel scale+bias (the folded form used at
 deployment — QAT pipelines fold BN into the preceding conv).
 

@@ -8,3 +8,33 @@ os.environ.pop("XLA_FLAGS", None)
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+# Shard count for the slow per-arch smoke suite (test_models_smoke.py):
+# CI runs `pytest tests/test_models_smoke.py -m smokeN` as a matrix
+# dimension (one job per shard — keep .github/workflows/ci.yml's matrix
+# list in sync with this).  test_models_smoke.py imports this constant.
+N_SMOKE_SHARDS = 4
+
+
+def pytest_configure(config):
+    for i in range(N_SMOKE_SHARDS):
+        config.addinivalue_line(
+            "markers", f"smoke{i}: test_models_smoke CI matrix shard {i}")
+
+
+def pytest_collection_modifyitems(config, items):
+    # Safety net: tier-1 CI ignores test_models_smoke.py and each matrix
+    # job selects one smokeN mark, so a test added there WITHOUT a shard
+    # mark would never run in CI.  Assign unmarked ones deterministically.
+    import zlib
+
+    import pytest
+
+    for item in items:
+        if os.path.basename(str(item.fspath)) != "test_models_smoke.py":
+            continue
+        if any(m.name.startswith("smoke") for m in item.iter_markers()):
+            continue
+        shard = zlib.crc32(item.nodeid.encode()) % N_SMOKE_SHARDS
+        item.add_marker(getattr(pytest.mark, f"smoke{shard}"))

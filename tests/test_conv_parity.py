@@ -1,0 +1,188 @@
+"""Cross-phase parity harness over the paper's four MLPerf Tiny configs.
+
+For every config (resnet8_cifar10, dscnn_kws, mobilenetv1_vww, dae_ad) the
+same network is evaluated in three ways on one batch:
+
+  frozen            — fake-quant reference (argmax assignment, float compute)
+  deployed-jnp      — packed QTensor leaves, jnp per-group sub-GEMM backend
+  deployed-pallas   — packed QTensor leaves, Pallas quant_matmul kernels in
+                      interpret mode, under ``jax.jit`` (the acceptance path)
+
+and all three must agree within 1e-4 (f32 compute end-to-end: the deploy
+transform is exact w.r.t. the frozen fake-quant — same integer grid, same
+step — so only accumulation order differs).  Convs run as im2col
+patch-GEMMs over packed groups, depthwise convs through the grouped
+per-channel path; no call site re-materializes a dense kernel.
+
+The NAS logits are randomized (no search — that is covered by
+tests/test_api.py) so every model deploys with genuinely mixed per-channel
+precision groups, exercising the group concat + canonical-order restore.
+
+Also includes direct QTensor.conv2d vs dense-lax-conv unit checks (incl.
+depthwise and stride/padding variants) — the backend-drift guards.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.api import Engine, PrecisionPolicy, QTensor
+from repro.data import pipeline as pipe
+from repro.models import tinyml
+
+TINY = ("resnet8-cifar10", "dscnn-kws", "mobilenetv1-vww", "dae-ad")
+
+TOL = 1e-4
+
+
+def _deployed_engine(name, seed=0, batch_size=2):
+    """Engine with randomized NAS logits, deployed; plus one eval batch."""
+    cfg = tinyml.TINY_CONFIGS[name]
+    eng = Engine.for_tinyml(cfg, key=jax.random.PRNGKey(seed))
+    eng.randomize_nas(seed)
+    eng.deploy(align=1)
+    batch = next(iter(pipe.SyntheticTiny(cfg, n=2 * batch_size,
+                                         seed=seed).batches(batch_size)))
+    return cfg, eng, batch
+
+
+def _per_layer_memory_bits(deployed_params):
+    return {name: p["w"].memory_bits
+            for name, p in deployed_params.items()
+            if isinstance(p, dict) and isinstance(p.get("w"), QTensor)}
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_frozen_vs_deployed_backends_parity(name):
+    cfg, eng, batch = _deployed_engine(name)
+    frozen = np.asarray(
+        eng.apply_fn(eng.params, eng.nas, PrecisionPolicy.FROZEN, batch),
+        np.float32)
+    scale = max(1.0, np.abs(frozen).max())
+
+    mem_before = _per_layer_memory_bits(eng.deployed_params)
+    assert mem_before, name  # every model has at least one QTensor site
+
+    served_jnp = np.asarray(eng.serve(batch, backend="jnp"), np.float32)
+    served_pl = np.asarray(eng.serve(batch, backend="pallas"), np.float32)
+
+    # frozen fake-quant ≈ deployed-jnp ≈ deployed-pallas(interpret), 1e-4
+    np.testing.assert_allclose(served_jnp, frozen, atol=TOL * scale,
+                               rtol=TOL, err_msg=f"{name}: jnp vs frozen")
+    np.testing.assert_allclose(served_pl, frozen, atol=TOL * scale,
+                               rtol=TOL, err_msg=f"{name}: pallas vs frozen")
+    np.testing.assert_allclose(served_pl, served_jnp, atol=TOL * scale,
+                               rtol=TOL, err_msg=f"{name}: pallas vs jnp")
+
+    # serving through either backend must not touch the packed leaves:
+    # per-layer memory_bits is a property of the deploy transform only
+    assert _per_layer_memory_bits(eng.deployed_params) == mem_before, name
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_deployed_memory_smaller_than_fp32(name):
+    _, eng, _ = _deployed_engine(name)
+    fp32_bits = 32 * sum(s.c_out * s.weights_per_channel
+                         for s in eng.specs.values())
+    assert 0 < eng.memory_bits() < fp32_bits
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_no_dense_weight_in_deployed_conv(name, monkeypatch):
+    """No DEPLOYED call site materializes a dense kernel: serving any of
+    the four configs (regular, depthwise and 1x1 convs, FCs) must never
+    call QTensor.dense / dequantize*."""
+    def _boom(self, *a, **k):
+        raise AssertionError("deployed path materialized a dense weight")
+    monkeypatch.setattr(QTensor, "dense", _boom)
+    monkeypatch.setattr(QTensor, "dequantize", _boom)
+    monkeypatch.setattr(QTensor, "dequantize_canonical", _boom)
+    monkeypatch.setattr(QTensor, "_dequantize_groups", _boom)
+    _, eng, batch = _deployed_engine(name)
+    out = eng.serve(batch, backend="pallas")
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# QTensor.conv2d unit checks against the dense lax conv oracle
+# ---------------------------------------------------------------------------
+
+def _conv_qtensor(key, cout, cin, kh, kw, depthwise=False):
+    rng = np.random.default_rng(key)
+    tail_cin = 1 if depthwise else cin
+    w = rng.standard_normal((cout, tail_cin, kh, kw)).astype(np.float32)
+    bits = rng.choice([2, 4, 8], size=cout)
+    alpha = np.abs(w.reshape(cout, -1)).max(-1)
+    return QTensor.from_assignment(w, bits, alpha)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (2, "VALID")])
+def test_qtensor_conv2d_matches_dense_conv(backend, stride, padding):
+    qt = _conv_qtensor(0, cout=20, cin=5, kh=3, kw=3)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 9, 7, 5)),
+                    jnp.float32)
+    kernel = jnp.transpose(qt.dense(), (2, 3, 1, 0))
+    y_ref = lax.conv_general_dilated(
+        x, kernel, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = qt.conv2d(x, stride=stride, padding=padding, backend=backend)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=TOL, rtol=TOL)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_qtensor_conv2d_rect_kernel_matches_dense(backend):
+    """DS-CNN's (10, 4) stride-2 first conv shape."""
+    qt = _conv_qtensor(2, cout=16, cin=1, kh=10, kw=4)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((2, 49, 10, 1)),
+                    jnp.float32)
+    kernel = jnp.transpose(qt.dense(), (2, 3, 1, 0))
+    y_ref = lax.conv_general_dilated(
+        x, kernel, (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = qt.conv2d(x, stride=2, padding="SAME", backend=backend)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=TOL, rtol=TOL)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_qtensor_depthwise_conv2d_matches_dense(backend):
+    """Mixed-precision depthwise: the channel perm must gather the *input*
+    channels into deployed order before the per-group tap contraction."""
+    c = 12
+    qt = _conv_qtensor(4, cout=c, cin=c, kh=3, kw=3, depthwise=True)
+    assert len(qt.bits) > 1  # genuinely exercises the perm path
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((2, 8, 8, c)),
+                    jnp.float32)
+    kernel = jnp.transpose(qt.dense(), (2, 3, 1, 0))
+    y_ref = lax.conv_general_dilated(
+        x, kernel, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=c)
+    y = jax.jit(lambda q, x: q.conv2d(x, groups=c, backend=backend))(qt, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=TOL, rtol=TOL)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_qtensor_matmul_rejects_mismatched_width(backend):
+    """Both backends must reject a mis-sized contraction dim identically —
+    the Pallas kernel would otherwise zero-pad and silently compute."""
+    rng = np.random.default_rng(8)
+    w = rng.standard_normal((8, 16)).astype(np.float32)
+    qt = QTensor.from_assignment(w, np.full(8, 4), np.abs(w).max(-1))
+    with pytest.raises(ValueError, match="contraction"):
+        qt.matmul(jnp.zeros((2, 12)), backend=backend)
+
+
+def test_qtensor_conv2d_rejects_linear_and_odd_groups():
+    rng = np.random.default_rng(6)
+    w = rng.standard_normal((8, 16)).astype(np.float32)
+    lin = QTensor.from_assignment(w, np.full(8, 4), np.abs(w).max(-1))
+    with pytest.raises(TypeError):
+        lin.conv2d(jnp.zeros((1, 4, 4, 16)))
+    qt = _conv_qtensor(7, cout=8, cin=4, kh=3, kw=3)
+    with pytest.raises(NotImplementedError):
+        qt.conv2d(jnp.zeros((1, 4, 4, 4)), groups=2)

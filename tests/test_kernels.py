@@ -15,6 +15,9 @@ def _mk_packed(key, n, k, bits):
     w = jax.random.normal(key, (n, k), jnp.float32)
     alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
     q, scale = qz.quantize_weight_int(w, alpha, bits)
+    f = qz.pack_factor(bits)
+    if k % f:                          # zero-pad K to the pack factor, as
+        q = jnp.pad(q, ((0, 0), (0, f - k % f)))   # from_assignment does
     return qz.pack_int(q, bits), scale[:, 0], w
 
 
@@ -87,6 +90,113 @@ def test_fused_mix_onehot_equals_single_fq():
         exp = qz.quantize_weight(w, alpha[:, None], bits)
         np.testing.assert_allclose(np.asarray(y), np.asarray(exp),
                                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("m,k,n", [
+    (1, 64, 32),          # M=1: a single pixel/row
+    (8, 128, 1),          # one-channel precision group (N=1)
+    (5, 3, 7),            # K < pack factor (bits=2: f=4), nothing aligned
+    (16, 100, 30),        # K and N not multiples of any tile size
+    (3, 33, 130),         # c_in % pack factor != 0 AND N > one tile
+])
+def test_quant_matmul_edge_shapes(bits, m, k, n):
+    """Off-happy-path shapes: padding/tile-selection must stay exact."""
+    key = jax.random.PRNGKey(bits * 7919 + m * 31 + k * 7 + n)
+    packed, scale, _ = _mk_packed(key, n, k, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    x = x.astype(jnp.bfloat16).astype(jnp.float32)
+    y = ops.quant_matmul(x, packed, scale, bits, k, out_dtype=jnp.float32)
+    assert y.shape == (m, n)
+    y_ref = ref.quant_matmul_ref(x, packed, scale, bits, k)
+    err = np.abs(np.asarray(y, np.float32) - np.asarray(y_ref, np.float32))
+    assert err.max() <= 1e-4 * max(1.0, np.abs(np.asarray(y_ref)).max())
+
+
+@pytest.mark.parametrize("bits", (2, 4))
+def test_quant_matmul_cin_not_multiple_of_pack_factor(bits):
+    """Regression for the K-padding path (ops.py): c_in % pack_factor != 0
+    means packed K (bytes * f) exceeds c_in and x must be zero-padded to
+    exactly that — in full f32 so the comparison is tight."""
+    k = 33                               # f=4 -> Kp=36; f=2 -> Kp=34
+    assert k % qz.pack_factor(bits)
+    key = jax.random.PRNGKey(bits)
+    packed, scale, _ = _mk_packed(key, 24, k, bits)
+    assert packed.shape[1] * qz.pack_factor(bits) > k
+    x = jax.random.normal(jax.random.fold_in(key, 1), (6, k), jnp.float32)
+    y = ops.quant_matmul(x, packed, scale, bits, k, out_dtype=jnp.float32,
+                         compute_dtype=jnp.float32)
+    y_ref = ref.quant_matmul_ref(x, packed, scale, bits, k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _mk_packed_conv(key, cout, cin, kh, kw, bits):
+    w = jax.random.normal(key, (cout, cin, kh, kw), jnp.float32)
+    w2 = w.reshape(cout, -1)
+    alpha = jnp.max(jnp.abs(w2), axis=-1, keepdims=True)
+    q, scale = qz.quantize_weight_int(w2, alpha, bits)
+    f = qz.pack_factor(bits)
+    k = w2.shape[-1]
+    if k % f:
+        q = jnp.pad(q, ((0, 0), (0, f - k % f)))
+    dense = (q[:, :k].astype(jnp.float32) * scale).reshape(w.shape)
+    return qz.pack_int(q, bits), scale[:, 0], dense
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("shape,stride,padding", [
+    ((2, 9, 7, 5, 16, 3, 3), 1, "SAME"),    # c_in*kh*kw=45: % f != 0
+    ((2, 8, 8, 4, 10, 3, 3), 2, "VALID"),
+    ((1, 10, 4, 1, 8, 10, 4), 2, "SAME"),   # rect kernel, 1-channel input
+    ((1, 3, 3, 2, 1, 3, 3), 1, "VALID"),    # M=1 (single output pixel), N=1
+])
+def test_quant_conv2d_matches_dense_conv(bits, shape, stride, padding):
+    """ops.quant_conv2d (one precision group) == dense lax conv oracle."""
+    n, h, w_, cin, cout, kh, kw = shape
+    key = jax.random.PRNGKey(bits * 100 + cout)
+    packed, scale, dense = _mk_packed_conv(key, cout, cin, kh, kw, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, h, w_, cin),
+                          jnp.float32)
+    y = ops.quant_conv2d(x, packed, scale, bits, cin * kh * kw, (kh, kw),
+                         stride=stride, padding=padding,
+                         out_dtype=jnp.float32, compute_dtype=jnp.float32)
+    kernel = jnp.transpose(dense, (2, 3, 1, 0))
+    y_ref = jax.lax.conv_general_dilated(
+        x, kernel, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert y.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_rejects_mismatched_c_in():
+    """The kernel wrapper must reject (not silently zero-pad) inputs whose
+    contraction dim disagrees with c_in, and packed buffers whose byte count
+    cannot correspond to c_in at the given bit-width."""
+    key = jax.random.PRNGKey(0)
+    packed, scale, _ = _mk_packed(key, 8, 32, 4)
+    x_short = jax.random.normal(key, (4, 24), jnp.float32)
+    with pytest.raises(ValueError, match="contraction"):
+        ops.quant_matmul(x_short, packed, scale, 4, 32)
+    with pytest.raises(ValueError, match="correspond"):
+        # c_in=24 would need ceil(24/2)=12 packed bytes, not 16
+        ops.quant_matmul(x_short, packed, scale, 4, 24)
+
+
+def test_im2col_feature_order_is_channel_major():
+    """Load-bearing layout contract: patch feature c*kh*kw + i*kw + j is
+    channel c at tap (i, j) — identical to (c_out, c_in, kh, kw) flattening,
+    so patches contract against packed QTensor groups with no reorder."""
+    from repro.kernels import quant_conv as qc
+    x = jnp.arange(1 * 4 * 4 * 3, dtype=jnp.float32).reshape(1, 4, 4, 3)
+    p = qc.im2col(x, 2, 2, 1, "VALID")
+    assert p.shape == (1, 3, 3, 12)
+    # feature block [c*4:(c+1)*4] at output (0,0) = channel c's 2x2 window
+    for c in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(p[0, 0, 0, c * 4:(c + 1) * 4]),
+            np.asarray(x[0, :2, :2, c]).reshape(-1))
 
 
 def test_quant_matmul_zero_weight_rows():

@@ -31,7 +31,7 @@ def _time(fn, n=5, warmup=2):
     return (time.perf_counter() - t0) / n, out
 
 
-def bench_pareto() -> list[str]:
+def bench_pareto(smoke: bool = False) -> list[str]:
     from benchmarks import pareto
     print("# pareto (fast): task,method,lam,metric,size_bits,energy",
           flush=True)
@@ -39,7 +39,7 @@ def bench_pareto() -> list[str]:
     return []
 
 
-def bench_deploy() -> list[str]:
+def bench_deploy(smoke: bool = False) -> list[str]:
     """Deployed memory per assignment — the paper's model-size axis."""
     from repro.config import get_config
     from repro.core import deploy as dpl, mixedprec as mp
@@ -66,7 +66,7 @@ def bench_deploy() -> list[str]:
     return rows
 
 
-def bench_kernels() -> list[str]:
+def bench_kernels(smoke: bool = False) -> list[str]:
     from repro.core import quantizers as qz
     from repro.kernels import ops
     rows = ["kernel:name,bits,M,K,N,us_per_call"]
@@ -87,20 +87,26 @@ def bench_kernels() -> list[str]:
     return rows
 
 
-def bench_tinyml() -> list[str]:
-    """Deployed MLPerf-Tiny forward, fully packed, jnp vs Pallas conv path.
+def bench_tinyml(smoke: bool = False) -> list[str]:
+    """Deployed MLPerf-Tiny forward, fully packed, per serving backend.
 
-    Engine.deploy -> Engine.serve end-to-end: convs run as im2col
-    patch-GEMMs over packed sub-byte groups (QTensor.conv2d), depthwise
-    convs through the grouped per-channel path.  CPU-interpret timings are
+    Engine.deploy (tile-aligned) -> Engine.serve end-to-end: convs run as
+    im2col patch-GEMMs over packed sub-byte groups (QTensor.conv2d),
+    depthwise convs through the grouped per-channel path.  ``pallas`` is
+    the fused single-launch path (one pallas_call per deployed
+    linear/conv), ``pallas-pergroup`` the one-launch-per-precision-group
+    reference — the ``launches`` column counts pallas_calls per forward,
+    the headline dispatch saving.  CPU-interpret timings are
     correctness-path numbers, not TPU perf.
     """
-    from repro.api import Engine
+    from repro.api import Engine, PrecisionPolicy
     from repro.data import pipeline as pipe
+    from repro.kernels import ops
     from repro.models import tinyml
-    rows = ["tinyml:model,backend,ms_per_batch,packed_kB"]
-    for name in ("dae-ad", "resnet8-cifar10", "dscnn-kws",
-                 "mobilenetv1-vww"):
+    rows = ["tinyml:model,backend,launches,ms_per_batch,packed_kB"]
+    names = ("dae-ad",) if smoke else (
+        "dae-ad", "resnet8-cifar10", "dscnn-kws", "mobilenetv1-vww")
+    for name in names:
         cfg = tinyml.TINY_CONFIGS[name]
         eng = Engine.for_tinyml(cfg, key=jax.random.PRNGKey(0))
         # mixed per-channel groups without paying for a search
@@ -108,14 +114,26 @@ def bench_tinyml() -> list[str]:
         eng.deploy(align=1)
         batch = next(iter(pipe.SyntheticTiny(cfg, n=8, seed=0).batches(4)))
         kb = eng.memory_bits() / 8e3
-        for backend in ("jnp", "pallas"):
+        counts = {}
+        for backend in ("jnp", "pallas-pergroup", "pallas"):
+            pol = PrecisionPolicy.deployed(backend)
+            counts[backend] = ops.count_pallas_launches(
+                lambda dp, b: eng.apply_fn(dp, None, pol, b),
+                eng.deployed_params, batch)
             dt, _ = _time(lambda: eng.serve(batch, backend=backend),
                           n=3, warmup=1)
-            rows.append(f"tinyml:{name},{backend},{dt * 1e3:.1f},{kb:.1f}")
+            rows.append(f"tinyml:{name},{backend},{counts[backend]},"
+                        f"{dt * 1e3:.1f},{kb:.1f}")
+        if smoke and not counts["pallas"] < counts["pallas-pergroup"]:
+            # smoke gates on the deterministic dispatch count, not on
+            # shared-runner wall clock: fused must really be fused
+            raise SystemExit(
+                f"fused path did not reduce kernel launches on {name}: "
+                f"{counts}")
     return rows
 
 
-def bench_serving() -> list[str]:
+def bench_serving(smoke: bool = False) -> list[str]:
     from repro.config import get_config
     from repro.models import serving
     rows = ["serving:arch,phase,tok_per_s"]
@@ -137,7 +155,7 @@ def bench_serving() -> list[str]:
     return rows
 
 
-def bench_roofline() -> list[str]:
+def bench_roofline(smoke: bool = False) -> list[str]:
     import os
     path = "results/dryrun.jsonl"
     if not os.path.exists(path):
@@ -165,7 +183,9 @@ SECTIONS = {
 }
 
 
-SMOKE_SECTIONS = ("deploy", "kernels")   # fast, allocation-light
+# fast, allocation-light; tinyml runs its dae-ad-only smoke variant so CI
+# exercises (and asserts on) the fused single-launch serving path
+SMOKE_SECTIONS = ("deploy", "kernels", "tinyml")
 
 
 def main() -> None:
@@ -180,7 +200,7 @@ def main() -> None:
         names = [args.only] if args.only else list(SECTIONS)
     for name in names:
         print(f"\n== {name} ==", flush=True)
-        rows = SECTIONS[name]()
+        rows = SECTIONS[name](smoke=args.smoke)
         for row in rows:
             print(row, flush=True)
         # sections emit a header row first; smoke requires actual data rows

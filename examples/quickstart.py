@@ -77,3 +77,13 @@ conv_frozen = conv_eng.apply_fn(conv_eng.params, conv_eng.nas,
 conv_err = float(jnp.max(jnp.abs(conv_served - conv_frozen)))
 print(f"\nresnet8 packed conv (Pallas, {conv_eng.memory_bits() / 8e3:.1f} KB):"
       f" |served - frozen| max = {conv_err:.2e}")
+
+# the tile-aligned deploy serves every linear/conv as ONE fused
+# multi-precision kernel launch (vs one per precision group)
+from repro.kernels import ops as kops
+for bk in ("pallas", "pallas-pergroup"):
+    pol = PrecisionPolicy.deployed(bk)
+    n = kops.count_pallas_launches(
+        lambda dp, b: conv_eng.apply_fn(dp, None, pol, b),
+        conv_eng.deployed_params, conv_batch)
+    print(f"  kernel launches per forward [{bk}]: {n}")

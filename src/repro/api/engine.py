@@ -105,12 +105,19 @@ class Engine:
                 rng.standard_normal(site["delta"].shape), jnp.float32)
         return self
 
-    def deploy(self, align: int = 1) -> dict:
+    def deploy(self, align: int = 1, tile_n="auto") -> dict:
         """Sec. III-C offline transform: searched float weights -> QTensor.
 
         Returns (and stores) the deployed params tree.  Channel order is
         restored after each matmul (``restore_order=True``) so downstream
         structure (BN, residuals, the next layer's c_in) is untouched.
+
+        ``tile_n`` (default ``"auto"``) builds the tile-aligned fused
+        layout so every deployed linear/conv GEMM serves as ONE
+        ``pallas_call`` under ``backend="pallas"``; pass ``None`` for the
+        per-group-only packing.  Depthwise sites (``dwconv*`` in the
+        models/tinyml.py naming contract) always skip the fused layout —
+        their per-channel tap contraction is not a GEMM and never reads it.
 
         Operates on **flat site-keyed params trees** (models/tinyml.py
         style: ``params[site]["w"]`` with ``site in nas``).  Nested /
@@ -135,7 +142,8 @@ class Engine:
                     np.asarray(p["w"]), np.asarray(nas[name]["gamma"]),
                     np.asarray(p["aw"]), np.asarray(nas[name]["delta"]),
                     float(np.asarray(p["ax"])), self.quant_cfg, align=align,
-                    restore_order=True)
+                    restore_order=True,
+                    tile_n=None if name.startswith("dwconv") else tile_n)
                 site_p["w"] = qt
                 site_p.pop("aw", None)
                 site_p.pop("ax", None)
@@ -159,11 +167,14 @@ class Engine:
         """Jitted deployed forward (the Pallas quant_matmul path by default).
 
         ``backend`` threads through ``PrecisionPolicy.deployed`` into every
-        layer: linears run packed sub-GEMMs and convs run packed im2col
-        patch-GEMMs (``QTensor.conv2d``) — the four MLPerf-Tiny models serve
-        fully packed with no dense kernel re-materialization.  The first
-        call compiles; subsequent calls with same-shaped batches reuse the
-        executable.
+        layer: with the default tile-aligned deploy, ``"pallas"`` serves
+        every linear and GEMM conv as ONE fused multi-precision kernel
+        launch (``"pallas-pergroup"`` keeps the per-group reference
+        kernels, ``"jnp"`` the dense fallback); convs lower to packed
+        im2col patch-GEMMs (``QTensor.conv2d``) — the four MLPerf-Tiny
+        models serve fully packed with no dense kernel re-materialization.
+        The first call compiles; subsequent calls with same-shaped batches
+        reuse the executable.
         """
         assert self.deployed_params is not None, "deploy() first"
         if self._serve_fn is None or self._serve_backend != backend:

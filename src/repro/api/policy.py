@@ -10,7 +10,9 @@ carries the phase's parameters:
 * ``PrecisionPolicy.FROZEN``           — argmax assignment (fine-tuning)
 * ``PrecisionPolicy.deployed(backend)``— true-integer packed weights
   (:class:`repro.api.qtensor.QTensor` leaves); ``backend`` picks the jnp
-  fallback or the Pallas ``quant_matmul`` kernel
+  fallback (``"jnp"``), the fused single-launch Pallas kernel
+  (``"pallas"``) or the per-group reference kernels
+  (``"pallas-pergroup"``)
 
 The policy is a registered pytree: the phase and backend are static aux data
 (so jitted functions specialize per phase — exactly like the old string, but
@@ -40,7 +42,7 @@ class Phase(enum.Enum):
 class PrecisionPolicy:
     phase: Phase
     tau: Optional[jnp.ndarray] = None   # SEARCH only
-    backend: str = "jnp"                # DEPLOYED only: "jnp" | "pallas"
+    backend: str = "jnp"    # DEPLOYED only: jnp | pallas | pallas-pergroup
 
     # Singletons FLOAT / QAT8 / FROZEN / DEPLOYED for the parameter-free
     # phases are assigned right below the class body.
@@ -51,7 +53,7 @@ class PrecisionPolicy:
 
     @classmethod
     def deployed(cls, backend: str = "jnp") -> "PrecisionPolicy":
-        assert backend in ("jnp", "pallas"), backend
+        assert backend in ("jnp", "pallas", "pallas-pergroup"), backend
         return cls(Phase.DEPLOYED, backend=backend)
 
     @property

@@ -17,11 +17,26 @@ exactly that:
   activation quantization (``act_bits``/``act_scale``) and, for convolution
   weights, the original kernel tail shape.
 
+With ``tile_n`` set (tile-aligned deploy, the default of ``Engine.deploy``),
+the QTensor additionally carries the **fused single-launch layout**: every
+precision group's channel count is padded up to the ``tile_n`` output tile
+(zero rows, zero scales), the per-group packed buffers concatenate into one
+ragged 1-D byte buffer (``fused_packed``) with a static per-tile bit-width
+schedule (``tile_bits``), and ``matmul``/``conv2d`` run the whole
+multi-precision weight as ONE ``pallas_call``
+(kernels/quant_matmul.quant_matmul_fused_2d) — no per-group launches, no
+concat.  The schedule's tile walk order is chosen so that, whenever the
+canonical-order restore is tile-granular (single precision group, or
+already-sorted assignments), the restore folds into the kernel's identity
+output index map and ``fused_perm`` is ``None``; otherwise ``fused_perm``
+is a single output gather.
+
 Because it is a **registered pytree** (arrays are leaves, geometry is aux
 data), a whole deployed model is just a params tree with ``QTensor`` leaves:
 it flows through ``jax.jit`` / ``jax.vmap`` / ``device_put`` unchanged, and
-``matmul`` routes each precision group through the Pallas
-``quant_matmul`` kernel (``backend="pallas"``) or the jnp fallback.
+``matmul`` routes through the fused single-launch kernel
+(``backend="pallas"``), the per-group reference kernels
+(``backend="pallas-pergroup"``) or the jnp fallback.
 ``conv2d`` lowers an NHWC conv to im2col patches (kernels/quant_conv.py)
 and delegates to ``matmul`` — the deployed conv path never materializes a
 dense float kernel (depthwise convs take a grouped per-channel fall-back).
@@ -39,6 +54,66 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantizers as qz
+from repro.kernels import quant_matmul as qmk
+
+BACKENDS = ("jnp", "pallas", "pallas-pergroup")
+
+
+def _auto_tile_n(c_out: int) -> int:
+    """Default output-tile width: the largest power of two <= c_out, capped
+    at the 128-wide MXU lane dimension.  Small edge layers get small tiles
+    (bounding the zero-row padding), large layers get full MXU tiles."""
+    return min(128, 1 << (max(int(c_out), 1).bit_length() - 1))
+
+
+def _fused_tile_layout(groups, tile_n: int, Kp: int, c_out: int,
+                       restore_order: bool):
+    """Build the single-launch fused layout from per-group integer weights.
+
+    ``groups`` is a list of ``(bits, q (n_g, Kp) int8, step (n_g,),
+    canon_idx (n_g,))`` in ascending bit-width.  Each group is padded to a
+    ``tile_n`` multiple (zero rows / zero scales / target -1) and split into
+    tiles; tiles are then ordered by the target position of their first
+    (always real) row — canonical position when ``restore_order``, deployed
+    position otherwise.  When that walk order lays every real channel at
+    its target column with padding only past ``c_out``, the order restore
+    has folded into the kernel's identity output index map and the returned
+    ``fused_perm`` is None; otherwise it is the (c_out,) output gather.
+
+    Returns ``(fused_packed 1-D uint8, fused_scales (T*tile_n,) f32,
+    fused_perm, tile_bits)``.
+    """
+    tiles = []
+    dep_start = 0
+    for b, q, step, idx in groups:
+        n = q.shape[0]
+        assert q.shape[1] == Kp, (q.shape, Kp)
+        pad = (-n) % tile_n
+        qp = np.pad(np.asarray(q, np.int8), ((0, pad), (0, 0)))
+        sp = np.pad(np.asarray(step, np.float32).reshape(-1), (0, pad))
+        tgt = (np.asarray(idx, np.int64) if restore_order
+               else np.arange(dep_start, dep_start + n, dtype=np.int64))
+        tgt = np.concatenate([tgt, np.full(pad, -1, np.int64)])
+        dep_start += n
+        for t0 in range(0, n + pad, tile_n):
+            sl = slice(t0, t0 + tile_n)
+            tiles.append((b, qp[sl], sp[sl], tgt[sl]))
+    tiles.sort(key=lambda t: int(t[3][0]))
+    tile_bits = tuple(t[0] for t in tiles)
+    fused_packed = np.concatenate(
+        [np.asarray(qz.pack_int(jnp.asarray(q), b)).reshape(-1)
+         for b, q, _, _ in tiles])
+    fused_scales = np.concatenate([t[2] for t in tiles])
+    tcol = np.concatenate([t[3] for t in tiles])
+    if (tcol[:c_out] == np.arange(c_out)).all() and (tcol[c_out:] < 0).all():
+        fused_perm = None                   # restore folded into the walk
+    else:
+        cols = np.nonzero(tcol >= 0)[0].astype(np.int32)
+        fp = np.zeros(c_out, np.int32)
+        fp[tcol[cols]] = cols
+        fused_perm = jnp.asarray(fp)
+    return (jnp.asarray(fused_packed), jnp.asarray(fused_scales),
+            fused_perm, tile_bits)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -54,6 +129,14 @@ class QTensor:
     act_scale: float = 1.0
     kernel_shape: Optional[tuple] = None   # conv tail (c_in/g, kh, kw)
     restore_order: bool = True    # matmul outputs canonical channel order
+    # -- fused single-launch layout (tile-aligned deploy; None = absent) ----
+    fused_packed: Optional[jnp.ndarray] = None   # 1-D uint8 ragged buffer
+    fused_scales: Optional[jnp.ndarray] = None   # (T * tile_n,) f32
+    fused_perm: Optional[jnp.ndarray] = None     # (c_out,) i32 output gather;
+    #                                              None = restore folded into
+    #                                              the tile walk order
+    tile_bits: Optional[tuple] = None            # static per-tile bit-widths
+    tile_n: Optional[int] = None                 # static output tile width
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten_with_keys(self):
@@ -61,27 +144,45 @@ class QTensor:
             (jax.tree_util.GetAttrKey("packed"), self.packed),
             (jax.tree_util.GetAttrKey("scales"), self.scales),
             (jax.tree_util.GetAttrKey("inv_perm"), self.inv_perm),
+            (jax.tree_util.GetAttrKey("fused_packed"), self.fused_packed),
+            (jax.tree_util.GetAttrKey("fused_scales"), self.fused_scales),
+            (jax.tree_util.GetAttrKey("fused_perm"), self.fused_perm),
         )
         aux = (self.bits, self.c_out, self.c_in, self.act_bits,
-               self.act_scale, self.kernel_shape, self.restore_order)
+               self.act_scale, self.kernel_shape, self.restore_order,
+               self.tile_bits, self.tile_n)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        packed, scales, inv_perm = children
-        return cls(packed, scales, inv_perm, *aux)
+        packed, scales, inv_perm, fused_packed, fused_scales, fperm = children
+        (bits, c_out, c_in, act_bits, act_scale, kernel_shape,
+         restore_order, tile_bits, tile_n) = aux
+        return cls(packed, scales, inv_perm, bits, c_out, c_in,
+                   act_bits, act_scale, kernel_shape, restore_order,
+                   fused_packed, fused_scales, fperm, tile_bits, tile_n)
 
     # -- construction -------------------------------------------------------
     @classmethod
     def from_assignment(cls, w, bits_per_channel, alpha_w,
                         bitwidths=(2, 4, 8), align: int = 1,
                         restore_order: bool = True,
-                        act_bits: int = 8, act_scale: float = 1.0
-                        ) -> "QTensor":
+                        act_bits: int = 8, act_scale: float = 1.0,
+                        tile_n=None) -> "QTensor":
         """Pack a float weight under an explicit per-channel assignment.
 
         ``w`` is ``(c_out, ...)``; trailing dims flatten into the contraction
         axis (conv kernels keep their tail shape for ``dense()``).
+
+        ``tile_n`` enables the tile-aligned fused single-launch layout: an
+        int pins the output tile width, ``"auto"`` picks the largest power
+        of two ``<= c_out`` (capped at 128), ``None`` (default) packs only
+        the per-group buffers.  With a fused layout the per-group buffers
+        are packed at the common ``Kp`` byte width (c_in rounded up to the
+        int2 pack factor) so the per-group reference path reduces the exact
+        same K columns as the fused kernel — the bit-exactness contract.
+        Contractions beyond ``K_SINGLE_STEP_MAX`` stay per-group (the fused
+        kernel runs K as a single step).
         """
         from repro.core import deploy as dpl   # local: avoid import cycle
         w = np.asarray(w, np.float32)
@@ -94,7 +195,12 @@ class QTensor:
             alpha = np.broadcast_to(alpha, (c_out,)).copy()
         perm, sizes = dpl.group_channels(bits_per_channel, bitwidths,
                                          align=align)
-        packed, scales, used_bits = [], [], []
+        if tile_n == "auto":
+            tile_n = _auto_tile_n(c_out)
+        Kp = -(-c_in // qmk.FUSED_K_ALIGN) * qmk.FUSED_K_ALIGN
+        if tile_n is not None and Kp > qmk.K_SINGLE_STEP_MAX:
+            tile_n = None                  # contraction too deep to fuse
+        packed, scales, used_bits, groups = [], [], [], []
         offset = 0
         for b in sorted(bitwidths):
             n = sizes[b]
@@ -106,16 +212,25 @@ class QTensor:
                 jnp.asarray(w2[idx]), jnp.asarray(alpha[idx][:, None]), b)
             q = np.asarray(q)
             f = qz.pack_factor(b)
-            if c_in % f:
-                q = np.pad(q, ((0, 0), (0, f - c_in % f)))
+            kpad = Kp if tile_n is not None else -(-c_in // f) * f
+            q = np.pad(q, ((0, 0), (0, kpad - c_in)))
             packed.append(jnp.asarray(qz.pack_int(jnp.asarray(q), b)))
             scales.append(jnp.asarray(step).reshape(-1).astype(jnp.float32))
             used_bits.append(b)
+            groups.append((b, q, np.asarray(step).reshape(-1), idx))
         inv_perm = jnp.asarray(np.argsort(perm), jnp.int32)
+        fused = dict(fused_packed=None, fused_scales=None, fused_perm=None,
+                     tile_bits=None, tile_n=None)
+        if tile_n is not None:
+            fp, fs, fperm, tile_bits = _fused_tile_layout(
+                groups, tile_n, Kp, c_out, restore_order)
+            fused = dict(fused_packed=fp, fused_scales=fs, fused_perm=fperm,
+                         tile_bits=tile_bits, tile_n=tile_n)
         return cls(tuple(packed), tuple(scales), inv_perm,
                    tuple(used_bits), c_out, c_in,
                    act_bits=act_bits, act_scale=act_scale,
-                   kernel_shape=kernel_shape, restore_order=restore_order)
+                   kernel_shape=kernel_shape, restore_order=restore_order,
+                   **fused)
 
     # -- geometry -----------------------------------------------------------
     @property
@@ -131,7 +246,20 @@ class QTensor:
 
     @property
     def memory_bits(self) -> int:
-        """Deployed model-size contribution in bits (the Pareto x-axis)."""
+        """Deployed model-size contribution in bits (the Pareto x-axis).
+
+        With a fused layout this is the ragged single-launch buffer — the
+        weight bytes a deployed edge artifact ships, tile padding (zero
+        rows up to ``tile_n``, K rounded to the int2 pack factor) included.
+        Without one it is the per-group packed bytes, as before.  Note this
+        models the *deployment* footprint: in-repo a tile-aligned QTensor
+        additionally keeps the per-group buffers as live leaves (they back
+        the ``pallas-pergroup``/``jnp`` reference paths, the depthwise
+        fall-back and ``dequantize``), so host/device memory of this
+        development representation is roughly double the reported figure.
+        """
+        if self.fused_packed is not None:
+            return int(self.fused_packed.size) * 8
         return sum(int(p.size) * 8 for p in self.packed)
 
     # -- compute ------------------------------------------------------------
@@ -185,25 +313,50 @@ class QTensor:
 
     def matmul(self, x: jnp.ndarray, compute_dtype=jnp.float32,
                backend: str = "jnp") -> jnp.ndarray:
-        """``x (..., c_in) -> (..., c_out)``: per-precision sub-GEMMs whose
-        outputs concatenate (the paper's parallel sub-convolutions), then the
-        canonical-order restore when ``restore_order``.  ``backend="pallas"``
-        runs each sub-GEMM through the fused unpack+dequant+GEMM kernel
-        (kernels/quant_matmul.py); this method owns the concat/restore so the
-        two backends cannot drift."""
+        """``x (..., c_in) -> (..., c_out)`` on one of three backends:
+
+        * ``"pallas"`` — the serving hot path: with a fused layout (tile-
+          aligned deploy) the whole multi-precision weight runs as ONE
+          ``pallas_call`` (kernels/quant_matmul.quant_matmul_fused_2d), the
+          order restore folded into the tile schedule (or a single output
+          gather); without one it falls back to the per-group kernels.
+        * ``"pallas-pergroup"`` — the per-group reference path: one
+          unpack+dequant+GEMM kernel launch per precision group, outputs
+          concatenated (the paper's parallel sub-convolutions), then the
+          canonical-order restore when ``restore_order``.
+        * ``"jnp"`` — per-group dense fallback (no Pallas).
+
+        This method owns the routing and the concat/restore so the
+        backends cannot drift.  ``compute_dtype`` reaches the kernel's MXU
+        dot as well as the output cast: f32 (the default) is the bit-parity
+        path with the fake-quant reference, bf16 the TPU fast path.
+        """
         if x.shape[-1] != self.c_in:
             raise ValueError(
                 f"x contraction dim {x.shape[-1]} != c_in {self.c_in} "
-                "(both backends reject this — the Pallas kernel would "
+                "(all backends reject this — the Pallas kernel would "
                 "otherwise zero-pad and compute silently wrong outputs)")
-        if backend == "pallas":
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        if backend == "pallas" and self.fused_packed is not None:
             from repro.kernels import ops as kops
+            return kops.quant_matmul_fused(
+                x, self.fused_packed, self.fused_scales, self.fused_perm,
+                self.tile_bits, self.tile_n, self.c_in, self.c_out,
+                out_dtype=compute_dtype, compute_dtype=compute_dtype)
+        if backend in ("pallas", "pallas-pergroup"):
+            from repro.kernels import ops as kops
+            c_in = self.c_in
+            if self.tile_n is not None:
+                # fused-layout per-group buffers are packed at the common
+                # Kp byte width: feed the kernel the same padded columns
+                Kp = self.packed[-1].shape[-1] * qz.pack_factor(self.bits[-1])
+                widths = [(0, 0)] * (x.ndim - 1) + [(0, Kp - c_in)]
+                x = jnp.pad(x, widths)
+                c_in = Kp
 
             def gemm(b, p, s):
-                # compute_dtype reaches the kernel's MXU dot as well as the
-                # output cast: f32 (the default) is the bit-parity path with
-                # the fake-quant reference, bf16 the TPU fast path.
-                return kops.quant_matmul(x, p, s, b, self.c_in,
+                return kops.quant_matmul(x, p, s, b, c_in,
                                          out_dtype=compute_dtype,
                                          compute_dtype=compute_dtype)
         else:
@@ -238,6 +391,8 @@ class QTensor:
         if self.kernel_shape is None:
             raise TypeError("conv2d requires a conv QTensor "
                             "(kernel_shape is None — this is a linear map)")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
         from repro.kernels import quant_conv as qc
 
         kh, kw = self.kernel_shape[-2:]

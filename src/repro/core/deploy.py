@@ -82,7 +82,7 @@ def group_channels(bits_per_channel: np.ndarray,
 def deploy_linear(w: np.ndarray, gamma: np.ndarray, alpha_w: np.ndarray,
                   delta: Optional[np.ndarray], alpha_x: float,
                   cfg: mp.MixedPrecConfig, align: int = 1,
-                  restore_order: bool = True) -> QTensor:
+                  restore_order: bool = True, tile_n=None) -> QTensor:
     """Full Sec. III-C transform of one searched map ``w`` -> ``QTensor``.
 
     ``w`` is ``(c_out, ...)`` (trailing dims flatten into the contraction
@@ -91,6 +91,16 @@ def deploy_linear(w: np.ndarray, gamma: np.ndarray, alpha_w: np.ndarray,
     ``QTensor.conv2d`` contracts against).  With ``restore_order=False`` the
     QTensor keeps deployed channel order and the caller must permute the
     next layer's ``c_in`` with ``.perm`` (:func:`propagate_perm`).
+
+    ``tile_n`` (int | ``"auto"`` | None) additionally builds the
+    **tile-aligned fused layout** for the single-launch serving kernel:
+    every precision group is padded up to the ``tile_n`` output tile (zero
+    rows), so each output tile carries exactly one static bit-width and the
+    whole weight serves as ONE ``pallas_call``.  ``align`` composes with it:
+    ``align=128`` promotion already rounds the non-top groups to the MXU
+    lane width, so with ``tile_n=128`` only the top group's tail pads (the
+    promotion moves channels *up* in precision, the tile pad adds zero
+    rows — both upward-only in representational power).
     """
     w = np.asarray(w, dtype=np.float32)
     c_out = w.shape[0]
@@ -107,7 +117,8 @@ def deploy_linear(w: np.ndarray, gamma: np.ndarray, alpha_w: np.ndarray,
     return QTensor.from_assignment(
         w, bits, np.asarray(alpha_w, np.float32),
         bitwidths=cfg.weight_bits, align=align, restore_order=restore_order,
-        act_bits=act_bits, act_scale=float(max(alpha_x, 1e-6)) / levels)
+        act_bits=act_bits, act_scale=float(max(alpha_x, 1e-6)) / levels,
+        tile_n=tile_n)
 
 
 def propagate_perm(next_w: np.ndarray, perm: np.ndarray) -> np.ndarray:

@@ -1,15 +1,20 @@
 """jit'd public wrappers around the Pallas kernels: padding, batching,
 backend/interpret selection.
 
-``quant_matmul`` is the entry point serving.dq_linear uses with
-backend="pallas": it accepts arbitrary leading batch dims and unpadded
-shapes, pads to tile multiples, invokes the kernel, and slices back.
+``quant_matmul_fused`` is the deployed hot path: ONE ``pallas_call`` for a
+whole multi-precision weight (tile-aligned fused layout, see
+kernels/quant_matmul.py).  ``quant_matmul`` is the per-group reference path
+(one launch per precision group — ``backend="pallas-pergroup"``) and what
+legacy non-tile-aligned QTensors use.  Both accept arbitrary leading batch
+dims and unpadded shapes, pad to tile multiples, invoke the kernel, and
+slice back.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.core
 import jax.numpy as jnp
 
 from repro.core import quantizers as qz
@@ -59,16 +64,11 @@ def quant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     N = packed.shape[0]
     x2 = _pad_to(x2, 1, Kp)                      # exactly Kp (single pad)
     # choose tile sizes that divide (pad where they don't)
-    bm_ = min(bm, max(8, 1 << (M - 1).bit_length())) if M < bm else bm
+    bm_ = _pick_bm(M, bm)
     x2 = _pad_to(x2, 0, bm_)
     packed_p = _pad_to(packed, 0, bn) if N % bn else packed
     scale_p = _pad_to(scale, 0, bn) if N % bn else scale
-    bk_ = bk
-    while Kp % bk_ or (bk_ % f):
-        bk_ //= 2
-        if bk_ < f:
-            bk_ = Kp           # single K step
-            break
+    bk_ = qm_kernel.pick_bk(Kp, f, bk)
     y = qm_kernel.quant_matmul_2d(x2, packed_p, scale_p, bits, bm=bm_,
                                   bn=min(bn, packed_p.shape[0]), bk=bk_,
                                   interpret=INTERPRET, out_dtype=out_dtype,
@@ -76,12 +76,65 @@ def quant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     return y[:M, :N].reshape(*lead, N)
 
 
-def qtensor_matmul(x: jnp.ndarray, qt, out_dtype=jnp.bfloat16) -> jnp.ndarray:
+def _pick_bm(M: int, bm: int) -> int:
+    """M tile size — shared by the per-group and fused entry points so the
+    two paths pad M identically (part of the bit-exactness contract)."""
+    return min(bm, max(8, 1 << (M - 1).bit_length())) if M < bm else bm
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_bits", "tile_n", "c_in", "c_out",
+                                    "out_dtype", "bm", "compute_dtype"))
+def quant_matmul_fused(x: jnp.ndarray, fused_packed: jnp.ndarray,
+                       fused_scales: jnp.ndarray, fused_perm, tile_bits: tuple,
+                       tile_n: int, c_in: int, c_out: int,
+                       out_dtype=jnp.float32, bm: int = 128,
+                       compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Whole multi-precision GEMM ``x (..., c_in) -> (..., c_out)`` in ONE
+    kernel launch over the tile-aligned fused layout (kernels/quant_matmul).
+
+    ``tile_bits`` is the static per-output-tile bit-width schedule (walk
+    order), ``fused_packed`` the ragged byte buffer, ``fused_scales`` the
+    per-channel steps in walk order.  ``fused_perm`` is ``None`` when the
+    deploy transform folded the channel-order restore into the schedule's
+    walk order (the output needs only the tail-padding slice); otherwise it
+    gathers the ``c_out`` real columns into target order — a single take,
+    with no per-group concat either way.
+    """
+    if x.shape[-1] != c_in:
+        raise ValueError(
+            f"x contraction dim {x.shape[-1]} != c_in {c_in} — for conv "
+            "patches this means the im2col width does not match the packed "
+            "kernel's C*kh*kw")
+    Kp = -(-c_in // qm_kernel.FUSED_K_ALIGN) * qm_kernel.FUSED_K_ALIGN
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, c_in).astype(compute_dtype)
+    x2 = _pad_to(x2, 1, Kp)
+    bm_ = _pick_bm(M, bm)
+    x2 = _pad_to(x2, 0, bm_)
+    y = qm_kernel.quant_matmul_fused_2d(
+        x2, fused_packed, fused_scales, tile_bits, Kp=Kp, tile_n=tile_n,
+        bm=bm_, interpret=INTERPRET, out_dtype=out_dtype,
+        compute_dtype=compute_dtype)
+    y = y[:M]
+    if fused_perm is not None:
+        y = jnp.take(y, fused_perm, axis=-1)
+    else:
+        y = y[:, :c_out]
+    return y.reshape(*lead, c_out)
+
+
+def qtensor_matmul(x: jnp.ndarray, qt, out_dtype=jnp.float32) -> jnp.ndarray:
     """``x (..., c_in) @ QTensor -> (..., c_out)`` on the Pallas path.
 
-    Typed entry point for :class:`repro.api.qtensor.QTensor`.  The group
-    loop, concat and order-restore live in ``QTensor.matmul`` (single source
-    of truth for both backends); this wrapper just pins the Pallas backend.
+    Typed entry point for :class:`repro.api.qtensor.QTensor`.  Routing
+    (fused single launch vs per-group), concat and order-restore live in
+    ``QTensor.matmul`` (single source of truth for all backends); this
+    wrapper just pins the Pallas backend.  ``out_dtype`` defaults to f32,
+    matching :func:`qtensor_conv2d` (the bit-parity compute path).
     """
     return qt.matmul(x, out_dtype, backend="pallas")
 
@@ -118,6 +171,33 @@ def qtensor_conv2d(x: jnp.ndarray, qt, stride=1, padding: str = "SAME",
     """
     return qt.conv2d(x, stride=stride, padding=padding, groups=groups,
                      compute_dtype=out_dtype, backend="pallas")
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call``s one execution of ``fn(*args)`` issues.
+
+    Counts ``pallas_call`` primitives in the traced jaxpr, recursing into
+    nested call/scan/cond sub-jaxprs — robust against jit caching (a cached
+    inner trace never re-enters the ``pl.pallas_call`` Python wrapper, so
+    monkeypatch counters undercount; the jaxpr is ground truth).  Used by
+    the launch-count guard tests and the benchmark's launch column.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jpr) -> int:
+        n = 0
+        for eqn in jpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for u in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if isinstance(u, jax.core.ClosedJaxpr):
+                        n += walk(u.jaxpr)
+                    elif isinstance(u, jax.core.Jaxpr):
+                        n += walk(u)
+        return n
+
+    return walk(jaxpr.jaxpr)
 
 
 @functools.partial(jax.jit, static_argnames=("bitwidths",))

@@ -2,10 +2,12 @@
 
 The deployed conv of a searched layer (Sec. III-C) never materializes a
 dense float kernel: the NHWC input is lowered to im2col patches whose
-feature axis matches the ``QTensor`` contraction layout, and each
-per-precision channel group then runs as a patch-GEMM through the fused
-unpack+dequant+GEMM Pallas kernel (kernels/quant_matmul.py) — the paper's
-"parallel sub-convolutions" realized as sub-GEMMs over shared patches.
+feature axis matches the ``QTensor`` contraction layout, and the patch-GEMM
+runs through the Pallas quant_matmul kernels (kernels/quant_matmul.py) —
+with the tile-aligned fused layout ALL precision groups of the conv run in
+one single ``pallas_call`` over the shared patches; the per-group path
+(one launch per group, the paper's literal "parallel sub-convolutions")
+remains as the ``backend="pallas-pergroup"`` reference.
 
 Layout contract (load-bearing, asserted by tests/test_kernels.py):
 ``lax.conv_general_dilated_patches`` with NHWC dimension numbers emits the

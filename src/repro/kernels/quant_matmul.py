@@ -21,6 +21,36 @@ budget while keeping the MXU dimensions 128-aligned.
 Validated in interpret mode on CPU against ref.quant_matmul_ref across a
 shape/dtype/bits sweep (tests/test_kernels.py); ``interpret=False`` is the
 real-TPU path.
+
+Fused multi-precision launch (``quant_matmul_fused_2d``)
+--------------------------------------------------------
+The deployed realization of the paper's parallel per-precision
+sub-convolutions used to be literal: one ``pallas_call`` per precision
+group, a concat, and an order-restore gather on every forward.  For the
+edge-class GEMMs this repo serves, that dispatch-and-stitch tax dominates.
+The fused kernel runs **all** precision groups of a deployed weight in a
+single launch:
+
+* deploy-time packing is *tile-aligned* — every precision group's channel
+  count is padded up to the ``tile_n`` output tile, so each ``tile_n``-wide
+  output tile has exactly one static bit-width;
+* the per-group packed buffers concatenate into one ragged-packed 1-D HBM
+  byte buffer (a ``tile_n x Kp*b/8``-byte segment per tile, tight — low-bit
+  tiles really occupy fewer bytes);
+* one grid ``(M/bm, T)`` walks all output tiles; the per-tile bit-width and
+  byte offset come from a **static schedule** (``tile_bits``), unrolled as
+  ``pl.when`` branches, so each tile streams exactly its own bytes and
+  unpacks at its own width — no per-group launches, no concat;
+* the tile walk order is chosen at deploy time (api/qtensor.py): when the
+  canonical-order restore is tile-granular the schedule itself visits tiles
+  in canonical output order and the restore folds into the (identity)
+  output BlockSpec index map — the old ``_concat_restore`` gather
+  disappears from the hot path entirely.
+
+K is not gridded: edge GEMMs have small contractions, so each tile does one
+MXU dot over the whole (padded) ``Kp <= K_SINGLE_STEP_MAX``.  This is also
+what makes the fused path bit-exact with the per-group path at
+``compute_dtype=f32`` — both reduce K in a single dot of identical length.
 """
 from __future__ import annotations
 
@@ -31,6 +61,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import quantizers as qz
+
+# Contractions up to this many (padded) columns run as ONE K step — a single
+# MXU dot — in both the per-group and the fused kernel.  Keeping the two
+# paths on the same K schedule is what makes them bit-exact at f32 compute
+# (f32 addition is not associative; identical reduction shape => identical
+# rounding).  Larger K falls back to the chunked-accumulation grid.
+K_SINGLE_STEP_MAX = 2048
+
+# Byte granularity every fused buffer pads K to: the largest pack factor
+# (int2 -> 4 values/byte), so one common Kp serves all bit-widths.
+FUSED_K_ALIGN = 4
 
 
 def _unpack_block(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
@@ -70,6 +111,106 @@ def _kernel(x_ref, p_ref, s_ref, o_ref, *, bits: int, k_steps: int,
     @pl.when(k == k_steps - 1)
     def _scale():
         o_ref[...] *= s_ref[...][None, :].astype(jnp.float32)
+
+
+def pick_bk(Kp: int, f: int, bk: int = 512) -> int:
+    """K tile size shared by the per-group and fused paths.
+
+    Single step (``bk = Kp``) whenever the padded contraction fits
+    ``K_SINGLE_STEP_MAX`` — the edge-GEMM case and the bit-exactness
+    contract with the fused kernel; otherwise the largest power-of-two
+    divisor of ``Kp`` not above ``bk`` (falling back to one step when no
+    pack-compatible divisor exists).
+    """
+    if Kp <= K_SINGLE_STEP_MAX:
+        return Kp
+    bk_ = bk
+    while Kp % bk_ or (bk_ % f):
+        bk_ //= 2
+        if bk_ < f:
+            return Kp
+    return bk_
+
+
+def fused_tile_bytes(bits: int, Kp: int, tile_n: int) -> int:
+    """Byte footprint of ONE output tile in the ragged fused buffer."""
+    return tile_n * (Kp // qz.pack_factor(bits))
+
+
+def fused_tile_offsets(tile_bits, Kp: int, tile_n: int) -> tuple:
+    """Static per-tile byte offsets into the fused buffer (walk order)."""
+    offs, off = [], 0
+    for b in tile_bits:
+        offs.append(off)
+        off += fused_tile_bytes(b, Kp, tile_n)
+    return tuple(offs)
+
+
+def _fused_kernel(x_ref, p_ref, s_ref, o_ref, *, tile_bits, offsets,
+                  tile_n: int, Kp: int, compute_dtype):
+    """One grid step = one (bm, tile_n) output tile at its static bit-width.
+
+    The (bits, byte offset) schedule is unrolled into per-tile ``pl.when``
+    branches: every slice start/size below is a Python int, so each branch
+    streams exactly its tile's ragged byte segment and unpacks at the
+    tile's own width.  Exactly one branch fires per grid step.
+    """
+    j = pl.program_id(1)
+    x = x_ref[...]                                          # (bm, Kp)
+    for t, (b, off) in enumerate(zip(tile_bits, offsets)):
+        @pl.when(j == t)
+        def _tile(b=b, off=off):
+            f = qz.pack_factor(b)
+            flat = pl.load(p_ref, (pl.dslice(off, tile_n * (Kp // f)),))
+            w_int = _unpack_block(flat.reshape(tile_n, Kp // f), b)
+            acc = jnp.dot(x.astype(compute_dtype),
+                          w_int.astype(compute_dtype).T,
+                          preferred_element_type=jnp.float32)
+            o_ref[...] = acc * s_ref[...][None, :].astype(jnp.float32)
+
+
+def quant_matmul_fused_2d(x: jnp.ndarray, fused_packed: jnp.ndarray,
+                          fused_scales: jnp.ndarray, tile_bits: tuple, *,
+                          Kp: int, tile_n: int, bm: int = 128,
+                          interpret: bool = True, out_dtype=jnp.float32,
+                          compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Single-launch multi-precision GEMM over a ragged-packed buffer.
+
+    ``x (M, Kp)`` (M a ``bm`` multiple, Kp the common pack-padded
+    contraction) x ``fused_packed (sum_t tile_bytes,)`` uint8 ->
+    ``(M, T * tile_n)`` f32 in tile walk order.  ``tile_bits`` is the static
+    per-tile bit-width schedule; ``fused_scales (T * tile_n,)`` carries the
+    per-channel dequant steps (0 for tile-padding rows).  One ``pallas_call``
+    regardless of how many precisions the weight mixes.
+    """
+    M = x.shape[0]
+    T = len(tile_bits)
+    assert M % bm == 0 and x.shape[1] == Kp, (x.shape, bm, Kp)
+    assert Kp % FUSED_K_ALIGN == 0 and Kp <= K_SINGLE_STEP_MAX, Kp
+    offsets = fused_tile_offsets(tile_bits, Kp, tile_n)
+    assert fused_packed.size == offsets[-1] + fused_tile_bytes(
+        tile_bits[-1], Kp, tile_n), "fused buffer does not match schedule"
+    assert fused_scales.shape == (T * tile_n,), fused_scales.shape
+    kern = functools.partial(_fused_kernel, tile_bits=tuple(tile_bits),
+                             offsets=offsets, tile_n=tile_n, Kp=Kp,
+                             compute_dtype=compute_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=(M // bm, T),
+        in_specs=[
+            pl.BlockSpec((bm, Kp), lambda i, j: (i, 0)),
+            # the whole ragged buffer is resident (edge weights are small);
+            # a constant index map means the pipeline fetches it once
+            pl.BlockSpec(fused_packed.shape, lambda i, j: (0,)),
+            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
+        ],
+        # identity index map: when the deploy transform orders the schedule
+        # by canonical output tile, this map IS the order restore
+        out_specs=pl.BlockSpec((bm, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, T * tile_n), jnp.float32),
+        interpret=interpret,
+    )(x, fused_packed, fused_scales)
+    return out.astype(out_dtype)
 
 
 def quant_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,

@@ -11,9 +11,13 @@ leaf's type:
   PrecisionPolicy.search(tau)    — DNAS mixture, Eq. 4-6 (search phase)
   PrecisionPolicy.FROZEN         — argmax assignment (fine-tuning phase)
   PrecisionPolicy.deployed(bk)   — true-integer packed weights; the weight
-                                   leaf is a :class:`repro.api.QTensor` and
-                                   each precision group runs as a sub-GEMM
-                                   (``bk="pallas"`` -> kernels/quant_matmul)
+                                   leaf is a :class:`repro.api.QTensor`:
+                                   ``bk="pallas"`` serves the whole mixed-
+                                   precision weight as ONE fused kernel
+                                   launch (tile-aligned deploy),
+                                   ``bk="pallas-pergroup"`` keeps one
+                                   sub-GEMM launch per precision group
+                                   (kernels/quant_matmul)
 
 The NAS state for a layer-site is a dict {"gamma","delta"}; the quantizer
 clips live in the *params* tree ({"aw","ax"}) because they train with W, not
@@ -128,8 +132,10 @@ def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict],
     """Quantization-aware linear: x (..., c_in) @ w (c_out, c_in)^T.
 
     The single linear entry point for every phase: when the weight leaf is a
-    :class:`QTensor` (``policy`` DEPLOYED), each precision group runs as a
-    packed sub-GEMM (Pallas kernel or jnp fallback per ``policy.backend``);
+    :class:`QTensor` (``policy`` DEPLOYED), the packed weight runs through
+    ``QTensor.matmul`` — one fused multi-precision kernel launch
+    (``policy.backend == "pallas"`` on a tile-aligned deploy), per-group
+    sub-GEMM launches (``"pallas-pergroup"``) or the jnp fallback;
     otherwise the float master weight is fake-quantized per the policy.
 
     ``partial_dtype`` sets the dot's preferred_element_type: with bf16 the
@@ -166,9 +172,10 @@ def qconv2d(x: jnp.ndarray, p: dict, nas: Optional[dict],
     """Quantization-aware NHWC conv with (c_out, c_in/g, kh, kw) weights.
 
     ``signed_act=False`` matches the paper's post-ReLU unsigned activations.
-    A QTensor weight (deployed phase) runs fully packed: each precision
-    group is an im2col patch-GEMM through the fused unpack+dequant+GEMM
-    Pallas kernel (``policy.backend == "pallas"``) or the jnp fallback —
+    A QTensor weight (deployed phase) runs fully packed as an im2col
+    patch-GEMM: one fused multi-precision kernel launch for all groups
+    (``policy.backend == "pallas"`` on a tile-aligned deploy), per-group
+    launches (``"pallas-pergroup"``) or the jnp fallback —
     ``QTensor.conv2d`` owns the routing, and no dense float kernel is ever
     materialized (depthwise convs use its grouped per-channel path).
     """

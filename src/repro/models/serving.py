@@ -83,9 +83,11 @@ def dq_linear(x: jnp.ndarray, dp: dict, compute_dtype=jnp.bfloat16,
               backend: str = "jnp") -> jnp.ndarray:
     """Apply a deployed linear: x (..., c_in) -> (..., c_out).
 
-    Thin wrapper over :meth:`QTensor.matmul` (per-precision sub-GEMMs whose
-    outputs concatenate; ``backend="pallas"`` routes each through the fused
-    quant_matmul kernel) plus the optional bias.
+    Thin wrapper over :meth:`QTensor.matmul` plus the optional bias.
+    ``backend="pallas"`` uses the single-launch fused multi-precision
+    kernel when the QTensor carries the tile-aligned layout and falls back
+    to one unpack+dequant+GEMM launch per precision group otherwise
+    (``"pallas-pergroup"`` forces the per-group reference path).
     """
     y = dp["w"].matmul(x, compute_dtype, backend)
     if "bias" in dp:

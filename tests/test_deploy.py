@@ -160,6 +160,107 @@ def test_group_channels_align_128_small_layer_collapses_upward():
     assert sorted(perm.tolist()) == list(range(8))
 
 
+# ---------------------------------------------------------------------------
+# Tile-aligned deploy (the fused single-launch layout)
+# ---------------------------------------------------------------------------
+
+def test_tile_aligned_deploy_memory_bits_accounting():
+    """memory_bits under tile padding: the fused buffer holds, per tile,
+    tile_n rows of ceil4(c_in)*bits/8 bytes — zero-row padding and the
+    K byte-alignment included, matching the schedule exactly."""
+    from repro.kernels import quant_matmul as qmk
+    w, gamma, alpha_w = _searched_linear(jax.random.PRNGKey(6), 22, 33)
+    qt = dpl.deploy_linear(w, gamma, alpha_w, None, 6.0, CFG, align=1,
+                           tile_n=8)
+    assert qt.fused_packed is not None
+    Kp = -(-qt.c_in // qmk.FUSED_K_ALIGN) * qmk.FUSED_K_ALIGN
+    expected = sum(qmk.fused_tile_bytes(b, Kp, qt.tile_n) * 8
+                   for b in qt.tile_bits)
+    assert dpl.memory_bits(qt) == expected == int(qt.fused_packed.size) * 8
+    # tile padding only ever adds bytes over the per-group packing...
+    pergroup_bits = sum(int(p.size) * 8 for p in qt.packed)
+    assert dpl.memory_bits(qt) >= sum(
+        b * n for b, n in zip(qt.bits, (p.shape[0] for p in qt.packed)))
+    assert dpl.memory_bits(qt) >= pergroup_bits - 8 * Kp  # same order
+    # ...and the group geometry (real rows) is unchanged by the layout
+    assert sum(qt.group_sizes.values()) == 22
+
+
+def test_tile_aligned_deploy_perm_roundtrip_through_fused_output():
+    """Perm round-trip through the fused output path: the single-launch
+    result (walk order + fused_perm/identity index map) must equal the
+    canonical-order dequantized reference for a genuinely mixed perm."""
+    rng = np.random.default_rng(9)
+    c_out, c_in = 37, 21
+    w = rng.standard_normal((c_out, c_in)).astype(np.float32)
+    gamma = np.asarray(rng.standard_normal((c_out, 3)) * 3, np.float32)
+    qt = dpl.deploy_linear(w, gamma, np.abs(w).max(-1), None, 6.0, CFG,
+                           align=1, tile_n=8)
+    assert len(qt.bits) > 1 and qt.fused_perm is not None
+    x = jnp.asarray(rng.standard_normal((5, c_in)), jnp.float32)
+    y = qt.matmul(x, jnp.float32, backend="pallas")
+    y_ref = x @ qt.dequantize_canonical(jnp.float32).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # round-trip: gathering the walk-order kernel output by fused_perm is a
+    # permutation of the real columns — applying it twice recovers them
+    fp = np.asarray(qt.fused_perm)
+    assert sorted(fp.tolist()) == sorted(set(fp.tolist()))  # injective
+
+
+def test_align_128_with_tile_128_pads_only_top_group():
+    """align=128 + tile_n=128 interaction: promotion already rounds every
+    non-top group to 128, so tile padding touches only the top group's
+    tail and each tile carries exactly one bit-width."""
+    rng = np.random.default_rng(12)
+    c_out = 300
+    w = rng.standard_normal((c_out, 16)).astype(np.float32)
+    gamma = np.asarray(
+        np.eye(3)[rng.choice(3, size=c_out, p=[0.4, 0.4, 0.2])] * 9,
+        np.float32)
+    qt = dpl.deploy_linear(w, gamma, np.abs(w).max(-1), None, 6.0, CFG,
+                           align=128, tile_n=128)
+    sizes = qt.group_sizes
+    for b, n in list(sorted(sizes.items()))[:-1]:
+        assert n % 128 == 0
+    # tiles: one bit-width each, non-top groups contribute exactly n/128
+    # tiles with NO padding rows; only the top group's tail tile pads
+    from collections import Counter
+    tile_counts = Counter(qt.tile_bits)
+    for b, n in sizes.items():
+        if n:
+            assert tile_counts[b] == -(-n // 128)
+    padded_rows = len(qt.tile_bits) * 128 - c_out
+    top = max(b for b, n in sizes.items() if n)
+    assert padded_rows == (-sizes[top]) % 128
+    # function preserved through the fused path
+    x = jnp.asarray(rng.standard_normal((3, 16)), jnp.float32)
+    y = qt.matmul(x, jnp.float32, backend="pallas")
+    y_ref = x @ qt.dequantize_canonical(jnp.float32).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tile_aligned_deploy_restore_order_false_deployed_order():
+    """restore_order=False fused serving returns deployed (group-contiguous)
+    channel order, matching the per-group path + propagate_perm contract."""
+    rng = np.random.default_rng(15)
+    c_out, c_in = 26, 12
+    w = rng.standard_normal((c_out, c_in)).astype(np.float32)
+    gamma = np.asarray(rng.standard_normal((c_out, 3)) * 3, np.float32)
+    qt = dpl.deploy_linear(w, gamma, np.abs(w).max(-1), None, 6.0, CFG,
+                           align=1, restore_order=False, tile_n=8)
+    x = jnp.asarray(rng.standard_normal((4, c_in)), jnp.float32)
+    y_fused = qt.matmul(x, jnp.float32, backend="pallas")
+    y_pg = qt.matmul(x, jnp.float32, backend="pallas-pergroup")
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_pg))
+    # deployed order: inv_perm gather restores canonical
+    y_canon = jnp.take(y_fused, jnp.asarray(qt.inv_perm), axis=-1)
+    y_ref = x @ qt.dequantize_canonical(jnp.float32).T
+    np.testing.assert_allclose(np.asarray(y_canon), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_align_128_perm_propagates_to_next_layer_c_in():
     """Full two-layer check at align=128: layer-1 deployed WITHOUT runtime
     order restore + layer-2's c_in permuted via propagate_perm == canonical

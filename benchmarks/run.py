@@ -133,6 +133,56 @@ def bench_tinyml(smoke: bool = False) -> list[str]:
     return rows
 
 
+def bench_moe_decode(smoke: bool = False) -> list[str]:
+    """Small-MoE decode step: weight bytes moved + kernel launches.
+
+    Decode is bandwidth-bound — every step reads every weight once, so the
+    bytes column IS the paper's saving on the serving hot path.  PR 4
+    routes MoE expert stacks (and MLA decode) through the expert-batched
+    fused kernel: ``launches`` counts pallas_calls per decode step (ONE
+    per QTensor site under ``pallas``; one per expert x precision group
+    under ``pallas-pergroup``), ``packed_kB`` is the sub-byte weight bytes
+    a step actually moves, ``dense_kB`` the bf16 stacks the pre-PR4
+    ``dq_expert_weights``/``dense_view`` path re-materialized.
+    """
+    from repro.api.qtensor import QTensor
+    from repro.config import get_config
+    from repro.kernels import ops
+    from repro.models import serving
+    rows = ["moe_decode:arch,backend,launches,ms_per_step,packed_kB,dense_kB"]
+    cfg = get_config("deepseek-v3-671b").reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    leaves = [t for t in jax.tree_util.tree_leaves(
+        dp, is_leaf=lambda t: isinstance(t, QTensor))
+        if isinstance(t, QTensor)]
+    packed_kb = sum(qt.memory_bits for qt in leaves) / 8e3
+    # bf16 dense stacks, layer/expert stacking included
+    dense_kb = sum(int(np.prod(qt.packed[0].shape[:-2])) *
+                   qt.c_out * qt.c_in * 2 for qt in leaves) / 1e3
+    B = 2
+    caches = serving.init_caches(cfg, B, 16)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.asarray(8, jnp.int32)
+    counts = {}
+    for backend in ("jnp", "pallas-pergroup", "pallas"):
+        fn = (lambda bk: lambda d, t, c, p:
+              serving.decode_step(d, cfg, t, c, p, bk))(backend)
+        counts[backend] = ops.count_pallas_launches(fn, dp, tok, caches, pos)
+        jfn = jax.jit(fn)
+        dt, _ = _time(lambda: jfn(dp, tok, caches, pos)[0], n=3, warmup=1)
+        rows.append(f"moe_decode:deepseek-v3-671b.reduced,{backend},"
+                    f"{counts[backend]},{dt * 1e3:.1f},{packed_kb:.1f},"
+                    f"{dense_kb:.1f}")
+    if smoke:
+        if not counts["pallas"] < counts["pallas-pergroup"]:
+            raise SystemExit("expert-batched fused path did not reduce "
+                             f"decode launches: {counts}")
+        if not packed_kb < dense_kb:
+            raise SystemExit("packed decode bytes not below dense: "
+                             f"{packed_kb} vs {dense_kb}")
+    return rows
+
+
 def bench_serving(smoke: bool = False) -> list[str]:
     from repro.config import get_config
     from repro.models import serving
@@ -177,6 +227,7 @@ SECTIONS = {
     "deploy": bench_deploy,
     "kernels": bench_kernels,
     "tinyml": bench_tinyml,
+    "moe_decode": bench_moe_decode,
     "serving": bench_serving,
     "roofline": bench_roofline,
     "pareto": bench_pareto,
@@ -184,8 +235,10 @@ SECTIONS = {
 
 
 # fast, allocation-light; tinyml runs its dae-ad-only smoke variant so CI
-# exercises (and asserts on) the fused single-launch serving path
-SMOKE_SECTIONS = ("deploy", "kernels", "tinyml")
+# exercises (and asserts on) the fused single-launch serving path, and
+# moe_decode asserts the expert-batched fused decode really reduces
+# launches and moves sub-byte (not dense) weight bytes
+SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode")
 
 
 def main() -> None:

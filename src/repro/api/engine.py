@@ -196,6 +196,14 @@ class ServingSession:
 
         sess = ServingSession(cfg, dparams, backend="jnp")
         tokens = sess.generate(batch, gen=16, max_len=48)
+
+    Every family serves **fully packed** on both prefill and decode: MoE
+    expert stacks contract through the expert-batched fused kernel (one
+    ``pallas_call`` per expert weight under ``backend="pallas"``) and MLA
+    decode expands its cached latents through the packed ``wkv_b`` matmul —
+    no path dequantizes a full weight (the all-family monkeypatch guard in
+    tests/test_serving_consistency.py pins this).  ``backend="jnp"`` keeps
+    the same routing with per-group dense sub-GEMMs (the CPU reference).
     """
 
     def __init__(self, cfg, dparams, backend: str = "jnp"):

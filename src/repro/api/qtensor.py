@@ -41,6 +41,14 @@ it flows through ``jax.jit`` / ``jax.vmap`` / ``device_put`` unchanged, and
 and delegates to ``matmul`` — the deployed conv path never materializes a
 dense float kernel (depthwise convs take a grouped per-channel fall-back).
 
+With ``experts`` set (static E; the MoE layout built by
+``models/serving.init_deployed_linear(expert_axis=E)``), every array leaf
+carries a leading expert axis — including the fused buffers, which then
+share ONE static tile schedule across experts — and ``matmul`` maps
+``(E, ..., c_in) -> (E, ..., c_out)`` as a batched grouped GEMM: the packed
+replacement for ``einsum("ecd,efd->ecf", x, dense_stack)``, served as a
+single expert-batched ``pallas_call`` under ``backend="pallas"``.
+
 This replaces the old offline-only ``core.deploy.DeployedLinear`` numpy
 holder; the search-time, fine-tune, and serving paths now share one type.
 """
@@ -82,6 +90,11 @@ def _fused_tile_layout(groups, tile_n: int, Kp: int, c_out: int,
 
     Returns ``(fused_packed 1-D uint8, fused_scales (T*tile_n,) f32,
     fused_perm, tile_bits)``.
+
+    ``models/serving.init_deployed_linear`` carries a traced-safe sibling
+    of this builder (jnp ops, schedule from static group sizes only, an
+    optional expert axis) for the vmap'd serving init — the two emit the
+    same layout contract (see the NOTE there); keep them in sync.
     """
     tiles = []
     dep_start = 0
@@ -137,6 +150,11 @@ class QTensor:
     #                                              the tile walk order
     tile_bits: Optional[tuple] = None            # static per-tile bit-widths
     tile_n: Optional[int] = None                 # static output tile width
+    # -- expert stacking (MoE) ---------------------------------------------
+    experts: Optional[int] = None   # static E: every array leaf carries a
+    #                                 leading expert axis and matmul maps
+    #                                 (E, ..., c_in) -> (E, ..., c_out) as a
+    #                                 batched grouped GEMM (one launch)
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten_with_keys(self):
@@ -150,17 +168,18 @@ class QTensor:
         )
         aux = (self.bits, self.c_out, self.c_in, self.act_bits,
                self.act_scale, self.kernel_shape, self.restore_order,
-               self.tile_bits, self.tile_n)
+               self.tile_bits, self.tile_n, self.experts)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scales, inv_perm, fused_packed, fused_scales, fperm = children
         (bits, c_out, c_in, act_bits, act_scale, kernel_shape,
-         restore_order, tile_bits, tile_n) = aux
+         restore_order, tile_bits, tile_n, experts) = aux
         return cls(packed, scales, inv_perm, bits, c_out, c_in,
                    act_bits, act_scale, kernel_shape, restore_order,
-                   fused_packed, fused_scales, fperm, tile_bits, tile_n)
+                   fused_packed, fused_scales, fperm, tile_bits, tile_n,
+                   experts)
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -330,6 +349,12 @@ class QTensor:
         backends cannot drift.  ``compute_dtype`` reaches the kernel's MXU
         dot as well as the output cast: f32 (the default) is the bit-parity
         path with the fake-quant reference, bf16 the TPU fast path.
+
+        An **expert-stacked** QTensor (``experts == E``; MoE weight stacks
+        from ``serving.init_deployed_linear(expert_axis=E)``) instead maps
+        ``x (E, ..., c_in) -> (E, ..., c_out)`` per expert — the packed
+        form of ``einsum("ecd,efd->ecf", x, dense_stack)``; with a fused
+        layout the whole grouped GEMM is ONE expert-batched launch.
         """
         if x.shape[-1] != self.c_in:
             raise ValueError(
@@ -338,6 +363,8 @@ class QTensor:
                 "otherwise zero-pad and compute silently wrong outputs)")
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        if self.experts is not None:
+            return self._matmul_experts(x, compute_dtype, backend)
         if backend == "pallas" and self.fused_packed is not None:
             from repro.kernels import ops as kops
             return kops.quant_matmul_fused(
@@ -367,6 +394,54 @@ class QTensor:
                 for b, p, s in zip(self.bits, self.packed, self.scales)]
         return self._concat_restore(outs)
 
+    def _matmul_experts(self, x: jnp.ndarray, compute_dtype,
+                        backend: str) -> jnp.ndarray:
+        """Stacked-leaf (MoE) dispatch: ``x (E, ..., c_in) -> (E, ...,
+        c_out)``, each expert contracting its own packed weight.
+
+        ``backend="pallas"`` with a fused layout runs the whole grouped
+        GEMM as ONE expert-batched launch
+        (kernels/ops.quant_matmul_fused_batched — bit-exact at f32 with
+        the dense einsum reference); otherwise the per-group kernels run
+        per expert (the reference path), or the jnp fall-back contracts
+        each group's small dense slice with a batched einsum.  The serving
+        hot path never dequantizes the full ``(E, c_out, c_in)`` stack.
+        """
+        E = self.experts
+        if x.ndim < 2 or x.shape[0] != E:
+            raise ValueError(
+                f"expert-stacked QTensor (experts={E}) takes x of shape "
+                f"(E, ..., c_in); got {x.shape}")
+        if backend == "pallas" and self.fused_packed is not None:
+            from repro.kernels import ops as kops
+            return kops.quant_matmul_fused_batched(
+                x, self.fused_packed, self.fused_scales, self.fused_perm,
+                self.tile_bits, self.tile_n, self.c_in, self.c_out,
+                out_dtype=compute_dtype, compute_dtype=compute_dtype)
+        if backend in ("pallas", "pallas-pergroup"):
+            from repro.kernels import ops as kops
+            c_in = self.c_in
+            if self.tile_n is not None:
+                Kp = self.packed[-1].shape[-1] * qz.pack_factor(self.bits[-1])
+                widths = [(0, 0)] * (x.ndim - 1) + [(0, Kp - c_in)]
+                x = jnp.pad(x, widths)
+                c_in = Kp
+
+            def gemm(b, p, s):
+                return jnp.stack([
+                    kops.quant_matmul(x[e], p[e], s[e], b, c_in,
+                                      out_dtype=compute_dtype,
+                                      compute_dtype=compute_dtype)
+                    for e in range(E)])
+        else:
+            def gemm(b, p, s):
+                w = self._group_dense(b, p, s, compute_dtype)  # (E, n, c_in)
+                return jnp.einsum("e...i,eoi->e...o",
+                                  x.astype(compute_dtype), w)
+        outs = [gemm(b, p, s)
+                for b, p, s in zip(self.bits, self.packed, self.scales)]
+        return self._concat_restore(outs)
+
     def conv2d(self, x: jnp.ndarray, stride=1, padding: str = "SAME",
                groups: int = 1, compute_dtype=jnp.float32,
                backend: str = "jnp") -> jnp.ndarray:
@@ -391,6 +466,9 @@ class QTensor:
         if self.kernel_shape is None:
             raise TypeError("conv2d requires a conv QTensor "
                             "(kernel_shape is None — this is a linear map)")
+        if self.experts is not None:
+            raise TypeError("conv2d does not take expert-stacked QTensors "
+                            "(the expert axis is a linear-map concept)")
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
         from repro.kernels import quant_conv as qc

@@ -127,6 +127,58 @@ def quant_matmul_fused(x: jnp.ndarray, fused_packed: jnp.ndarray,
     return y.reshape(*lead, c_out)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("tile_bits", "tile_n", "c_in", "c_out",
+                                    "out_dtype", "bm", "compute_dtype"))
+def quant_matmul_fused_batched(x: jnp.ndarray, fused_packed: jnp.ndarray,
+                               fused_scales: jnp.ndarray, fused_perm,
+                               tile_bits: tuple, tile_n: int, c_in: int,
+                               c_out: int, out_dtype=jnp.float32,
+                               bm: int = 128,
+                               compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Expert-stacked fused GEMM ``x (E, ..., c_in) -> (E, ..., c_out)`` in
+    ONE kernel launch — the packed replacement for
+    ``einsum("ecd,efd->ecf", x, dense_expert_stack)``.
+
+    ``fused_packed (E, bytes)`` / ``fused_scales (E, T * tile_n)`` are the
+    per-expert buffers of the shared static tile schedule
+    (``models/serving.init_deployed_linear(expert_axis=E)``); the grid adds
+    a leading E axis (kernels/quant_matmul.quant_matmul_fused_3d).  The
+    kernel dequantizes each weight tile in VMEM **before** the MXU dot, so
+    at f32 compute the output is bit-exact with the dense einsum reference
+    over ``dequantize()`` — HBM weight traffic stays the packed sub-byte
+    bytes.  ``fused_perm`` gathers the output channels exactly as in
+    :func:`quant_matmul_fused` (None = restore folded into the walk order).
+    """
+    E = fused_packed.shape[0]
+    if x.ndim < 2 or x.shape[0] != E:
+        raise ValueError(
+            f"expert-stacked fused matmul needs x of shape (E={E}, ..., "
+            f"c_in); got {x.shape}")
+    if x.shape[-1] != c_in:
+        raise ValueError(
+            f"x contraction dim {x.shape[-1]} != c_in {c_in}")
+    Kp = -(-c_in // qm_kernel.FUSED_K_ALIGN) * qm_kernel.FUSED_K_ALIGN
+    lead = x.shape[1:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(E, M, c_in).astype(compute_dtype)
+    x2 = _pad_to(x2, 2, Kp)
+    bm_ = _pick_bm(M, bm)
+    x2 = _pad_to(x2, 1, bm_)
+    y = qm_kernel.quant_matmul_fused_3d(
+        x2, fused_packed, fused_scales, tile_bits, Kp=Kp, tile_n=tile_n,
+        bm=bm_, interpret=INTERPRET, out_dtype=out_dtype,
+        compute_dtype=compute_dtype)
+    y = y[:, :M]
+    if fused_perm is not None:
+        y = jnp.take(y, fused_perm, axis=-1)
+    else:
+        y = y[..., :c_out]
+    return y.reshape(E, *lead, c_out)
+
+
 def qtensor_matmul(x: jnp.ndarray, qt, out_dtype=jnp.float32) -> jnp.ndarray:
     """``x (..., c_in) @ QTensor -> (..., c_out)`` on the Pallas path.
 

@@ -51,6 +51,30 @@ K is not gridded: edge GEMMs have small contractions, so each tile does one
 MXU dot over the whole (padded) ``Kp <= K_SINGLE_STEP_MAX``.  This is also
 what makes the fused path bit-exact with the per-group path at
 ``compute_dtype=f32`` — both reduce K in a single dot of identical length.
+
+Batched / expert axis (``quant_matmul_fused_3d``)
+-------------------------------------------------
+MoE expert stacks carry a leading ``E`` axis on every buffer (the
+``init_deployed_linear(expert_axis=E)`` layout: one static tile schedule
+shared by all experts, per-expert packed bytes and scales).  The fused
+kernel extends with one more grid dimension — ``grid (E, M/bm, T)`` — so a
+whole ``einsum("ecd,efd->ecf")``-shaped grouped expert GEMM is still ONE
+``pallas_call``; the per-tile static bit schedule is unchanged, each grid
+step just streams expert ``e``'s ragged byte segment.  The 2-D entry point
+is the ``E == 1`` slice of the same kernel body.
+
+Two in-kernel scale placements (static ``dequant_first`` flag):
+
+* ``False`` (the 2-D / single-weight path): the per-channel step multiplies
+  the f32 *accumulator* after the dot — bit-exact with the per-group
+  ``_kernel`` (PR 3's contract).
+* ``True`` (the expert-batched path): the step multiplies the unpacked
+  integer tile *before* the dot (in-VMEM dequant; HBM traffic is still the
+  packed bytes).  The products then match a dense reference
+  ``einsum("ecd,efd->ecf", x, w_int * scale)`` element for element, so at
+  f32 compute the fused expert GEMM is **bit-exact with the dense einsum
+  it replaces** (`models/serving._deployed_moe`'s old
+  ``dq_expert_weights`` path) — the PR 4 acceptance contract.
 """
 from __future__ import annotations
 
@@ -147,26 +171,92 @@ def fused_tile_offsets(tile_bits, Kp: int, tile_n: int) -> tuple:
 
 
 def _fused_kernel(x_ref, p_ref, s_ref, o_ref, *, tile_bits, offsets,
-                  tile_n: int, Kp: int, compute_dtype):
-    """One grid step = one (bm, tile_n) output tile at its static bit-width.
+                  tile_n: int, Kp: int, compute_dtype,
+                  dequant_first: bool):
+    """One grid step = one (bm, tile_n) output tile of one batch slice at
+    its static bit-width.
 
-    The (bits, byte offset) schedule is unrolled into per-tile ``pl.when``
-    branches: every slice start/size below is a Python int, so each branch
-    streams exactly its tile's ragged byte segment and unpacks at the
-    tile's own width.  Exactly one branch fires per grid step.
+    Every ref carries a leading size-1 batch/expert block (the grid's first
+    axis walks E).  The (bits, byte offset) schedule is unrolled into
+    per-tile ``pl.when`` branches: every slice start/size below is a Python
+    int, so each branch streams exactly its tile's ragged byte segment and
+    unpacks at the tile's own width.  Exactly one branch fires per grid
+    step.  ``dequant_first`` picks the scale placement (module docstring):
+    accumulator-scaled (per-group bit-parity) vs weight-scaled in VMEM
+    (dense-einsum bit-parity, the expert path).
     """
-    j = pl.program_id(1)
-    x = x_ref[...]                                          # (bm, Kp)
+    j = pl.program_id(2)
+    x = x_ref[...][0]                                       # (bm, Kp)
     for t, (b, off) in enumerate(zip(tile_bits, offsets)):
         @pl.when(j == t)
         def _tile(b=b, off=off):
             f = qz.pack_factor(b)
-            flat = pl.load(p_ref, (pl.dslice(off, tile_n * (Kp // f)),))
+            flat = pl.load(p_ref, (pl.dslice(0, 1),
+                                   pl.dslice(off, tile_n * (Kp // f))))
             w_int = _unpack_block(flat.reshape(tile_n, Kp // f), b)
-            acc = jnp.dot(x.astype(compute_dtype),
-                          w_int.astype(compute_dtype).T,
-                          preferred_element_type=jnp.float32)
-            o_ref[...] = acc * s_ref[...][None, :].astype(jnp.float32)
+            s = s_ref[...][0].astype(jnp.float32)           # (tile_n,)
+            if dequant_first:
+                w = (w_int.astype(jnp.float32) * s[:, None]
+                     ).astype(compute_dtype)
+                out = jnp.dot(x.astype(compute_dtype), w.T,
+                              preferred_element_type=jnp.float32)
+            else:
+                acc = jnp.dot(x.astype(compute_dtype),
+                              w_int.astype(compute_dtype).T,
+                              preferred_element_type=jnp.float32)
+                out = acc * s[None, :]
+            o_ref[...] = out[None]
+
+
+def quant_matmul_fused_3d(x: jnp.ndarray, fused_packed: jnp.ndarray,
+                          fused_scales: jnp.ndarray, tile_bits: tuple, *,
+                          Kp: int, tile_n: int, bm: int = 128,
+                          interpret: bool = True, out_dtype=jnp.float32,
+                          compute_dtype=jnp.float32,
+                          dequant_first: bool = True) -> jnp.ndarray:
+    """Batched (expert-axis) single-launch multi-precision grouped GEMM.
+
+    ``x (E, M, Kp)`` (M a ``bm`` multiple, Kp the common pack-padded
+    contraction) x ``fused_packed (E, sum_t tile_bytes)`` uint8 ->
+    ``(E, M, T * tile_n)`` f32 in tile walk order: the whole
+    ``einsum("ecd,efd->ecf")``-shaped expert GEMM in ONE ``pallas_call``,
+    grid ``(E, M/bm, T)``.  ``tile_bits`` is the static per-tile bit-width
+    schedule shared by every expert; ``fused_scales (E, T * tile_n)``
+    carries the per-expert per-channel dequant steps (0 for tile-padding
+    rows).  ``dequant_first=True`` (the expert default) scales the unpacked
+    integer tile in VMEM before the MXU dot — bit-exact at f32 with the
+    dense einsum over ``w_int * scale`` this kernel replaces.
+    """
+    E, M = x.shape[0], x.shape[1]
+    T = len(tile_bits)
+    assert M % bm == 0 and x.shape[2] == Kp, (x.shape, bm, Kp)
+    assert Kp % FUSED_K_ALIGN == 0 and Kp <= K_SINGLE_STEP_MAX, Kp
+    offsets = fused_tile_offsets(tile_bits, Kp, tile_n)
+    nbytes = offsets[-1] + fused_tile_bytes(tile_bits[-1], Kp, tile_n)
+    assert fused_packed.shape == (E, nbytes), \
+        (fused_packed.shape, E, nbytes, "fused buffer does not match schedule")
+    assert fused_scales.shape == (E, T * tile_n), fused_scales.shape
+    kern = functools.partial(_fused_kernel, tile_bits=tuple(tile_bits),
+                             offsets=offsets, tile_n=tile_n, Kp=Kp,
+                             compute_dtype=compute_dtype,
+                             dequant_first=dequant_first)
+    out = pl.pallas_call(
+        kern,
+        grid=(E, M // bm, T),
+        in_specs=[
+            pl.BlockSpec((1, bm, Kp), lambda e, i, j: (e, i, 0)),
+            # one expert's whole ragged buffer is resident (edge weights are
+            # small); an i/j-constant index map fetches it once per expert
+            pl.BlockSpec((1, nbytes), lambda e, i, j: (e, 0)),
+            pl.BlockSpec((1, tile_n), lambda e, i, j: (e, j)),
+        ],
+        # identity index map: when the deploy transform orders the schedule
+        # by canonical output tile, this map IS the order restore
+        out_specs=pl.BlockSpec((1, bm, tile_n), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, T * tile_n), jnp.float32),
+        interpret=interpret,
+    )(x, fused_packed, fused_scales)
+    return out.astype(out_dtype)
 
 
 def quant_matmul_fused_2d(x: jnp.ndarray, fused_packed: jnp.ndarray,
@@ -182,35 +272,18 @@ def quant_matmul_fused_2d(x: jnp.ndarray, fused_packed: jnp.ndarray,
     per-tile bit-width schedule; ``fused_scales (T * tile_n,)`` carries the
     per-channel dequant steps (0 for tile-padding rows).  One ``pallas_call``
     regardless of how many precisions the weight mixes.
+
+    The ``E == 1`` slice of :func:`quant_matmul_fused_3d` with the
+    accumulator-scale placement (``dequant_first=False``) — bit-exact at
+    f32 with the per-group ``_kernel`` path, PR 3's contract.
     """
-    M = x.shape[0]
-    T = len(tile_bits)
-    assert M % bm == 0 and x.shape[1] == Kp, (x.shape, bm, Kp)
-    assert Kp % FUSED_K_ALIGN == 0 and Kp <= K_SINGLE_STEP_MAX, Kp
-    offsets = fused_tile_offsets(tile_bits, Kp, tile_n)
-    assert fused_packed.size == offsets[-1] + fused_tile_bytes(
-        tile_bits[-1], Kp, tile_n), "fused buffer does not match schedule"
-    assert fused_scales.shape == (T * tile_n,), fused_scales.shape
-    kern = functools.partial(_fused_kernel, tile_bits=tuple(tile_bits),
-                             offsets=offsets, tile_n=tile_n, Kp=Kp,
-                             compute_dtype=compute_dtype)
-    out = pl.pallas_call(
-        kern,
-        grid=(M // bm, T),
-        in_specs=[
-            pl.BlockSpec((bm, Kp), lambda i, j: (i, 0)),
-            # the whole ragged buffer is resident (edge weights are small);
-            # a constant index map means the pipeline fetches it once
-            pl.BlockSpec(fused_packed.shape, lambda i, j: (0,)),
-            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
-        ],
-        # identity index map: when the deploy transform orders the schedule
-        # by canonical output tile, this map IS the order restore
-        out_specs=pl.BlockSpec((bm, tile_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, T * tile_n), jnp.float32),
-        interpret=interpret,
-    )(x, fused_packed, fused_scales)
-    return out.astype(out_dtype)
+    assert fused_scales.shape == (len(tile_bits) * tile_n,), \
+        fused_scales.shape
+    out = quant_matmul_fused_3d(
+        x[None], fused_packed[None], fused_scales[None], tile_bits, Kp=Kp,
+        tile_n=tile_n, bm=bm, interpret=interpret, out_dtype=out_dtype,
+        compute_dtype=compute_dtype, dequant_first=False)
+    return out[0]
 
 
 def quant_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,

@@ -189,12 +189,25 @@ def init_gqa_cache(cfg, batch: int, max_len: int) -> dict:
     }
 
 
-def _quant_per_token(t):
+def quant_per_token(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token symmetric int8 quantization of KV-cache entries.
+
+    ``t (..., D) -> (q int8 (..., D), scale f32 (..., 1))`` with
+    ``t ≈ q * scale``; one amax over the feature axis per leading index —
+    the paper's layer-wise activation scheme applied per cached token.
+    The single quantizer behind every cache write (GQA K/V, the MLA
+    latent, and the prefill cache builders in models/serving.py); public
+    as of PR 4 so serving does not reach into a private helper.
+    """
     amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
     scale = jnp.maximum(amax.astype(jnp.float32), 1e-6) / 127.0
     q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127
                  ).astype(jnp.int8)
     return q, scale
+
+
+# Deprecated pre-PR4 private name; removal tracked in docs/api_migration.md.
+_quant_per_token = quant_per_token
 
 
 def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
@@ -217,8 +230,8 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
         q = L.apply_rope(q, cos, sin, rot)
         k = L.apply_rope(k, cos, sin, rot)
     # append new kv (int8) at pos
-    kq, ks = _quant_per_token(k.transpose(0, 2, 1, 3))   # (B, KV, 1, hd)
-    vq, vs = _quant_per_token(v.transpose(0, 2, 1, 3))
+    kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))    # (B, KV, 1, hd)
+    vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
     pos0 = pos.astype(jnp.int32)
     cache = {
         "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, pos0, 0)),
@@ -305,12 +318,28 @@ def init_mla_cache(cfg, batch: int, max_len: int) -> dict:
 
 
 def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
-               dq_linear, dense_w) -> tuple[jnp.ndarray, dict]:
-    """One-token MLA decode with weight absorption.
+               dq_linear) -> tuple[jnp.ndarray, dict]:
+    """One-token MLA decode, fully packed.
 
-    ``dense_w(name)`` returns a dense (c_out, c_in) weight view for the
-    small wkv_b projection (absorbed per-head); the big projections go
-    through ``dq_linear`` (packed mixed-precision path).
+    The pre-PR4 path "absorbed" ``wkv_b`` per head (W_uk / W_uv) from a
+    dense ``(c_out, c_in)`` view — re-materializing the full bf16 weight on
+    every step, exactly the HBM traffic the searched sub-byte assignment is
+    supposed to save.  Decode now expands the cached latents through the
+    **packed** ``wkv_b`` matmul instead (``dq_linear`` — the same
+    mixed-precision group/fused kernels as prefill) and attends in per-head
+    K/V space: mathematically the same attention (absorption is an exact
+    linear-algebra rewrite), with every weight read staying sub-byte.  The
+    cache layout is unchanged (int8 latent + shared bf16 k_rope), so
+    prefill-built caches embed as before.
+
+    Trade-off: expansion re-runs the ``wkv_b`` matmul over all ``S``
+    cached latents each step (O(S) activation compute) where absorption
+    paid a dense O(1) weight read — the packed win holds while
+    ``S * act_bytes`` stays under the dense ``H*(nope+vd)*kvr`` weight
+    bytes, i.e. the edge/short-context decode this repo serves.  Packed
+    absorption proper needs a transpose (contract-over-``c_out``) packed
+    matmul, which the channel-grouped layout does not support — revisit if
+    long-context MLA decode becomes a target workload.
     """
     B = x.shape[0]
     H = cfg.n_heads
@@ -330,7 +359,7 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     q_rope = L.apply_rope(q_rope, cos, sin, rot)
     k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], cos, sin, rot)[:, :, 0]
 
-    qc, qs = _quant_per_token(c_kv)
+    qc, qs = quant_per_token(c_kv)
     pos0 = pos.astype(jnp.int32)
     cache = {
         "ckv": jax.lax.dynamic_update_slice(cache["ckv"], qc, (0, pos0, 0)),
@@ -341,22 +370,21 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     }
     S = cache["ckv"].shape[1]
 
-    # weight absorption: W_uk (H, nope, kvr), W_uv (H, vd, kvr) from wkv_b
-    wkv_b = dense_w("wkv_b").reshape(H, nope + vd, kvr)
-    w_uk, w_uv = wkv_b[:, :nope], wkv_b[:, nope:]
-    # q_nope' = q_nope @ W_uk  -> latent space (B, 1, H, kvr)
-    q_lat = jnp.einsum("bqhn,hnr->bqhr", q_nope.astype(cd), w_uk.astype(cd))
-
+    # expand latents to per-head K/V through the packed low-rank factor:
+    # ckv (B, S, kvr) -> (B, S, H, nope + vd), weights streaming sub-byte
     ckv_f = (cache["ckv"].astype(jnp.float32) * cache["ckv_scale"]).astype(cd)
-    s = jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_f).astype(jnp.float32)
+    kv = dq_linear(ckv_f, p["wkv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    s = jnp.einsum("bqhn,bkhn->bhqk", q_nope.astype(cd),
+                   k_nope.astype(cd)).astype(jnp.float32)
     s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(cd),
                        cache["krope"].astype(cd)).astype(jnp.float32)
     s = s / math.sqrt(nope + rope)
     valid = jnp.arange(S)[None, None, None, :] <= pos0
     s = jnp.where(valid, s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1).astype(cd)
-    o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv_f)       # (B,1,H,kvr)
-    o = jnp.einsum("bqhr,hvr->bqhv", o_lat, w_uv.astype(cd))
+    o = jnp.einsum("bhqk,bkhv->bqhv", w, v.astype(cd))   # (B, 1, H, vd)
     o = o.reshape(B, 1, H * vd)
     return dq_linear(o, p["wo"]), cache
 

@@ -83,13 +83,12 @@ def init_moe(key, cfg, dtype) -> tuple[dict, dict]:
 
 def _expert_weights(p, nas, policy, qcfg):
     """Policy-appropriate fake quantization of stacked (E, c_out, c_in)
-    weights; a QTensor leaf (deployed) dequantizes to the dense stack."""
-    from repro.api.qtensor import QTensor
+    float weights (search-time phases).  Deployed QTensor stacks never come
+    through here — ``moe_forward`` contracts them packed (expert-batched
+    fused kernel) instead of dequantizing a dense stack."""
     from repro.core import mixedprec as mp
     from repro.core import quantizers as qz
     w = p["w"]
-    if isinstance(w, QTensor):
-        return w.dequantize(jnp.float32)
     E, co, ci = w.shape
     if policy.phase is Phase.FLOAT:
         return w
@@ -175,13 +174,24 @@ def moe_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
     # (E, C, d) buffer and all-reduces it per layer (§Perf measurement)
     buf = constrain(buf.reshape(E, capacity, d), "M", "D", None)
 
-    wg = _expert_weights(p["we_gate"], getn("we_gate"), policy, cfg.quant).astype(cd)
-    wu = _expert_weights(p["we_up"], getn("we_up"), policy, cfg.quant).astype(cd)
-    wd = _expert_weights(p["we_down"], getn("we_down"), policy, cfg.quant).astype(cd)
-    h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
-                 jnp.einsum("ecd,efd->ecf", buf, wu))
-    out_buf = constrain(jnp.einsum("ecf,edf->ecd", h, wd),
-                        "M", "D", None).reshape(E * capacity, d)
+    from repro.api.qtensor import QTensor
+    if isinstance(p["we_gate"]["w"], QTensor):
+        # deployed: expert-stacked QTensors contract the (E, C, d) buffer
+        # packed — one expert-batched fused launch per weight under
+        # backend="pallas" — instead of dequantizing a dense (E, co, ci)
+        # stack (the pre-PR4 bandwidth leak)
+        bk = policy.backend
+        h = L.swiglu(p["we_gate"]["w"].matmul(buf, cd, bk),
+                     p["we_up"]["w"].matmul(buf, cd, bk))
+        out_buf = p["we_down"]["w"].matmul(h, cd, bk)
+    else:
+        wg = _expert_weights(p["we_gate"], getn("we_gate"), policy, cfg.quant).astype(cd)
+        wu = _expert_weights(p["we_up"], getn("we_up"), policy, cfg.quant).astype(cd)
+        wd = _expert_weights(p["we_down"], getn("we_down"), policy, cfg.quant).astype(cd)
+        h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
+                     jnp.einsum("ecd,efd->ecf", buf, wu))
+        out_buf = jnp.einsum("ecf,edf->ecd", h, wd)
+    out_buf = constrain(out_buf, "M", "D", None).reshape(E * capacity, d)
 
     # gather back, weight by gates, sum the k slots
     gathered = constrain(jnp.where(keep[:, None], out_buf[dest], 0),

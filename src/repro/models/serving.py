@@ -44,34 +44,98 @@ from repro.models import transformer as tfm
 # ---------------------------------------------------------------------------
 
 def init_deployed_linear(key, c_in: int, c_out: int, cfg,
-                         bias: bool = False, expert_axis: int = 0) -> dict:
+                         bias: bool = False, expert_axis: int = 0,
+                         tile_n="auto") -> dict:
     """Random-weight deployed linear with the config's static group sizes.
 
     ``expert_axis``: if >0, adds a leading expert dimension E=expert_axis to
     every leaf (MoE).  Weights are synthesized then truly quantized+packed so
     dry-run tensors have exactly the deployed bytes.  Static assignments are
     built group-contiguous, so no permutation is carried.
+
+    ``tile_n`` (default ``"auto"``) additionally builds the tile-aligned
+    **fused single-launch layout** — per-expert ragged byte buffers under
+    one static tile schedule (the schedule depends only on the static group
+    sizes, so all experts share it) — which lets ``backend="pallas"`` serve
+    the site as ONE ``pallas_call``, expert-batched for MoE stacks.  Pass
+    ``None`` for per-group-only packing.  The builder is traced-safe:
+    ``init_deployed_model`` vmaps it over layers, so the schedule is pure
+    Python/numpy over static sizes and the byte buffers are jnp ops.
+    Contractions beyond the fused kernel's single-K-step budget skip the
+    fused layout (per-group fall-back, as in ``QTensor.from_assignment``).
+
+    NOTE this is the traced-safe sibling of
+    ``repro.api.qtensor._fused_tile_layout`` (the numpy builder behind
+    ``QTensor.from_assignment``): both emit the contract consumed by
+    ``kernels/quant_matmul.fused_tile_offsets`` and the fused kernels —
+    tile segments contiguous in walk order, per-tile bytes
+    ``tile_n * Kp * b/8``, zero scales on padding rows, ``fused_perm``
+    None iff padding lands only past ``c_out``.  Here the assignment is
+    group-contiguous and ascending-bit, so the walk order is the natural
+    group order and no tile sort is needed; change the layout in BOTH
+    builders or the kernel asserts / parity harnesses will fail.
     """
+    from repro.api.qtensor import _auto_tile_n
+    from repro.kernels import quant_matmul as qmk
     sizes = cfg.deploy.group_sizes(c_out, sorted(cfg.quant.weight_bits))
     E = max(expert_axis, 1)
+    if tile_n == "auto":
+        # group sizes are align-rounded, so an align-divisible tile keeps
+        # the walk order identity (no output gather) for most layers
+        tile_n = min(_auto_tile_n(c_out), cfg.deploy.align)
+    Kp = -(-c_in // qmk.FUSED_K_ALIGN) * qmk.FUSED_K_ALIGN
+    if tile_n is not None and Kp > qmk.K_SINGLE_STEP_MAX:
+        tile_n = None                  # contraction too deep to fuse
     packed_groups, scale_groups, used_bits = [], [], []
+    fused_p, fused_s, tile_bits, tcol = [], [], [], []
+    dep = 0
     for b, n in sizes.items():
         if n == 0:
             continue
         f = qz.pack_factor(b)
-        ci_pad = -(-c_in // f) * f
+        kpad = Kp if tile_n is not None else -(-c_in // f) * f
         kw, ks = jax.random.split(jax.random.fold_in(key, b))
-        w = jax.random.normal(kw, (E, n, ci_pad)) / np.sqrt(c_in)
+        w = jax.random.normal(kw, (E, n, c_in)) / np.sqrt(c_in)
         alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
         q, scale = qz.quantize_weight_int(w, alpha, b)
-        packed = qz.pack_int(q, b)                     # (E, n, ci_pad/f)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, kpad - c_in)))
+        packed = qz.pack_int(q, b)                     # (E, n, kpad/f)
         packed_groups.append(packed if expert_axis else packed[0])
         scale_groups.append((scale[..., 0] if expert_axis
                              else scale[0, :, 0]).astype(jnp.float32))
         used_bits.append(b)
+        if tile_n is not None:
+            pad = (-n) % tile_n
+            qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+            sp = jnp.pad(scale[..., 0].astype(jnp.float32),
+                         ((0, 0), (0, pad)))
+            # tiles are contiguous row runs, so the group's row-major bytes
+            # ARE its tile segments in walk order
+            fused_p.append(qz.pack_int(qp, b).reshape(E, -1))
+            fused_s.append(sp)
+            tile_bits += [b] * ((n + pad) // tile_n)
+            tcol += list(range(dep, dep + n)) + [-1] * pad
+        dep += n
+    fused = {}
+    if tile_n is not None:
+        fp = jnp.concatenate(fused_p, axis=-1)
+        fs = jnp.concatenate(fused_s, axis=-1)
+        tcol = np.asarray(tcol)
+        if (tcol[:c_out] == np.arange(c_out)).all() and (tcol[c_out:] < 0).all():
+            fperm = None               # tile padding only past c_out
+        else:
+            cols = np.nonzero(tcol >= 0)[0].astype(np.int32)
+            gather = np.zeros(c_out, np.int32)
+            gather[tcol[cols]] = cols
+            fperm = jnp.asarray(gather)
+        fused = dict(fused_packed=fp if expert_axis else fp[0],
+                     fused_scales=fs if expert_axis else fs[0],
+                     fused_perm=fperm, tile_bits=tuple(tile_bits),
+                     tile_n=tile_n)
     qt = QTensor(tuple(packed_groups), tuple(scale_groups), None,
                  tuple(used_bits), c_out, c_in,
-                 act_bits=cfg.deploy.act_bits, restore_order=False)
+                 act_bits=cfg.deploy.act_bits, restore_order=False,
+                 experts=E if expert_axis else None, **fused)
     out = {"w": qt}
     if bias:
         out["bias"] = jnp.zeros((E, c_out) if expert_axis else (c_out,),
@@ -88,20 +152,31 @@ def dq_linear(x: jnp.ndarray, dp: dict, compute_dtype=jnp.bfloat16,
     kernel when the QTensor carries the tile-aligned layout and falls back
     to one unpack+dequant+GEMM launch per precision group otherwise
     (``"pallas-pergroup"`` forces the per-group reference path).
+
+    An expert-stacked QTensor (MoE) maps ``x (E, ..., c_in) -> (E, ...,
+    c_out)`` per expert — one expert-batched fused launch under
+    ``backend="pallas"``.
     """
     y = dp["w"].matmul(x, compute_dtype, backend)
     if "bias" in dp:
-        y = y + dp["bias"].astype(y.dtype)
+        b = dp["bias"].astype(y.dtype)
+        if dp["w"].experts is not None:     # (E, c_out) broadcast over rows
+            b = b.reshape((b.shape[0],) + (1,) * (y.ndim - 2) + (b.shape[-1],))
+        y = y + b
     return y
 
 
-def dq_expert_weights(dp: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
-    """Unpack+dequant stacked MoE expert weights -> (E, c_out, c_in)."""
-    return dp["w"].dequantize(compute_dtype)
+def debug_dense_view(dp: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Dense float view of a deployed linear — DEBUG / ANALYSIS ONLY.
 
-
-def dense_view(dp: dict, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
-    """Full dense (c_out, c_in) view of a deployed linear (for absorption)."""
+    ``(c_out, c_in)`` for a plain linear, stacked ``(E, c_out, c_in)`` for
+    MoE expert weights.  Replaces the removed ``dense_view`` /
+    ``dq_expert_weights`` helpers: as of PR 4 **no serving hot path
+    dequantizes a full weight** — MoE experts run through the expert-batched
+    fused kernel and MLA decode expands its latents through the packed
+    ``wkv_b`` matmul (enforced by the all-family monkeypatch guard in
+    tests/test_serving_consistency.py).
+    """
     return dp["w"].dequantize(compute_dtype)
 
 
@@ -151,7 +226,11 @@ def _init_deployed_attn(key, cfg):
 
 def _init_deployed_ffn(key, cfg):
     d = cfg.d_model
-    ks = jax.random.split(key, 8)
+    # 10 keys: a config with BOTH a shared expert and a dense residual MLP
+    # (deepseek + arctic extras combined) must not reuse ks[4..6] for the
+    # two sub-trees — they would deploy identical weights (PR 4 bugfix,
+    # regression-tested in tests/test_expert_parity.py)
+    ks = jax.random.split(key, 10)
     if cfg.n_experts:
         E, ff = cfg.n_experts, cfg.moe_d_ff
         p = {
@@ -168,9 +247,9 @@ def _init_deployed_ffn(key, cfg):
                            "w_down": _dl(ks[6], sff, d, cfg)}
         if cfg.dense_residual_ff:
             rff = cfg.dense_residual_ff
-            p["dense_res"] = {"w_gate": _dl(ks[4], d, rff, cfg),
-                              "w_up": _dl(ks[5], d, rff, cfg),
-                              "w_down": _dl(ks[6], rff, d, cfg)}
+            p["dense_res"] = {"w_gate": _dl(ks[7], d, rff, cfg),
+                              "w_up": _dl(ks[8], d, rff, cfg),
+                              "w_down": _dl(ks[9], rff, d, cfg)}
         return p
     if cfg.mlp_type == "swiglu":
         return {"w_gate": _dl(ks[0], d, cfg.d_ff, cfg),
@@ -270,8 +349,8 @@ def _deployed_attn_full(p, cfg, x, positions, causal=True, enc=None,
     y = dq(o.reshape(B, S, H * hd), p["wo"])
     cache = None
     if build_cache:
-        kq, ksc = attn._quant_per_token(k.transpose(0, 2, 1, 3))
-        vq, vsc = attn._quant_per_token(v.transpose(0, 2, 1, 3))
+        kq, ksc = attn.quant_per_token(k.transpose(0, 2, 1, 3))
+        vq, vsc = attn.quant_per_token(v.transpose(0, 2, 1, 3))
         cache = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
     return y, cache
 
@@ -302,7 +381,7 @@ def _deployed_mla_full(p, cfg, x, positions, backend="jnp",
     y = dq(o.reshape(B, S, H * vd), p["wo"])
     cache = None
     if build_cache:
-        qc, qs = attn._quant_per_token(c_kv)
+        qc, qs = attn.quant_per_token(c_kv)
         cache = {"ckv": qc, "ckv_scale": qs,
                  "krope": k_rope_r[:, :, 0].astype(jnp.bfloat16)}
     return y, cache
@@ -335,12 +414,11 @@ def _deployed_moe(p, cfg, x, backend="jnp"):
     src = jnp.repeat(jnp.arange(T), k)
     buf = jnp.zeros((E * capacity, d), cd).at[dest].add(
         jnp.where(keep[:, None], xt[src].astype(cd), 0)).reshape(E, capacity, d)
-    wg = dq_expert_weights(p["we_gate"], cd)
-    wu = dq_expert_weights(p["we_up"], cd)
-    wd = dq_expert_weights(p["we_down"], cd)
-    h = L.swiglu(jnp.einsum("ecd,efd->ecf", buf, wg),
-                 jnp.einsum("ecd,efd->ecf", buf, wu))
-    out_buf = jnp.einsum("ecf,edf->ecd", h, wd).reshape(E * capacity, d)
+    # packed grouped expert GEMMs: the expert-stacked QTensors contract the
+    # (E, C, d) buffer per expert — ONE expert-batched fused launch each
+    # under backend="pallas"; no (E, c_out, c_in) dense stack materializes
+    h = L.swiglu(dq(buf, p["we_gate"]), dq(buf, p["we_up"]))
+    out_buf = dq(h, p["we_down"]).reshape(E * capacity, d)
     gathered = jnp.where(keep[:, None], out_buf[dest], 0)
     out = jnp.zeros((T, d), cd).at[src].add(
         gathered * gates.reshape(-1, 1).astype(cd))
@@ -519,7 +597,13 @@ def init_caches(cfg, batch: int, max_len: int):
     if cfg.family == "audio":
         self_c = attn.init_gqa_cache(cfg, batch, max_len)
         cross_c = attn.init_gqa_cache(cfg, batch, cfg.encoder_seq)
-        # cross cache is "pre-filled" by the encoder pass at prefill time
+        # Zero-scale decode-only contract: this cross cache ships all-zero
+        # int8 values AND all-zero per-token scales, so the dequantized
+        # encoder KV is exactly 0 and cross-attention softmaxes to uniform
+        # weights over encoder positions — a shape stand-in for decode-only
+        # dry-runs, never a real serving state.  Real generation embeds the
+        # prefill's encoder-built cross cache over these zeros
+        # (api.engine.ServingSession._embed_caches).
         return jax.tree_util.tree_map(
             lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype),
             {"self": self_c, "cross": cross_c})
@@ -556,9 +640,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             if cfg.use_mla:
-                a, c2 = attn.mla_decode(
-                    p["attn"], cfg, hn, c, pos, dq,
-                    lambda name: dense_view(p["attn"][name], cd))
+                a, c2 = attn.mla_decode(p["attn"], cfg, hn, c, pos, dq)
             else:
                 a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq)
             h = h + a.astype(h.dtype)

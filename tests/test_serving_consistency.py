@@ -92,6 +92,60 @@ def test_moe_serving_routes_tokens():
     assert not np.allclose(np.asarray(l1), np.asarray(l2))
 
 
+GUARD_ARCHS = [
+    "qwen1.5-4b",          # dense
+    "deepseek-v3-671b",    # moe + mla
+    "mamba2-780m",         # ssm
+    "zamba2-1.2b",         # hybrid
+    "whisper-small",       # audio (enc-dec + cross-attention)
+    "phi-3-vision-4.2b",   # vlm (prefix embeds)
+]
+
+
+def _forbid_dense(monkeypatch):
+    from repro.api import QTensor
+
+    def _boom(self, *a, **k):
+        raise AssertionError(
+            "deployed serving path materialized a dense weight")
+    for name in ("dense", "dequantize", "dequantize_canonical",
+                 "_dequantize_groups"):
+        monkeypatch.setattr(QTensor, name, _boom)
+
+
+@pytest.mark.parametrize("arch", GUARD_ARCHS)
+def test_no_dense_weight_any_serving_family(arch, monkeypatch):
+    """PR 2's conv guard extended to every LM serving family: with
+    ``QTensor.dequantize`` (and friends) forbidden, prefill AND decode must
+    still run — no deployed serving path materializes a full dense weight.
+    MoE experts (expert-batched packed GEMMs) and MLA decode (packed latent
+    expansion, no wkv_b absorption view) are the PR 4 closures."""
+    _forbid_dense(monkeypatch)
+    cfg = get_config(arch).reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    b = _inputs(cfg, 2, 8)
+    lg, _ = serving.prefill(dp, cfg, b)
+    assert bool(jnp.all(jnp.isfinite(lg[..., :cfg.vocab_size])))
+    caches = serving.init_caches(cfg, 2, 16)
+    lg2, _ = serving.decode_step(dp, cfg, jnp.zeros((2, 1), jnp.int32),
+                                 caches, jnp.asarray(4, jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(lg2[..., :cfg.vocab_size])))
+
+
+def test_no_dense_weight_moe_mla_decode_pallas(monkeypatch):
+    """Same guard through the fused Pallas backend on the MoE + MLA family:
+    decode runs entirely on packed kernels (expert-batched fused launches
+    for the routed experts) with dequantization forbidden."""
+    _forbid_dense(monkeypatch)
+    cfg = get_config("deepseek-v3-671b").reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    caches = serving.init_caches(cfg, 1, 8)
+    lg, _ = serving.decode_step(dp, cfg, jnp.zeros((1, 1), jnp.int32),
+                                caches, jnp.asarray(2, jnp.int32),
+                                backend="pallas")
+    assert bool(jnp.all(jnp.isfinite(lg[..., :cfg.vocab_size])))
+
+
 def test_int8_kv_cache_quantization_bounded_error():
     from repro.models import layers as L
     kv = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8, 16))

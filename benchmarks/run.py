@@ -183,6 +183,107 @@ def bench_moe_decode(smoke: bool = False) -> list[str]:
     return rows
 
 
+def bench_continuous_batching(smoke: bool = False) -> list[str]:
+    """Continuous batching vs lockstep on a staggered-arrival trace.
+
+    The trace has ragged output lengths and staggered arrivals — the
+    workload the lockstep ``ServingSession`` serves worst (every wave
+    decodes to its longest request while finished rows ride along dead).
+    ``ServingEngine`` reclaims finished slots and refills them from the
+    admission queue without re-jitting, so the same trace takes fewer
+    fixed-width launches.  ``tok_per_launch`` (useful tokens per device
+    launch, prefills included) is the deterministic headline; wall-clock
+    tok/s is reported but the smoke gate — like the tinyml/moe_decode
+    sections — asserts only on launch/compile counters, never on
+    shared-runner timing.  ``recompiles`` counts jit cache growth while
+    serving a second trace after warmup: the slot pool must hold it at 0.
+    """
+    import warnings
+
+    from repro.api.engine import ServingSession
+    from repro.api.scheduler import Request, ServingEngine
+    from repro.config import get_config
+    from repro.models import serving
+    rows = ["continuous_batching:mode,prefills,decode_steps,useful_tok,"
+            "tok_per_launch,tok_per_s,occupancy,recompiles"]
+    cfg = get_config("qwen1.5-4b").reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    B, P, G = 4, 8, 20
+    max_len = P + G
+    rng = np.random.default_rng(0)
+    mts = [18, 3, 4, 5, 16, 3, 4, 6, 12, 5]
+    arrivals = [0, 0, 0, 0, 1, 3, 5, 7, 9, 11]
+
+    def trace():
+        return [Request(rng.integers(0, cfg.vocab_size, (P,)).astype(np.int32),
+                        max_tokens=m) for m in mts]
+
+    def engine_run():
+        eng = ServingEngine(cfg, dp, backend="jnp", max_slots=B,
+                            max_len=max_len, prefill_len=P)
+        t0 = time.perf_counter()
+        eng.run(trace(), arrivals)
+        return eng, time.perf_counter() - t0
+
+    eng, _ = engine_run()                    # warmup: compiles both jits
+    warm = eng.compile_counts()
+    eng, dt_e = engine_run()                 # steady state: same shapes only
+    recompiles = sum(eng.compile_counts().values()) - sum(warm.values())
+    st = eng.stats
+    launches_e = st["prefill_launches"] + st["decode_launches"]
+    occ = st["occupancy_sum"] / max(st["decode_launches"], 1)
+    rows.append(
+        f"continuous_batching:continuous,{st['prefill_launches']},"
+        f"{st['decode_launches']},{st['useful_tokens']},"
+        f"{st['useful_tokens'] / launches_e:.2f},"
+        f"{st['useful_tokens'] / dt_e:.1f},{occ:.2f},{recompiles}")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess = ServingSession(cfg, dp, backend="jnp")
+
+    def lockstep_run():
+        useful = decode_steps = prefills = slot_steps = 0
+        t0 = time.perf_counter()
+        reqs = trace()
+        for w0 in range(0, len(reqs), B):
+            wave = reqs[w0:w0 + B]
+            rows_np = np.zeros((B, P), np.int32)
+            for i, r in enumerate(wave):
+                rows_np[i, :P] = r.tokens
+            gen = max(r.max_tokens for r in wave) - 1
+            toks, _ = sess.generate({"tokens": jnp.asarray(rows_np)},
+                                    gen=gen, max_len=max_len)
+            jax.block_until_ready(toks)
+            useful += sum(r.max_tokens for r in wave)
+            prefills += 1
+            decode_steps += gen
+            slot_steps += gen * B
+        return useful, prefills, decode_steps, slot_steps, \
+            time.perf_counter() - t0
+
+    lockstep_run()                           # warmup
+    useful, prefills, decode_steps, slot_steps, dt_l = lockstep_run()
+    launches_l = prefills + decode_steps
+    occ_l = sum(m - 1 for m in mts) / max(slot_steps, 1)
+    rows.append(
+        f"continuous_batching:lockstep,{prefills},{decode_steps},{useful},"
+        f"{useful / launches_l:.2f},{useful / dt_l:.1f},{occ_l:.2f},-")
+
+    if smoke:
+        # deterministic gates: the slot pool must do strictly more useful
+        # work per launch than the wave barrier, with zero recompiles
+        if not st["useful_tokens"] / launches_e > useful / launches_l:
+            raise SystemExit(
+                "continuous batching did not beat lockstep tokens/launch: "
+                f"{st['useful_tokens']}/{launches_e} vs "
+                f"{useful}/{launches_l}")
+        if recompiles != 0:
+            raise SystemExit(
+                f"continuous engine recompiled after warmup: {recompiles}")
+    return rows
+
+
 def bench_serving(smoke: bool = False) -> list[str]:
     from repro.config import get_config
     from repro.models import serving
@@ -228,6 +329,7 @@ SECTIONS = {
     "kernels": bench_kernels,
     "tinyml": bench_tinyml,
     "moe_decode": bench_moe_decode,
+    "continuous_batching": bench_continuous_batching,
     "serving": bench_serving,
     "roofline": bench_roofline,
     "pareto": bench_pareto,
@@ -235,10 +337,13 @@ SECTIONS = {
 
 
 # fast, allocation-light; tinyml runs its dae-ad-only smoke variant so CI
-# exercises (and asserts on) the fused single-launch serving path, and
+# exercises (and asserts on) the fused single-launch serving path,
 # moe_decode asserts the expert-batched fused decode really reduces
-# launches and moves sub-byte (not dense) weight bytes
-SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode")
+# launches and moves sub-byte (not dense) weight bytes, and
+# continuous_batching asserts the slot-pooled engine beats the lockstep
+# wave barrier on useful tokens per launch with zero post-warmup recompiles
+SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode",
+                  "continuous_batching")
 
 
 def main() -> None:

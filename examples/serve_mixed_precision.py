@@ -11,10 +11,9 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.api.engine import ServingSession
+from repro.api import Request, ServingEngine
 from repro.config import DeploySpec, get_config
 from repro.models import serving
 
@@ -35,16 +34,26 @@ print(f"deployed weights: mixed {mb_mixed / 1e6:.2f} MB vs "
       f"all-8b {mb_8 / 1e6:.2f} MB -> {100 * (1 - mb_mixed / mb_8):.0f}% "
       f"smaller (paper: up to 63% vs layer-wise)")
 
-# batched serving ------------------------------------------------------------
-B, S, GEN = 8, 48, 24
+# request-level serving ------------------------------------------------------
+# ragged prompts and output budgets arriving over time, multiplexed onto a
+# fixed-width slot pool (continuous batching; docs/serving.md)
+SLOTS, S, GEN = 4, 48, 24
 rng = np.random.default_rng(0)
-batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
-                               jnp.int32)}
-sess = ServingSession(cfg, dp_mixed, backend="jnp")
+reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                    (int(rng.integers(S // 2, S + 1)),)
+                                    ).astype(np.int32),
+                max_tokens=int(rng.integers(GEN // 3, GEN + 1)))
+        for _ in range(8)]
+arrivals = sorted(int(a) for a in rng.integers(0, 12, len(reqs)))
+eng = ServingEngine(cfg, dp_mixed, backend="jnp", max_slots=SLOTS,
+                    max_len=S + GEN, prefill_len=S)
 t0 = time.time()
-gen_ids, _ = sess.generate(batch, gen=GEN, max_len=S + GEN)
-jax.block_until_ready(gen_ids)
+outs = eng.run(reqs, arrivals)
 dt = time.time() - t0
-print(f"decoded {GEN} steps x {B} requests in {dt:.2f}s "
-      f"({GEN * B / dt:.0f} tok/s, incl. prefill + compile)")
-print("generated ids (req 0):", np.asarray(gen_ids)[0][:12])
+st = eng.stats
+occ = st["occupancy_sum"] / max(st["decode_launches"], 1)
+print(f"served {len(outs)} requests / {st['useful_tokens']} tokens in "
+      f"{dt:.2f}s ({st['useful_tokens'] / dt:.0f} tok/s incl. compile; "
+      f"{st['prefill_launches']} prefills + {st['decode_launches']} decode "
+      f"launches, slot occupancy {occ:.2f})")
+print("generated ids (req 0):", outs[0].tokens[:12])

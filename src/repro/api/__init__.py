@@ -10,13 +10,21 @@ One import gives every call surface the paper's method passes through:
 * ``qlinear`` / ``qconv2d`` — the single quantization-aware layer entry
   points (re-exported from models/layers.py), dispatching on the policy and
   on whether the weight leaf is a float array or a QTensor;
-* :class:`Engine` — the search -> finetune -> deploy -> serve facade.
+* :class:`Engine` — the search -> finetune -> deploy -> serve facade;
+* :class:`ServingEngine` / :class:`Request` — the request-level serving
+  surface (continuous batching over a slot-pooled KV cache; replaces the
+  deprecated lockstep :class:`~repro.api.engine.ServingSession`);
+* :class:`SamplingParams` / :func:`sample` — greedy / temperature / top-k
+  token sampling shared by both serving surfaces.
 
-See docs/api_migration.md for the old-API -> new-API mapping.
+See docs/api_migration.md for the old-API -> new-API mapping and
+docs/serving.md for the request/slot/step lifecycle.
 """
 from repro.api.engine import Engine
 from repro.api.policy import Phase, PrecisionPolicy, as_policy
 from repro.api.qtensor import QTensor
+from repro.api.sampling import GREEDY, SamplingParams, sample
+from repro.api.scheduler import Request, RequestOutput, ServingEngine
 
 
 def __getattr__(name):
@@ -28,5 +36,6 @@ def __getattr__(name):
     raise AttributeError(name)
 
 
-__all__ = ["Engine", "Phase", "PrecisionPolicy", "QTensor", "as_policy",
-           "qlinear", "qconv2d"]
+__all__ = ["Engine", "GREEDY", "Phase", "PrecisionPolicy", "QTensor",
+           "Request", "RequestOutput", "SamplingParams", "ServingEngine",
+           "as_policy", "qconv2d", "qlinear", "sample"]

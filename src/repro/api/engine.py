@@ -188,11 +188,56 @@ class Engine:
         return self.driver.result()
 
 
-class ServingSession:
-    """Batched prefill + decode over a deployed LM (models/serving.py).
+# ---------------------------------------------------------------------------
+# Module-level jitted serving executables, keyed on (cfg id, backend): the
+# prefill/decode wrappers used to be built per ServingSession instance, so
+# constructing a session twice recompiled both.  The cache holds a strong
+# reference to cfg so an id() is never reused while its entry is alive.
+# ---------------------------------------------------------------------------
 
-    Owns the jitted prefill/decode executables (decode donates its caches)
-    so launchers stop hand-wiring them:
+_SERVING_JITS: dict = {}
+
+
+def serving_jits(cfg, backend: str) -> dict:
+    """Shared jitted ``prefill(dp, batch[, lens])`` / ``decode(dp, tokens,
+    caches, pos[, live])`` executables for one (config, backend) pair.
+
+    Decode donates its caches.  Both ``ServingSession`` and the
+    request-level ``ServingEngine`` wrappers (api/scheduler.py) resolve
+    through this cache, so every serving surface over the same deployed
+    config reuses one set of compiled executables.
+    """
+    key = (id(cfg), backend)
+    ent = _SERVING_JITS.get(key)
+    if ent is None:
+        from repro.models import serving
+        ent = {
+            "cfg": cfg,
+            "prefill": jax.jit(
+                lambda dp, b, lens=None: serving.prefill(dp, cfg, b, backend,
+                                                         lens=lens)),
+            "decode": jax.jit(
+                lambda dp, t, c, pos, live=None: serving.decode_step(
+                    dp, cfg, t, c, pos, backend, live=live),
+                donate_argnums=(2,)),
+        }
+        _SERVING_JITS[key] = ent
+    return ent
+
+
+class ServingSession:
+    """Batched **lockstep** prefill + decode over a deployed LM.
+
+    .. deprecated:: PR 5
+        ``ServingSession`` is the degenerate all-slots-synchronized serving
+        surface: one fixed batch prefills together, decodes together (one
+        shared position for every row) and finishes together, so ragged
+        real traffic idles behind the shortest-job barrier.  Use the
+        request-level :class:`repro.api.ServingEngine` (continuous batching
+        over a slot-pooled KV cache) instead; this class is kept for one
+        release as the lockstep baseline and parity oracle
+        (tests/test_continuous_batching.py).  See docs/serving.md and
+        docs/api_migration.md.
 
         sess = ServingSession(cfg, dparams, backend="jnp")
         tokens = sess.generate(batch, gen=16, max_len=48)
@@ -207,53 +252,61 @@ class ServingSession:
     """
 
     def __init__(self, cfg, dparams, backend: str = "jnp"):
+        import warnings
+
         from repro.models import serving
+        warnings.warn(
+            "ServingSession is the deprecated lockstep serving surface; "
+            "use repro.api.ServingEngine (request-level continuous "
+            "batching) — see docs/api_migration.md",
+            DeprecationWarning, stacklevel=2)
         self.cfg, self.dparams, self.backend = cfg, dparams, backend
         self._serving = serving
-        self.prefill = jax.jit(
-            lambda dp, b: serving.prefill(dp, cfg, b, backend))
-        self.decode = jax.jit(
-            lambda dp, t, c, pos: serving.decode_step(dp, cfg, t, c, pos,
-                                                      backend),
-            donate_argnums=(2,))
+        fns = serving_jits(cfg, backend)
+        self.prefill = fns["prefill"]
+        self.decode = fns["decode"]
 
     def init_caches(self, batch: int, max_len: int):
         return self._serving.init_caches(self.cfg, batch, max_len)
 
+    # kept as a (static)method alias for pre-PR5 callers; the rule lives in
+    # models/serving.py now so the scheduler shares it.
     @staticmethod
     def _embed_caches(prefill_caches, ring):
-        """Right-pad the S-deep prefill caches into the max_len ring.
+        from repro.models import serving
+        return serving.embed_caches(prefill_caches, ring)
 
-        Each leaf differs from its ring counterpart in at most the sequence
-        axis; zero-padding IS the empty-slot convention (decode masks by
-        position), so generation really attends to the prompt."""
-        def one(pc, full):
-            if pc.shape == full.shape:
-                return pc.astype(full.dtype)
-            diff = [i for i, (a, b) in enumerate(zip(pc.shape, full.shape))
-                    if a != b]
-            assert len(diff) == 1, (pc.shape, full.shape)
-            widths = [(0, 0)] * pc.ndim
-            widths[diff[0]] = (0, full.shape[diff[0]] - pc.shape[diff[0]])
-            return jnp.pad(pc, widths).astype(full.dtype)
-        return jax.tree_util.tree_map(one, prefill_caches, ring)
-
-    def generate(self, batch: dict, gen: int, max_len: Optional[int] = None):
-        """Greedy decode ``gen`` tokens after a full prefill.
+    def generate(self, batch: dict, gen: int, max_len: Optional[int] = None,
+                 sampling=None, key=None):
+        """Lockstep decode of ``gen`` tokens after a full prefill.
 
         Returns ``(tokens (B, gen+1), prefill_logits)``.  The prefill's
         S-deep caches are padded into a ``max_len`` ring so every decode
-        step attends to the full prompt history.
+        step attends to the full prompt history.  ``sampling`` is an
+        optional :class:`repro.api.SamplingParams` (greedy by default;
+        stochastic kinds need ``key``); every row shares one position
+        vector entry per step — the degenerate synchronized schedule.
         """
+        from repro.api import sampling as smp
+        sampling = sampling or smp.GREEDY
+        if sampling.kind != "greedy" and key is None:
+            key = jax.random.PRNGKey(0)
         B, S = batch["tokens"].shape
         max_len = max_len or (S + gen)
         prefill_logits, pf_caches = self.prefill(self.dparams, batch)
-        caches = self._embed_caches(pf_caches, self.init_caches(B, max_len))
-        tokens = jnp.argmax(prefill_logits[:, -1:], axis=-1).astype(jnp.int32)
+        caches = self._serving.embed_caches(pf_caches,
+                                            self.init_caches(B, max_len))
+        if key is not None:
+            key, k0 = jax.random.split(key)
+        tokens = smp.sample(prefill_logits[:, -1:], sampling,
+                            None if key is None else k0)
         out = [tokens]
         for i in range(gen):
-            logits, caches = self.decode(self.dparams, tokens, caches,
-                                         jnp.asarray(S + i, jnp.int32))
-            tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            pos = jnp.full((B,), S + i, jnp.int32)
+            logits, caches = self.decode(self.dparams, tokens, caches, pos)
+            if key is not None:
+                key, ki = jax.random.split(key)
+            tokens = smp.sample(logits[:, -1:], sampling,
+                                None if key is None else ki)
             out.append(tokens)
         return jnp.concatenate(out, axis=1), prefill_logits

@@ -1,0 +1,64 @@
+"""Token sampling for the serving surfaces.
+
+One helper shared by the request-level :class:`~repro.api.scheduler.
+ServingEngine` and the lockstep :class:`~repro.api.engine.ServingSession`
+(which used to hard-code ``argmax`` inline, twice).  The sampling *kind*
+is static — jitted serving steps specialize per :class:`SamplingParams`
+exactly like they specialize per backend — so greedy decoding stays a
+pure ``argmax`` with no RNG plumbed through the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("greedy", "temperature", "top_k")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Static sampling configuration (hashable — usable as a jit-cache key).
+
+    * ``greedy`` — deterministic ``argmax`` (the default; no key needed);
+    * ``temperature`` — softmax sampling at ``temperature``;
+    * ``top_k`` — restrict to the ``top_k`` highest logits, then
+      temperature-sample within them (``top_k=1`` degenerates to greedy
+      for every key — pinned by tests/test_continuous_batching.py).
+    """
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown sampling kind {self.kind!r}; "
+                             f"one of {KINDS}")
+        if self.kind == "top_k" and self.top_k < 1:
+            raise ValueError("top_k sampling needs top_k >= 1")
+        if self.temperature <= 0:
+            raise ValueError("temperature must be > 0")
+
+
+GREEDY = SamplingParams()
+
+
+def sample(logits: jnp.ndarray, params: SamplingParams = GREEDY,
+           key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Sample token ids from ``logits (..., V)`` -> int32 ``(...)``.
+
+    Leading axes are preserved (serving passes ``(B, 1, V)`` and gets the
+    ``(B, 1)`` next-token batch back).  ``key`` is required for the
+    stochastic kinds and ignored by ``greedy``.
+    """
+    if params.kind == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError(f"sampling kind {params.kind!r} needs a PRNG key")
+    lg = logits.astype(jnp.float32) / params.temperature
+    if params.kind == "top_k":
+        kth = jax.lax.top_k(lg, params.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,347 @@
+"""Request-level serving: continuous batching over a slot-pooled KV cache.
+
+The pre-PR5 public serving surface was ``ServingSession.generate`` — a
+lockstep loop where one fixed batch prefills together, decodes together and
+finishes together, so real traffic (requests arriving at different times
+with different prompt/output lengths) leaves the fused deployed kernels
+idle behind the shortest-job barrier.  :class:`ServingEngine` redesigns the
+surface around **requests**:
+
+* a persistent ``(max_slots, max_len)`` cache pool is allocated once; each
+  slot carries its own position, length budget and live/free flag;
+* ``submit`` queues a :class:`Request`; admission pads queued prompts into
+  ONE fixed ``(max_slots, prefill_len)`` prefill launch (per-row true
+  lengths via ``serving.prefill(..., lens=...)``) and where-merges only the
+  admitted slots' rows into the pool — in-flight slots are untouched, so
+  prefill of new arrivals interleaves with decode of in-flight ones;
+* every decode tick is ONE fixed-width ``decode_step`` launch with a
+  **per-slot position vector** and a live mask (freed slots drop their ring
+  writes / SSM state updates — models/attention.py, models/ssm.py);
+* a finished slot (EOS or ``max_tokens``) is reclaimed and refilled from
+  the admission queue **without re-jitting**: every launch has the same
+  static shapes, so after one warmup pass the jit caches never grow
+  (``compile_counts`` exposes the counters the tests and the
+  ``continuous_batching`` benchmark section assert on).
+
+Numerical contract: with all slots admitted at once, full-length prompts
+and every slot live, each launch is operand-for-operand the lockstep
+session's launch — ``run`` is then bit-identical to
+``ServingSession.generate`` (tests/test_continuous_batching.py).  On
+staggered traces each slot's tokens depend only on its own request for the
+row-independent families (dense / ssm / hybrid attention); MoE couples
+rows only through expert-capacity overflow drops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import sampling as smp
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``tokens``: (L,) int prompt ids; ``max_tokens``: total generated tokens
+    INCLUDING the one sampled from the prefill logits (so ``max_tokens=G``
+    corresponds to ``ServingSession.generate(gen=G-1)``); ``eos_id``: stop
+    early when this id is sampled (still counted in the output);
+    ``extras``: per-request prefill arrays keyed like the batch dict
+    (``frames`` for audio, ``prefix_embeds`` for vlm) — rows of slots not
+    being admitted are zero-filled.
+    """
+    tokens: np.ndarray
+    max_tokens: int = 16
+    eos_id: Optional[int] = None
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    rid: int
+    tokens: np.ndarray              # (n_generated,) int32, eos included
+    prompt_len: int
+    finish_reason: str              # "length" | "eos"
+
+
+# Module-level jitted admission/step executables, keyed on (cfg id, backend,
+# sampling): the same hoisting rule as engine.serving_jits — two engines
+# over one deployed config share executables, and re-constructing an engine
+# never recompiles.  cfg is strongly referenced so its id() stays unique.
+_ENGINE_JITS: dict = {}
+
+
+def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams) -> dict:
+    key = (id(cfg), backend, sampling)
+    ent = _ENGINE_JITS.get(key)
+    if ent is None:
+        from repro.models import serving
+
+        def _admit(dp, batch, lens, admit, tok_old, caches, key):
+            """One admission: fixed-width prefill + slot-masked merge.
+
+            ``admit`` (B,) bool selects the slots being (re)filled; their
+            prefill caches are right-padded into the pool ring and merged
+            row-wise, everything else keeps the in-flight state.  Returns
+            the next-token batch (admitted rows freshly sampled from their
+            own last-prompt-token logits, others untouched).
+            """
+            logits, pf = serving.prefill(dp, cfg, batch, backend, lens=lens)
+            ring = jax.tree_util.tree_map(jnp.zeros_like, caches)
+            emb = serving.embed_caches(pf, ring)
+
+            def merge(new, old):   # stacked cache leaves: batch axis is 1
+                m = admit.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+            caches = jax.tree_util.tree_map(merge, emb, caches)
+            tok = smp.sample(logits, sampling, key)          # (B, 1)
+            return jnp.where(admit[:, None], tok, tok_old), caches
+
+        def _step(dp, tokens, caches, pos, live, key):
+            """One decode tick: per-slot positions, live-masked cache."""
+            logits, caches = serving.decode_step(dp, cfg, tokens, caches,
+                                                 pos, backend, live=live)
+            return smp.sample(logits, sampling, key), caches
+
+        ent = {"cfg": cfg,
+               "admit": jax.jit(_admit, donate_argnums=(5,)),
+               "step": jax.jit(_step, donate_argnums=(2,))}
+        _ENGINE_JITS[key] = ent
+    return ent
+
+
+class _Slot:
+    __slots__ = ("rid", "prompt_len", "max_tokens", "eos_id", "generated")
+
+    def __init__(self, rid, prompt_len, max_tokens, eos_id):
+        self.rid, self.prompt_len = rid, prompt_len
+        self.max_tokens, self.eos_id = max_tokens, eos_id
+        self.generated: List[int] = []
+
+
+class ServingEngine:
+    """Continuous-batching serving engine over a deployed LM.
+
+        eng = ServingEngine(cfg, dparams, backend="jnp",
+                            max_slots=4, max_len=64, prefill_len=16)
+        rid = eng.submit(Request(prompt_ids, max_tokens=20))
+        while eng.step()["kind"] != "idle": ...
+        outs = eng.collect()                 # finished RequestOutputs
+
+    or, for a whole trace, ``eng.run(requests, arrivals)``.  One engine
+    ``step()`` is exactly one device launch (an admission prefill when
+    slots are free and requests are queued, else a decode tick over the
+    live slots), which is what the stats count.
+    """
+
+    def __init__(self, cfg, dparams, backend: str = "jnp",
+                 max_slots: int = 4, max_len: int = 64,
+                 prefill_len: Optional[int] = None,
+                 sampling: smp.SamplingParams = smp.GREEDY, seed: int = 0):
+        from repro.models import serving
+        self.cfg, self.dparams, self.backend = cfg, dparams, backend
+        self.max_slots, self.max_len = max_slots, max_len
+        self.prefill_len = prefill_len or max_len // 2
+        if self.prefill_len > max_len:
+            raise ValueError("prefill_len exceeds the slot ring max_len")
+        self.sampling = sampling
+        fns = _engine_jits(cfg, backend, sampling)
+        self._admit_fn, self._step_fn = fns["admit"], fns["step"]
+        self.caches = serving.init_caches(cfg, max_slots, max_len)
+        self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self._pos = np.zeros(max_slots, np.int64)
+        self._live = np.zeros(max_slots, bool)
+        self._slots: List[Optional[_Slot]] = [None] * max_slots
+        self.queue: List[int] = []
+        self._pending: Dict[int, Request] = {}
+        self._finished: List[RequestOutput] = []
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = dict(prefill_launches=0, decode_launches=0,
+                          useful_tokens=0, occupancy_sum=0.0, idle_ticks=0)
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Queue a request for admission; returns its request id."""
+        L = int(np.asarray(request.tokens).shape[0])
+        if not 1 <= L <= self.prefill_len:
+            raise ValueError(f"prompt length {L} not in [1, "
+                             f"prefill_len={self.prefill_len}]")
+        if request.max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        if L + request.max_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"prompt_len {L} + max_tokens {request.max_tokens} "
+                f"overflows the slot ring (max_len={self.max_len})")
+        if self.cfg.family == "vlm" and self.cfg.n_prefix_tokens:
+            # the first n_prefix_tokens positions ARE the image context
+            # (prefill swaps them for prefix_embeds); a shorter prompt would
+            # gather its logits inside the prefix region and let decode
+            # ring-writes overwrite it, and a missing embed array would be
+            # zero-filled — a silently different model input
+            if L <= self.cfg.n_prefix_tokens:
+                raise ValueError(
+                    f"vlm prompt length {L} must exceed n_prefix_tokens="
+                    f"{self.cfg.n_prefix_tokens} (the prefix-embed region)")
+            if "prefix_embeds" not in request.extras:
+                raise ValueError(
+                    "vlm requests need extras['prefix_embeds'] — the "
+                    "admission batch would otherwise swap the prefix "
+                    "region for zeros")
+        if self.cfg.family == "audio" and "frames" not in request.extras:
+            raise ValueError(
+                "audio requests need extras['frames'] (encoder input) — "
+                "an empty slot row would cross-attend to an all-zero "
+                "encoder and decode garbage")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending[rid] = request
+        self.queue.append(rid)
+        return rid
+
+    def collect(self) -> List[RequestOutput]:
+        """Drain and return the finished request outputs."""
+        out, self._finished = self._finished, []
+        return out
+
+    @property
+    def live_slots(self) -> int:
+        return int(self._live.sum())
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self._live.any())
+
+    def compile_counts(self) -> dict:
+        """Jit-cache sizes of the two engine executables (recompile guard:
+        after a warmup trace these must never grow — same-shaped launches
+        forever, the whole point of the fixed-width slot pool)."""
+        return {"admit": self._admit_fn._cache_size(),
+                "step": self._step_fn._cache_size()}
+
+    # -- scheduler ticks -----------------------------------------------------
+    def step(self) -> dict:
+        """One scheduler tick = at most one device launch.
+
+        Admission has priority: if any slot is free and requests are
+        queued, refill (one fixed-width prefill launch, first token
+        sampled).  Otherwise run one decode tick over the live slots.
+        Returns a small stats dict (``kind`` in {"prefill", "decode",
+        "idle"}).
+        """
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        if self.queue and free:
+            return self._admit_tick(free)
+        if self._live.any():
+            return self._decode_tick()
+        self.stats["idle_ticks"] += 1
+        return {"kind": "idle"}
+
+    def _next_key(self):
+        if self.sampling.kind == "greedy":
+            return self._key                     # unused by argmax
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _admit_tick(self, free: List[int]) -> dict:
+        B, P = self.max_slots, self.prefill_len
+        take = self.queue[:len(free)]
+        del self.queue[:len(take)]
+        rows = np.zeros((B, P), np.int32)
+        lens = np.ones(B, np.int32)
+        admit = np.zeros(B, bool)
+        extras: Dict[str, np.ndarray] = {}
+        if self.cfg.family == "audio":
+            extras["frames"] = np.zeros(
+                (B, self.cfg.encoder_seq, self.cfg.d_model), np.float32)
+        if self.cfg.family == "vlm" and self.cfg.n_prefix_tokens:
+            extras["prefix_embeds"] = np.zeros(
+                (B, self.cfg.n_prefix_tokens, self.cfg.d_model), np.float32)
+        for slot, rid in zip(free, take):
+            req = self._pending.pop(rid)
+            toks = np.asarray(req.tokens, np.int32)
+            L = toks.shape[0]
+            rows[slot, :L] = toks
+            lens[slot] = L
+            admit[slot] = True
+            for k, v in req.extras.items():
+                extras[k][slot] = v
+            self._slots[slot] = _Slot(rid, L, req.max_tokens, req.eos_id)
+            self._pos[slot] = L
+            self._live[slot] = True
+        batch = {"tokens": jnp.asarray(rows)}
+        batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        self.tokens, self.caches = self._admit_fn(
+            self.dparams, batch, jnp.asarray(lens), jnp.asarray(admit),
+            self.tokens, self.caches, self._next_key())
+        self.stats["prefill_launches"] += 1
+        self.stats["useful_tokens"] += len(take)
+        tok_np = np.asarray(self.tokens[:, 0])
+        for slot, rid in zip(free, take):
+            self._record(slot, int(tok_np[slot]))
+        return {"kind": "prefill", "admitted": list(take)}
+
+    def _decode_tick(self) -> dict:
+        live = self._live.copy()
+        self.tokens, self.caches = self._step_fn(
+            self.dparams, self.tokens, self.caches,
+            jnp.asarray(self._pos, jnp.int32), jnp.asarray(live),
+            self._next_key())
+        self.stats["decode_launches"] += 1
+        n_live = int(live.sum())
+        self.stats["useful_tokens"] += n_live
+        self.stats["occupancy_sum"] += n_live / self.max_slots
+        self._pos[live] += 1
+        tok_np = np.asarray(self.tokens[:, 0])
+        for slot in np.nonzero(live)[0]:
+            self._record(int(slot), int(tok_np[slot]))
+        return {"kind": "decode", "live": n_live}
+
+    def _record(self, slot: int, token: int) -> None:
+        st = self._slots[slot]
+        st.generated.append(token)
+        done_len = len(st.generated) >= st.max_tokens
+        done_eos = st.eos_id is not None and token == st.eos_id
+        if done_len or done_eos:
+            self._finished.append(RequestOutput(
+                rid=st.rid, tokens=np.asarray(st.generated, np.int32),
+                prompt_len=st.prompt_len,
+                finish_reason="eos" if done_eos else "length"))
+            self._slots[slot] = None
+            self._live[slot] = False
+
+    # -- whole-trace driver --------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            arrivals: Optional[Sequence[int]] = None
+            ) -> Dict[int, RequestOutput]:
+        """Serve a trace to completion; returns outputs keyed by the
+        request's index in ``requests``.
+
+        ``arrivals``: optional per-request arrival times in scheduler
+        ticks (default: all at tick 0 — the synchronized case).  A request
+        is submitted the first tick at/after its arrival; the loop runs
+        idle ticks while waiting on future arrivals.
+        """
+        arrivals = ([0] * len(requests) if arrivals is None
+                    else [int(a) for a in arrivals])
+        if len(arrivals) != len(requests):
+            raise ValueError("arrivals and requests length mismatch")
+        order = sorted(range(len(requests)), key=lambda i: (arrivals[i], i))
+        rid_to_idx: Dict[int, int] = {}
+        outs: Dict[int, RequestOutput] = {}
+        nxt, t = 0, 0
+        while nxt < len(order) or self.has_work():
+            while nxt < len(order) and arrivals[order[nxt]] <= t:
+                i = order[nxt]
+                rid_to_idx[self.submit(requests[i])] = i
+                nxt += 1
+            self.step()
+            for out in self.collect():
+                outs[rid_to_idx[out.rid]] = out
+            t += 1
+        return outs

@@ -1,38 +1,121 @@
-"""Serving launcher: deployed mixed-precision model, batched requests,
-prefill + decode loop with int8 KV caches.
+"""Serving launcher: deployed mixed-precision model, request-level
+continuous batching over a slot-pooled KV cache (repro.api.ServingEngine).
 
 The deployed weights are the Sec. III-C output: channels reordered and
 grouped by searched bit-width, packed sub-byte, consumed as per-precision
-sub-GEMMs (kernels/quant_matmul.py on TPU; jnp fallback on CPU).
+sub-GEMMs (kernels/quant_matmul.py on TPU; jnp fallback on CPU).  The
+launcher synthesizes a staggered-arrival trace (requests arriving over
+time with ragged prompt/output lengths) and serves it through the slot
+pool: finished slots are reclaimed and refilled without re-jitting, so
+prefill of new arrivals interleaves with decode of in-flight requests.
+``--lockstep`` runs the same trace through the deprecated
+``ServingSession`` wave loop for comparison.
 
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --requests 8 --slots 4 --prompt-len 32 --gen 16
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.engine import ServingSession
+from repro.api.scheduler import Request, ServingEngine
 from repro.config import ARCH_IDS, get_config
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_test_mesh, make_production_mesh
 from repro.models import serving
 
 
+def build_trace(cfg, args, rng):
+    """Staggered-arrival synthetic trace: ragged prompts, outputs, times."""
+    reqs, arrivals = [], []
+    min_len = max(1, args.prompt_len // 2)
+    if cfg.family == "vlm" and cfg.n_prefix_tokens:
+        min_len = max(min_len, cfg.n_prefix_tokens + 1)  # past the prefix
+    for i in range(args.requests):
+        L = int(rng.integers(min_len, args.prompt_len + 1))
+        gen = int(rng.integers(max(1, args.gen // 4), args.gen + 1))
+        extras = {}
+        if cfg.family == "audio":
+            extras["frames"] = rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm" and cfg.n_prefix_tokens:
+            extras["prefix_embeds"] = rng.standard_normal(
+                (cfg.n_prefix_tokens, cfg.d_model)).astype(np.float32)
+        reqs.append(Request(
+            tokens=rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32),
+            max_tokens=gen, extras=extras))
+        arrivals.append(int(rng.integers(0, args.stagger + 1)))
+    return reqs, arrivals
+
+
+def run_continuous(cfg, dparams, reqs, arrivals, args):
+    eng = ServingEngine(cfg, dparams, backend=args.backend,
+                        max_slots=args.slots,
+                        max_len=args.prompt_len + args.gen,
+                        prefill_len=args.prompt_len)
+    t0 = time.time()
+    outs = eng.run(reqs, arrivals)
+    dt = time.time() - t0
+    st = eng.stats
+    steps = st["prefill_launches"] + st["decode_launches"]
+    occ = (st["occupancy_sum"] / st["decode_launches"]
+           if st["decode_launches"] else 0.0)
+    print(f"continuous: {len(outs)} requests, {st['useful_tokens']} tokens "
+          f"in {dt:.2f}s ({st['useful_tokens'] / dt:.1f} tok/s) — "
+          f"{st['prefill_launches']} prefills + {st['decode_launches']} "
+          f"decode steps = {steps} launches, slot occupancy {occ:.2f}, "
+          f"jit entries {eng.compile_counts()}")
+    first = outs[0]
+    print("sample token ids:", first.tokens[:16])
+    return dt, st["useful_tokens"]
+
+
+def run_lockstep(cfg, dparams, reqs, args):
+    """Wave-at-a-time baseline: pad each wave to one batch, decode to the
+    wave's longest request (the shortest-job barrier the engine removes)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess = ServingSession(cfg, dparams, backend=args.backend)
+    B, P = args.slots, args.prompt_len
+    t0, useful, steps = time.time(), 0, 0
+    for w0 in range(0, len(reqs), B):
+        wave = reqs[w0:w0 + B]
+        rows = np.zeros((B, P), np.int32)
+        for i, r in enumerate(wave):
+            rows[i, :len(r.tokens)] = r.tokens
+        gen = max(r.max_tokens for r in wave) - 1
+        toks, _ = sess.generate({"tokens": jnp.asarray(rows)}, gen=gen,
+                                max_len=P + args.gen)
+        jax.block_until_ready(toks)
+        useful += sum(r.max_tokens for r in wave)
+        steps += 1 + gen
+    dt = time.time() - t0
+    print(f"lockstep:   {len(reqs)} requests, {useful} useful tokens in "
+          f"{dt:.2f}s ({useful / dt:.1f} tok/s) over {steps} launches")
+    return dt, useful
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True, choices=list(ARCH_IDS))
     p.add_argument("--reduced", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--stagger", type=int, default=8,
+                   help="arrival window in scheduler ticks")
     p.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    p.add_argument("--lockstep", action="store_true",
+                   help="also run the deprecated ServingSession wave loop")
     p.add_argument("--production-mesh", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
@@ -48,49 +131,13 @@ def main() -> None:
     dparams = serving.init_deployed_model(cfg, key)
     dparams = jax.device_put(dparams, rules.tree_shardings(dparams))
 
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen
     rng = np.random.default_rng(args.seed)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
-    if cfg.family == "audio":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
-            jnp.float32)
-    if cfg.family == "vlm" and cfg.n_prefix_tokens:
-        batch["prefix_embeds"] = jnp.asarray(
-            rng.standard_normal((B, cfg.n_prefix_tokens, cfg.d_model)),
-            jnp.float32)
-
-    sess = ServingSession(cfg, dparams, backend=args.backend)
+    reqs, arrivals = build_trace(cfg, args, rng)
 
     with mesh:
-        t0 = time.time()
-        logits, pf_caches = sess.prefill(dparams, batch)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-        print(f"prefill: {B}x{S} tokens in {t_prefill:.2f}s "
-              f"({B * S / t_prefill:.0f} tok/s)")
-
-        # decode loop against fresh max_len caches (prefill caches are
-        # S-deep; production pads them into the ring — here we re-init for
-        # shape stability and measure steady-state decode)
-        caches = sess.init_caches(B, max_len)
-        tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [tokens]
-        t0 = time.time()
-        for i in range(args.gen):
-            logits, caches = sess.decode(dparams, tokens, caches,
-                                         jnp.asarray(S + i, jnp.int32))
-            tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            out.append(tokens)
-        tokens.block_until_ready()
-        dt = time.time() - t0
-        print(f"decode: {args.gen} steps x batch {B} in {dt:.2f}s "
-              f"({args.gen * B / dt:.1f} tok/s, "
-              f"{1e3 * dt / args.gen:.1f} ms/step)")
-        gen = jnp.concatenate(out, axis=1)
-        print("sample token ids:", np.asarray(gen[0])[:16])
+        run_continuous(cfg, dparams, reqs, arrivals, args)
+        if args.lockstep:
+            run_lockstep(cfg, dparams, reqs, args)
 
 
 if __name__ == "__main__":

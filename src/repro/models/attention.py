@@ -206,42 +206,62 @@ def quant_per_token(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return q, scale
 
 
-# Deprecated pre-PR4 private name; removal tracked in docs/api_migration.md.
-_quant_per_token = quant_per_token
+def slot_write_pos(pos: jnp.ndarray, live: Optional[jnp.ndarray],
+                   max_len: int) -> jnp.ndarray:
+    """Per-slot ring-write index: dead slots write out of bounds.
+
+    The serving cache writers scatter each row's new entry at its own
+    position; with ``mode="drop"`` an out-of-bounds index silently skips
+    the row, so a freed slot (``live=False``) leaves its pooled cache
+    untouched while the live slots in the same fixed-width batch advance.
+    """
+    pos = pos.astype(jnp.int32)
+    return pos if live is None else jnp.where(live, pos, max_len)
 
 
 def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
-               pos: jnp.ndarray, dq_linear) -> tuple[jnp.ndarray, dict]:
-    """One-token decode with int8 KV cache.
+               pos: jnp.ndarray, dq_linear,
+               live: Optional[jnp.ndarray] = None
+               ) -> tuple[jnp.ndarray, dict]:
+    """One-token decode with int8 KV cache, per-slot positions.
 
-    ``x``: (B, 1, d); ``pos``: scalar current position; ``dq_linear`` is the
-    linear application function for the deployed weight format (see
-    models/serving.py) — this function is format-agnostic.
+    ``x``: (B, 1, d); ``pos``: (B,) int32 **position vector** — row ``b``
+    writes its new KV at ring index ``pos[b]`` and attends to history
+    ``<= pos[b]``, so independently-progressed requests decode in one
+    fixed-width batch (continuous batching); ``live``: optional (B,) bool —
+    rows with ``live=False`` drop their ring write (freed slots stay
+    untouched).  ``dq_linear`` is the linear application function for the
+    deployed weight format (see models/serving.py) — this function is
+    format-agnostic.
     """
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = cfg.cdtype
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:                 # legacy scalar: all slots synchronized
+        pos = jnp.broadcast_to(pos[None], (B,))
     q = dq_linear(x, p["wq"]).reshape(B, 1, H, hd)
     k = dq_linear(x, p["wk"]).reshape(B, 1, KV, hd)
     v = dq_linear(x, p["wv"]).reshape(B, 1, KV, hd)
     if cfg.rope_partial > 0:
         cos, sin, rot = L.rope_freqs(hd, cfg.rope_theta,
-                                     pos[None], cfg.rope_partial)
+                                     pos[:, None], cfg.rope_partial)
         q = L.apply_rope(q, cos, sin, rot)
         k = L.apply_rope(k, cos, sin, rot)
-    # append new kv (int8) at pos
+    # append new kv (int8), one ring index per slot
     kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))    # (B, KV, 1, hd)
     vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
-    pos0 = pos.astype(jnp.int32)
-    cache = {
-        "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, pos0, 0)),
-        "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, pos0, 0)),
-        "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                                (0, 0, pos0, 0)),
-        "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                                (0, 0, pos0, 0)),
-    }
     S = cache["k"].shape[2]
+    bidx = jnp.arange(B)
+    wpos = slot_write_pos(pos, live, S)
+    cache = {
+        "k": cache["k"].at[bidx, :, wpos].set(kq[:, :, 0], mode="drop"),
+        "v": cache["v"].at[bidx, :, wpos].set(vq[:, :, 0], mode="drop"),
+        "k_scale": cache["k_scale"].at[bidx, :, wpos].set(ks[:, :, 0],
+                                                          mode="drop"),
+        "v_scale": cache["v_scale"].at[bidx, :, wpos].set(vs[:, :, 0],
+                                                          mode="drop"),
+    }
     rep = H // KV
     kf = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(cd)
     vf = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(cd)
@@ -251,7 +271,7 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
     vfe = jnp.repeat(vf, rep, axis=1) if rep > 1 else vf
     s = jnp.einsum("bhqd,bhkd->bhqk", qh, kfe).astype(jnp.float32)
     s = s / math.sqrt(hd)
-    valid = jnp.arange(S)[None, None, None, :] <= pos0
+    valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
     s = jnp.where(valid, s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1).astype(cd)
     o = jnp.einsum("bhqk,bhkd->bhqd", w, vfe)
@@ -318,8 +338,13 @@ def init_mla_cache(cfg, batch: int, max_len: int) -> dict:
 
 
 def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
-               dq_linear) -> tuple[jnp.ndarray, dict]:
-    """One-token MLA decode, fully packed.
+               dq_linear, live: Optional[jnp.ndarray] = None
+               ) -> tuple[jnp.ndarray, dict]:
+    """One-token MLA decode, fully packed, per-slot positions.
+
+    ``pos`` is a (B,) int32 position vector (see :func:`gqa_decode`): each
+    row writes its latent at its own ring index and attends to its own
+    history; ``live=False`` rows drop their write.
 
     The pre-PR4 path "absorbed" ``wkv_b`` per head (W_uk / W_uv) from a
     dense ``(c_out, c_in)`` view — re-materializing the full bf16 weight on
@@ -346,6 +371,9 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
     cd = cfg.cdtype
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:                 # legacy scalar: all slots synchronized
+        pos = jnp.broadcast_to(pos[None], (B,))
 
     cq = L.rmsnorm(dq_linear(x, p["wq_a"]), p["q_norm"])
     q = dq_linear(cq, p["wq_b"]).reshape(B, 1, H, nope + rope)
@@ -355,20 +383,21 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     c_kv, k_rope_new = ckv_new[..., :kvr], ckv_new[..., kvr:]
     c_kv = L.rmsnorm(c_kv, p["kv_norm"])
 
-    cos, sin, rot = L.rope_freqs(rope, cfg.rope_theta, pos[None], 1.0)
+    cos, sin, rot = L.rope_freqs(rope, cfg.rope_theta, pos[:, None], 1.0)
     q_rope = L.apply_rope(q_rope, cos, sin, rot)
     k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], cos, sin, rot)[:, :, 0]
 
     qc, qs = quant_per_token(c_kv)
-    pos0 = pos.astype(jnp.int32)
-    cache = {
-        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], qc, (0, pos0, 0)),
-        "ckv_scale": jax.lax.dynamic_update_slice(cache["ckv_scale"], qs,
-                                                  (0, pos0, 0)),
-        "krope": jax.lax.dynamic_update_slice(
-            cache["krope"], k_rope_new.astype(jnp.bfloat16), (0, pos0, 0)),
-    }
     S = cache["ckv"].shape[1]
+    bidx = jnp.arange(B)
+    wpos = slot_write_pos(pos, live, S)
+    cache = {
+        "ckv": cache["ckv"].at[bidx, wpos].set(qc[:, 0], mode="drop"),
+        "ckv_scale": cache["ckv_scale"].at[bidx, wpos].set(qs[:, 0],
+                                                           mode="drop"),
+        "krope": cache["krope"].at[bidx, wpos].set(
+            k_rope_new[:, 0].astype(jnp.bfloat16), mode="drop"),
+    }
 
     # expand latents to per-head K/V through the packed low-rank factor:
     # ckv (B, S, kvr) -> (B, S, H, nope + vd), weights streaming sub-byte
@@ -381,7 +410,7 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(cd),
                        cache["krope"].astype(cd)).astype(jnp.float32)
     s = s / math.sqrt(nope + rope)
-    valid = jnp.arange(S)[None, None, None, :] <= pos0
+    valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
     s = jnp.where(valid, s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1).astype(cd)
     o = jnp.einsum("bhqk,bkhv->bqhv", w, v.astype(cd))   # (B, 1, H, vd)

@@ -433,8 +433,18 @@ def _deployed_moe(p, cfg, x, backend="jnp"):
     return out.reshape(B, S, d)
 
 
-def _deployed_mamba_full(p, cfg, x, backend="jnp"):
-    """Deployed mamba block; returns (y, final ssm state)."""
+def _deployed_mamba_full(p, cfg, x, backend="jnp", lens=None):
+    """Deployed mamba block; returns (y, final ssm state).
+
+    ``lens``: optional (B,) per-row true prompt lengths for right-padded
+    batches.  Padded steps are made exact no-ops on the recurrence by
+    zeroing ``dt`` there (``dA = 0`` -> decay 1, ``x*dt = 0`` -> no input),
+    so the returned state is the state *at each row's own last real token*;
+    the conv ring tail is gathered per row at ``lens`` instead of the
+    static trailing slice.  With ``lens`` full (or None) both reductions
+    see identical operands, so the padded path is bit-identical to the
+    unpadded one.
+    """
     B, S, d = x.shape
     cd = cfg.cdtype
     dq = _dq(cd, backend)
@@ -442,12 +452,16 @@ def _deployed_mamba_full(p, cfg, x, backend="jnp"):
     h_in = L.apply_norm(x, p["ln"], cfg.norm)
     zxbcdt = dq(h_in, p["in_proj"])
     z = zxbcdt[..., :d_inner]
-    xbc = ssm_mod._causal_conv(zxbcdt[..., d_inner:2 * d_inner + 2 * N],
+    xbc_in = zxbcdt[..., d_inner:2 * d_inner + 2 * N]
+    xbc = ssm_mod._causal_conv(xbc_in,
                                p["conv_w"].astype(cd), p["conv_b"].astype(cd))
     xs = xbc[..., :d_inner].reshape(B, S, H, P)
     Bm = xbc[..., d_inner:d_inner + N]
     Cm = xbc[..., d_inner + N:]
     dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + p["dt_bias"])
+    if lens is not None:
+        pad_mask = jnp.arange(S)[None, :] < lens[:, None]    # (B, S)
+        dt = jnp.where(pad_mask[..., None], dt, 0.0)
     A = jnp.exp(p["A_log"])
     y, hT = ssm_mod.ssd_chunked(xs.astype(jnp.float32), dt, A,
                                 Bm.astype(jnp.float32), Cm.astype(jnp.float32),
@@ -455,16 +469,47 @@ def _deployed_mamba_full(p, cfg, x, backend="jnp"):
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(B, S, d_inner).astype(cd)
     y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
-    conv_tail = zxbcdt[..., d_inner:2 * d_inner + 2 * N][:, -(ssm_mod.CONV_K - 1):]
+    K1 = ssm_mod.CONV_K - 1
+    if lens is None:
+        conv_tail = xbc_in[:, -K1:]
+    else:
+        idx = lens[:, None] - K1 + jnp.arange(K1)[None, :]   # (B, K-1)
+        tail = jnp.take_along_axis(xbc_in, jnp.maximum(idx, 0)[..., None],
+                                   axis=1)
+        conv_tail = jnp.where((idx >= 0)[..., None], tail, 0.0)
     return x + dq(y, p["out_proj"]).astype(x.dtype), {
         "h": hT, "conv": conv_tail.astype(jnp.bfloat16)}
 
 
-def prefill(dparams, cfg, batch, backend: str = "jnp"):
-    """Full-sequence deployed forward.  Returns (last-token logits, caches)."""
+def _last_token(x, lens):
+    """Per-row last real token of a right-padded batch: (B, S, d) -> (B, 1, d).
+
+    ``lens=None`` keeps the static ``x[:, -1:]`` slice (full-length batch);
+    with ``lens`` the gather at ``lens-1`` reads the same elements when the
+    row is full-length, so the padded path stays bit-identical there.
+    """
+    if lens is None:
+        return x[:, -1:]
+    idx = (jnp.maximum(lens, 1) - 1).astype(jnp.int32)[:, None, None]
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None):
+    """Full-sequence deployed forward.  Returns (last-token logits, caches).
+
+    ``lens``: optional (B,) int32 per-row true prompt lengths for a
+    right-padded ``tokens`` batch (the continuous-batching admission path —
+    api/scheduler.py pads every prompt to one static prefill width so
+    admission never re-jits).  Logits are then taken at each row's own
+    last real token; SSM states stop at ``lens`` (padded steps are exact
+    no-ops); attention caches still carry entries for the padded tail, but
+    those sit strictly *above* each slot's position and every decode mask
+    is ``<= pos``, and the first ``pos`` advance overwrites index ``lens``
+    before it ever becomes visible — so the padding is never attended.
+    """
     cd = cfg.cdtype
     if cfg.family == "audio":
-        return _prefill_encdec(dparams, cfg, batch, backend)
+        return _prefill_encdec(dparams, cfg, batch, backend, lens)
     x = dparams["embed"][batch["tokens"]].astype(cd)
     if cfg.n_prefix_tokens and "prefix_embeds" in batch:
         n = cfg.n_prefix_tokens
@@ -489,7 +534,7 @@ def prefill(dparams, cfg, batch, backend: str = "jnp"):
         x, caches = jax.lax.scan(body, x, dparams["blocks"])
     elif cfg.family == "ssm":
         def body(h, p):
-            h2, st = _deployed_mamba_full(p, cfg, h, backend)
+            h2, st = _deployed_mamba_full(p, cfg, h, backend, lens)
             return h2, st
         x, caches = jax.lax.scan(body, x, dparams["blocks"])
     elif cfg.family == "hybrid":
@@ -512,7 +557,7 @@ def prefill(dparams, cfg, batch, backend: str = "jnp"):
             pg = jax.tree_util.tree_map(lambda t: t[start:stop],
                                         dparams["blocks"])
             def body(h, p):
-                h2, st = _deployed_mamba_full(p, cfg, h, backend)
+                h2, st = _deployed_mamba_full(p, cfg, h, backend, lens)
                 return h2, st
             x, st = jax.lax.scan(body, x, pg)
             caches["ssm"].append(st)
@@ -523,11 +568,11 @@ def prefill(dparams, cfg, batch, backend: str = "jnp"):
             lambda *t: jnp.concatenate(t), *caches["ssm"])
 
     x = L.apply_norm(x, dparams["ln_f"], cfg.norm)
-    logits = dq_linear(x[:, -1:], dparams["lm_head"], cd, backend)
+    logits = dq_linear(_last_token(x, lens), dparams["lm_head"], cd, backend)
     return logits.astype(jnp.float32), caches
 
 
-def _prefill_encdec(dparams, cfg, batch, backend):
+def _prefill_encdec(dparams, cfg, batch, backend, lens=None):
     cd = cfg.cdtype
     enc = batch["frames"].astype(cd)
     Se = enc.shape[1]
@@ -565,7 +610,7 @@ def _prefill_encdec(dparams, cfg, batch, backend):
         return h + f.astype(h.dtype), {"self": c, "cross": cc}
     x, caches = jax.lax.scan(dbody, x, dparams["dec_blocks"])
     x = L.apply_norm(x, dparams["ln_f"], cfg.norm)
-    logits = dq_linear(x[:, -1:], dparams["lm_head"], cd, backend)
+    logits = dq_linear(_last_token(x, lens), dparams["lm_head"], cd, backend)
     return logits.astype(jnp.float32), caches
 
 
@@ -610,6 +655,27 @@ def init_caches(cfg, batch: int, max_len: int):
     raise ValueError(cfg.family)
 
 
+def embed_caches(prefill_caches, ring):
+    """Right-pad the S-deep prefill caches into the max_len ring.
+
+    Each leaf differs from its ring counterpart in at most the sequence
+    axis; zero-padding IS the empty-slot convention (decode masks by
+    position), so generation really attends to the prompt.  Moved here
+    from ``ServingSession`` so the request-level scheduler
+    (api/scheduler.py) and the lockstep session share one embedding rule.
+    """
+    def one(pc, full):
+        if pc.shape == full.shape:
+            return pc.astype(full.dtype)
+        diff = [i for i, (a, b) in enumerate(zip(pc.shape, full.shape))
+                if a != b]
+        assert len(diff) == 1, (pc.shape, full.shape)
+        widths = [(0, 0)] * pc.ndim
+        widths[diff[0]] = (0, full.shape[diff[0]] - pc.shape[diff[0]])
+        return jnp.pad(pc, widths).astype(full.dtype)
+    return jax.tree_util.tree_map(one, prefill_caches, ring)
+
+
 def _cross_decode(p, cfg, x, cache, backend):
     """Cross-attention decode: query new token against the cached encoder KV."""
     B = x.shape[0]
@@ -629,20 +695,38 @@ def _cross_decode(p, cfg, x, cache, backend):
     return dq(o.reshape(B, 1, H * hd), p["wo"])
 
 
-def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
-    """One decode step: tokens (B, 1) -> (logits (B,1,V), caches')."""
+def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
+                live=None):
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), caches').
+
+    ``pos`` is a **per-slot position vector** (B,) int32: row ``b`` writes
+    its new cache entry at its own ring index ``pos[b]`` and attends to
+    ``<= pos[b]`` — independently-progressed requests (continuous
+    batching, api/scheduler.py) decode in ONE fixed-width launch.  A
+    scalar ``pos`` is accepted for migration and broadcasts to the
+    all-slots-synchronized vector (see docs/serving.md).
+
+    ``live``: optional (B,) bool slot mask — rows with ``live=False``
+    (freed slots awaiting re-admission) leave every cache untouched:
+    attention/MLA ring writes are dropped and SSM state updates are
+    slot-masked.  Their logits row is garbage and must be ignored.
+    """
     cd = cfg.cdtype
     dq = _dq(cd, backend)
     x = dparams["embed"][tokens].astype(cd)
+    B = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:                 # legacy scalar: all slots synchronized
+        pos = jnp.broadcast_to(pos[None], (B,))
 
     if cfg.family in ("dense", "vlm", "moe"):
         def body(h, pc):
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             if cfg.use_mla:
-                a, c2 = attn.mla_decode(p["attn"], cfg, hn, c, pos, dq)
+                a, c2 = attn.mla_decode(p["attn"], cfg, hn, c, pos, dq, live)
             else:
-                a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq)
+                a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq, live)
             h = h + a.astype(h.dtype)
             f = _deployed_ffn_full(p["ffn"], cfg,
                                    L.apply_norm(h, p["ln2"], cfg.norm), backend)
@@ -652,7 +736,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
         def body(h, pc):
             p, c = pc
             hn = L.apply_norm(h, p["ln"], cfg.norm)
-            y, c2 = ssm_mod.mamba2_decode(p, cfg, hn, c, dq)
+            y, c2 = ssm_mod.mamba2_decode(p, cfg, hn, c, dq, live)
             return h + y.astype(h.dtype), c2
         x, caches = jax.lax.scan(body, x, (dparams["blocks"], caches))
     elif cfg.family == "hybrid":
@@ -663,7 +747,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
             c_att = jax.tree_util.tree_map(lambda t: t[g], caches["attn"])
             hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
             a, c2 = attn.gqa_decode(dparams["shared_attn"]["attn"], cfg,
-                                    hn, c_att, pos, dq)
+                                    hn, c_att, pos, dq, live)
             x = x + a.astype(x.dtype)
             f = _deployed_ffn_full(
                 dparams["shared_attn"]["ffn"], cfg,
@@ -678,7 +762,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
             def body(h, pc):
                 p, c = pc
                 hn2 = L.apply_norm(h, p["ln"], cfg.norm)
-                y, cn = ssm_mod.mamba2_decode(p, cfg, hn2, c, dq)
+                y, cn = ssm_mod.mamba2_decode(p, cfg, hn2, c, dq, live)
                 return h + y.astype(h.dtype), cn
             x, cs = jax.lax.scan(body, x, (pg, cg))
             new_ssm.append(cs)
@@ -692,7 +776,8 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp"):
         def body(h, pc):
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
-            a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c["self"], pos, dq)
+            a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c["self"], pos, dq,
+                                    live)
             h = h + a.astype(h.dtype)
             xa = _cross_decode(p["xattn"], cfg,
                                L.apply_norm(h, p["ln2"], cfg.norm), c["cross"],

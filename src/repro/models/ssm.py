@@ -174,9 +174,16 @@ def init_ssm_cache(cfg, batch: int) -> dict:
     }
 
 
-def mamba2_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, dq_linear
+def mamba2_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, dq_linear,
+                  live: Optional[jnp.ndarray] = None
                   ) -> tuple[jnp.ndarray, dict]:
-    """Single-token recurrent step. x: (B, 1, d)."""
+    """Single-token recurrent step. x: (B, 1, d).
+
+    ``live``: optional (B,) bool slot mask — rows with ``live=False`` keep
+    their cached recurrent state and conv ring untouched (the SSM analogue
+    of the attention caches' dropped ring write), so freed slots in a
+    fixed-width serving batch cannot drift while they wait for admission.
+    """
     B = x.shape[0]
     d_inner, H, N, P = dims(cfg)
     cd = cfg.cdtype
@@ -204,4 +211,7 @@ def mamba2_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, dq_linear
     y = y.reshape(B, 1, d_inner).astype(cd)
     y = L.rmsnorm(y * jax.nn.silu(z[:, None].astype(cd)), p["norm"])
     out = dq_linear(y, p["out_proj"])
+    if live is not None:
+        h = jnp.where(live[:, None, None, None], h, cache["h"])
+        new_conv = jnp.where(live[:, None, None], new_conv, cache["conv"])
     return out, {"h": h, "conv": new_conv}

@@ -187,20 +187,20 @@ def bench_continuous_batching(smoke: bool = False) -> list[str]:
     """Continuous batching vs lockstep on a staggered-arrival trace.
 
     The trace has ragged output lengths and staggered arrivals — the
-    workload the lockstep ``ServingSession`` serves worst (every wave
-    decodes to its longest request while finished rows ride along dead).
+    workload a lockstep wave schedule serves worst (every wave decodes to
+    its longest request while finished rows ride along dead).
     ``ServingEngine`` reclaims finished slots and refills them from the
     admission queue without re-jitting, so the same trace takes fewer
-    fixed-width launches.  ``tok_per_launch`` (useful tokens per device
-    launch, prefills included) is the deterministic headline; wall-clock
-    tok/s is reported but the smoke gate — like the tinyml/moe_decode
-    sections — asserts only on launch/compile counters, never on
-    shared-runner timing.  ``recompiles`` counts jit cache growth while
-    serving a second trace after warmup: the slot pool must hold it at 0.
+    fixed-width launches.  The lockstep baseline is the SAME engine driven
+    wave-at-a-time (submit a wave, drain it, repeat — what
+    ``launch/serve.py --lockstep`` runs), so the two rows differ only in
+    schedule.  ``tok_per_launch`` (useful tokens per device launch,
+    prefills included) is the deterministic headline; wall-clock tok/s is
+    reported but the smoke gate — like the tinyml/moe_decode sections —
+    asserts only on launch/compile counters, never on shared-runner
+    timing.  ``recompiles`` counts jit cache growth while serving a second
+    trace after warmup: the slot pool must hold it at 0.
     """
-    import warnings
-
-    from repro.api.engine import ServingSession
     from repro.api.scheduler import Request, ServingEngine
     from repro.config import get_config
     from repro.models import serving
@@ -238,37 +238,29 @@ def bench_continuous_batching(smoke: bool = False) -> list[str]:
         f"{st['useful_tokens'] / launches_e:.2f},"
         f"{st['useful_tokens'] / dt_e:.1f},{occ:.2f},{recompiles}")
 
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        sess = ServingSession(cfg, dp, backend="jnp")
-
     def lockstep_run():
-        useful = decode_steps = prefills = slot_steps = 0
-        t0 = time.perf_counter()
+        eng = ServingEngine(cfg, dp, backend="jnp", max_slots=B,
+                            max_len=max_len, prefill_len=P)
         reqs = trace()
+        t0 = time.perf_counter()
         for w0 in range(0, len(reqs), B):
-            wave = reqs[w0:w0 + B]
-            rows_np = np.zeros((B, P), np.int32)
-            for i, r in enumerate(wave):
-                rows_np[i, :P] = r.tokens
-            gen = max(r.max_tokens for r in wave) - 1
-            toks, _ = sess.generate({"tokens": jnp.asarray(rows_np)},
-                                    gen=gen, max_len=max_len)
-            jax.block_until_ready(toks)
-            useful += sum(r.max_tokens for r in wave)
-            prefills += 1
-            decode_steps += gen
-            slot_steps += gen * B
-        return useful, prefills, decode_steps, slot_steps, \
-            time.perf_counter() - t0
+            for r in reqs[w0:w0 + B]:
+                eng.submit(r)
+            while eng.has_work():       # the wave barrier: drain fully
+                eng.step()
+            eng.collect()
+        return eng, time.perf_counter() - t0
 
     lockstep_run()                           # warmup
-    useful, prefills, decode_steps, slot_steps, dt_l = lockstep_run()
-    launches_l = prefills + decode_steps
-    occ_l = sum(m - 1 for m in mts) / max(slot_steps, 1)
+    eng_l, dt_l = lockstep_run()
+    st_l = eng_l.stats
+    useful = st_l["useful_tokens"]
+    launches_l = st_l["prefill_launches"] + st_l["decode_launches"]
+    occ_l = st_l["occupancy_sum"] / max(st_l["decode_launches"], 1)
     rows.append(
-        f"continuous_batching:lockstep,{prefills},{decode_steps},{useful},"
-        f"{useful / launches_l:.2f},{useful / dt_l:.1f},{occ_l:.2f},-")
+        f"continuous_batching:lockstep,{st_l['prefill_launches']},"
+        f"{st_l['decode_launches']},{useful},{useful / launches_l:.2f},"
+        f"{useful / dt_l:.1f},{occ_l:.2f},-")
 
     if smoke:
         # deterministic gates: the slot pool must do strictly more useful
@@ -281,6 +273,87 @@ def bench_continuous_batching(smoke: bool = False) -> list[str]:
         if recompiles != 0:
             raise SystemExit(
                 f"continuous engine recompiled after warmup: {recompiles}")
+    return rows
+
+
+def bench_paged_cache(smoke: bool = False) -> list[str]:
+    """Paged KV cache + radix prefix sharing vs the dense slot rings.
+
+    The trace interleaves 8 requests drawn from 2 distinct prompts, so 6
+    admissions find their full prompt prefix already cached: they map the
+    shared pages by refcount bump and admit with ZERO prefill launches.
+    ``kv_peak_kB`` is the high-water resident KV (pages in use priced in
+    bytes) vs the dense ``(max_slots, max_len)`` rings which are resident
+    wholesale.  Smoke gates (all deterministic): the paged engine emits
+    token-for-token the dense engine's outputs, admits at least one
+    request with zero prefill FLOPs, launches strictly fewer prefills,
+    keeps peak resident KV strictly below dense, and never recompiles
+    after warmup.
+    """
+    from repro.api.scheduler import Request, ServingEngine
+    from repro.config import get_config
+    from repro.models import serving
+    rows = ["paged_cache:mode,prefills,decode_steps,useful_tok,occupancy,"
+            "hit_rate,zero_prefill,cached_tok,kv_peak_kB,kv_dense_kB,"
+            "recompiles"]
+    cfg = get_config("qwen1.5-4b").reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    SLOTS, P, G, N_REQ = 4, 16, 8, 8
+    max_len = P + G                             # auto page_size = 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (P,)).astype(np.int32)
+               for _ in range(2)]
+    reqs = lambda: [Request(prompts[i % 2], max_tokens=G)
+                    for i in range(N_REQ)]
+    arrivals = [0, 0, 0, 0, 1, 2, 3, 4]
+
+    def run(page_size):
+        eng = ServingEngine(cfg, dp, backend="jnp", max_slots=SLOTS,
+                            max_len=max_len, prefill_len=P,
+                            page_size=page_size)
+        t0 = time.perf_counter()
+        outs = eng.run(reqs(), arrivals)
+        return eng, outs, time.perf_counter() - t0
+
+    eng_p, outs_p, _ = run("auto")              # warmup compiles both jits
+    warm = eng_p.compile_counts()
+    eng_p, outs_p, _ = run("auto")              # steady state
+    recompiles = sum(eng_p.compile_counts().values()) - sum(warm.values())
+    eng_d, outs_d, _ = run(None)
+
+    def fmt(mode, eng, rec):
+        st = eng.stats
+        occ = st["occupancy_sum"] / max(st["decode_launches"], 1)
+        return (f"paged_cache:{mode},{st['prefill_launches']},"
+                f"{st['decode_launches']},{st['useful_tokens']},{occ:.2f},"
+                f"{st['prefix_hits'] / N_REQ:.2f},"
+                f"{st['zero_prefill_admits']},{st['cached_tokens']},"
+                f"{eng.kv_bytes_peak() / 1e3:.1f},"
+                f"{eng.kv_bytes_dense() / 1e3:.1f},{rec}")
+
+    rows.append(fmt("paged", eng_p, recompiles))
+    rows.append(fmt("dense", eng_d, "-"))
+    if smoke:
+        for i in sorted(outs_d):
+            if not np.array_equal(outs_p[i].tokens, outs_d[i].tokens):
+                raise SystemExit(
+                    f"paged request {i} diverged from the dense engine")
+        if eng_p.stats["zero_prefill_admits"] < 1:
+            raise SystemExit("no zero-prefill admission on a trace of "
+                             "repeated prompts")
+        if not eng_p.stats["prefill_launches"] < eng_d.stats[
+                "prefill_launches"]:
+            raise SystemExit(
+                "prefix sharing did not reduce prefill launches: "
+                f"{eng_p.stats['prefill_launches']} vs "
+                f"{eng_d.stats['prefill_launches']}")
+        if not eng_p.kv_bytes_peak() < eng_d.kv_bytes_dense():
+            raise SystemExit(
+                f"peak resident KV {eng_p.kv_bytes_peak()} not below dense "
+                f"{eng_d.kv_bytes_dense()} at equal trace output")
+        if recompiles != 0:
+            raise SystemExit(
+                f"paged engine recompiled after warmup: {recompiles}")
     return rows
 
 
@@ -330,6 +403,7 @@ SECTIONS = {
     "tinyml": bench_tinyml,
     "moe_decode": bench_moe_decode,
     "continuous_batching": bench_continuous_batching,
+    "paged_cache": bench_paged_cache,
     "serving": bench_serving,
     "roofline": bench_roofline,
     "pareto": bench_pareto,
@@ -341,9 +415,11 @@ SECTIONS = {
 # moe_decode asserts the expert-batched fused decode really reduces
 # launches and moves sub-byte (not dense) weight bytes, and
 # continuous_batching asserts the slot-pooled engine beats the lockstep
-# wave barrier on useful tokens per launch with zero post-warmup recompiles
+# wave barrier on useful tokens per launch with zero post-warmup recompiles,
+# and paged_cache asserts prefix sharing really elides prefills and keeps
+# peak resident KV below the dense rings at bit-identical trace output
 SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode",
-                  "continuous_batching")
+                  "continuous_batching", "paged_cache")
 
 
 def main() -> None:

@@ -36,7 +36,13 @@ print(f"deployed weights: mixed {mb_mixed / 1e6:.2f} MB vs "
 
 # request-level serving ------------------------------------------------------
 # ragged prompts and output budgets arriving over time, multiplexed onto a
-# fixed-width slot pool (continuous batching; docs/serving.md)
+# fixed-width slot pool (continuous batching; docs/serving.md).  The KV
+# cache is PAGED by default (page_size="auto"): slots map fixed-size pages
+# from a shared pool instead of owning a dense (max_slots, max_len) ring,
+# and a radix index shares the pages of repeated prompt prefixes copy-free
+# — the last request below repeats the first one's prompt, so its cached
+# prefix pages are mapped by refcount bump instead of being recomputed.
+# Pass page_size=None for the dense rings (bit-identical tokens).
 SLOTS, S, GEN = 4, 48, 24
 rng = np.random.default_rng(0)
 reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
@@ -44,6 +50,7 @@ reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
                                     ).astype(np.int32),
                 max_tokens=int(rng.integers(GEN // 3, GEN + 1)))
         for _ in range(8)]
+reqs[-1] = dataclasses.replace(reqs[-1], tokens=reqs[0].tokens)
 arrivals = sorted(int(a) for a in rng.integers(0, 12, len(reqs)))
 eng = ServingEngine(cfg, dp_mixed, backend="jnp", max_slots=SLOTS,
                     max_len=S + GEN, prefill_len=S)
@@ -56,4 +63,9 @@ print(f"served {len(outs)} requests / {st['useful_tokens']} tokens in "
       f"{dt:.2f}s ({st['useful_tokens'] / dt:.0f} tok/s incl. compile; "
       f"{st['prefill_launches']} prefills + {st['decode_launches']} decode "
       f"launches, slot occupancy {occ:.2f})")
+print(f"paged KV: page_size {eng.page_size}, peak {st['pages_peak']}/"
+      f"{eng.pool.capacity} pages resident "
+      f"({eng.kv_bytes_peak() / 1e3:.0f} kB vs dense "
+      f"{eng.kv_bytes_dense() / 1e3:.0f} kB), {st['prefix_hits']} prefix "
+      f"hits / {st['cached_tokens']} prompt tokens served from cache")
 print("generated ids (req 0):", outs[0].tokens[:12])

@@ -12,8 +12,9 @@ One import gives every call surface the paper's method passes through:
   on whether the weight leaf is a float array or a QTensor;
 * :class:`Engine` — the search -> finetune -> deploy -> serve facade;
 * :class:`ServingEngine` / :class:`Request` — the request-level serving
-  surface (continuous batching over a slot-pooled KV cache; replaces the
-  deprecated lockstep :class:`~repro.api.engine.ServingSession`);
+  surface (continuous batching over a paged KV cache with radix prefix
+  sharing, repro.cache; the deprecated lockstep ``ServingSession`` was
+  removed in PR 6 — see docs/api_migration.md);
 * :class:`SamplingParams` / :func:`sample` — greedy / temperature / top-k
   token sampling shared by both serving surfaces.
 

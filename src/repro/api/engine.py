@@ -202,10 +202,12 @@ def serving_jits(cfg, backend: str) -> dict:
     """Shared jitted ``prefill(dp, batch[, lens])`` / ``decode(dp, tokens,
     caches, pos[, live])`` executables for one (config, backend) pair.
 
-    Decode donates its caches.  Both ``ServingSession`` and the
-    request-level ``ServingEngine`` wrappers (api/scheduler.py) resolve
+    Decode donates its caches.  The lockstep drivers (launch/serve.py,
+    benchmarks, the test oracles) and any ad-hoc serving loop resolve
     through this cache, so every serving surface over the same deployed
-    config reuses one set of compiled executables.
+    config reuses one set of compiled executables.  (The request-level
+    ``ServingEngine`` keys its own admission/step executables the same way
+    in api/scheduler.py.)
     """
     key = (id(cfg), backend)
     ent = _SERVING_JITS.get(key)
@@ -224,89 +226,9 @@ def serving_jits(cfg, backend: str) -> dict:
         _SERVING_JITS[key] = ent
     return ent
 
-
-class ServingSession:
-    """Batched **lockstep** prefill + decode over a deployed LM.
-
-    .. deprecated:: PR 5
-        ``ServingSession`` is the degenerate all-slots-synchronized serving
-        surface: one fixed batch prefills together, decodes together (one
-        shared position for every row) and finishes together, so ragged
-        real traffic idles behind the shortest-job barrier.  Use the
-        request-level :class:`repro.api.ServingEngine` (continuous batching
-        over a slot-pooled KV cache) instead; this class is kept for one
-        release as the lockstep baseline and parity oracle
-        (tests/test_continuous_batching.py).  See docs/serving.md and
-        docs/api_migration.md.
-
-        sess = ServingSession(cfg, dparams, backend="jnp")
-        tokens = sess.generate(batch, gen=16, max_len=48)
-
-    Every family serves **fully packed** on both prefill and decode: MoE
-    expert stacks contract through the expert-batched fused kernel (one
-    ``pallas_call`` per expert weight under ``backend="pallas"``) and MLA
-    decode expands its cached latents through the packed ``wkv_b`` matmul —
-    no path dequantizes a full weight (the all-family monkeypatch guard in
-    tests/test_serving_consistency.py pins this).  ``backend="jnp"`` keeps
-    the same routing with per-group dense sub-GEMMs (the CPU reference).
-    """
-
-    def __init__(self, cfg, dparams, backend: str = "jnp"):
-        import warnings
-
-        from repro.models import serving
-        warnings.warn(
-            "ServingSession is the deprecated lockstep serving surface; "
-            "use repro.api.ServingEngine (request-level continuous "
-            "batching) — see docs/api_migration.md",
-            DeprecationWarning, stacklevel=2)
-        self.cfg, self.dparams, self.backend = cfg, dparams, backend
-        self._serving = serving
-        fns = serving_jits(cfg, backend)
-        self.prefill = fns["prefill"]
-        self.decode = fns["decode"]
-
-    def init_caches(self, batch: int, max_len: int):
-        return self._serving.init_caches(self.cfg, batch, max_len)
-
-    # kept as a (static)method alias for pre-PR5 callers; the rule lives in
-    # models/serving.py now so the scheduler shares it.
-    @staticmethod
-    def _embed_caches(prefill_caches, ring):
-        from repro.models import serving
-        return serving.embed_caches(prefill_caches, ring)
-
-    def generate(self, batch: dict, gen: int, max_len: Optional[int] = None,
-                 sampling=None, key=None):
-        """Lockstep decode of ``gen`` tokens after a full prefill.
-
-        Returns ``(tokens (B, gen+1), prefill_logits)``.  The prefill's
-        S-deep caches are padded into a ``max_len`` ring so every decode
-        step attends to the full prompt history.  ``sampling`` is an
-        optional :class:`repro.api.SamplingParams` (greedy by default;
-        stochastic kinds need ``key``); every row shares one position
-        vector entry per step — the degenerate synchronized schedule.
-        """
-        from repro.api import sampling as smp
-        sampling = sampling or smp.GREEDY
-        if sampling.kind != "greedy" and key is None:
-            key = jax.random.PRNGKey(0)
-        B, S = batch["tokens"].shape
-        max_len = max_len or (S + gen)
-        prefill_logits, pf_caches = self.prefill(self.dparams, batch)
-        caches = self._serving.embed_caches(pf_caches,
-                                            self.init_caches(B, max_len))
-        if key is not None:
-            key, k0 = jax.random.split(key)
-        tokens = smp.sample(prefill_logits[:, -1:], sampling,
-                            None if key is None else k0)
-        out = [tokens]
-        for i in range(gen):
-            pos = jnp.full((B,), S + i, jnp.int32)
-            logits, caches = self.decode(self.dparams, tokens, caches, pos)
-            if key is not None:
-                key, ki = jax.random.split(key)
-            tokens = smp.sample(logits[:, -1:], sampling,
-                                None if key is None else ki)
-            out.append(tokens)
-        return jnp.concatenate(out, axis=1), prefill_logits
+# ``ServingSession`` (the lockstep serving surface deprecated in PR 5) was
+# removed in PR 6: request-level serving lives in
+# :class:`repro.api.ServingEngine`, and the lockstep baseline is a ~10-line
+# loop over :func:`serving_jits` (see launch/serve.py run_lockstep and the
+# ``_lockstep_generate`` oracle in tests/test_continuous_batching.py).
+# docs/api_migration.md has the call-site mapping.

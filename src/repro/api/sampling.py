@@ -1,8 +1,9 @@
 """Token sampling for the serving surfaces.
 
 One helper shared by the request-level :class:`~repro.api.scheduler.
-ServingEngine` and the lockstep :class:`~repro.api.engine.ServingSession`
-(which used to hard-code ``argmax`` inline, twice).  The sampling *kind*
+ServingEngine` and the lockstep oracle loops over ``engine.serving_jits``
+(the removed ``ServingSession`` hard-coded ``argmax`` inline, twice).
+The sampling *kind*
 is static — jitted serving steps specialize per :class:`SamplingParams`
 exactly like they specialize per backend — so greedy decoding stays a
 pure ``argmax`` with no RNG plumbed through the hot path.

@@ -1,4 +1,4 @@
-"""Request-level serving: continuous batching over a slot-pooled KV cache.
+"""Request-level serving: continuous batching over a paged KV cache.
 
 The pre-PR5 public serving surface was ``ServingSession.generate`` — a
 lockstep loop where one fixed batch prefills together, decodes together and
@@ -7,13 +7,11 @@ with different prompt/output lengths) leaves the fused deployed kernels
 idle behind the shortest-job barrier.  :class:`ServingEngine` redesigns the
 surface around **requests**:
 
-* a persistent ``(max_slots, max_len)`` cache pool is allocated once; each
-  slot carries its own position, length budget and live/free flag;
 * ``submit`` queues a :class:`Request`; admission pads queued prompts into
   ONE fixed ``(max_slots, prefill_len)`` prefill launch (per-row true
-  lengths via ``serving.prefill(..., lens=...)``) and where-merges only the
-  admitted slots' rows into the pool — in-flight slots are untouched, so
-  prefill of new arrivals interleaves with decode of in-flight ones;
+  lengths via ``serving.prefill(..., lens=...)``) and merges only the
+  admitted slots' cache rows — in-flight slots are untouched, so prefill of
+  new arrivals interleaves with decode of in-flight ones;
 * every decode tick is ONE fixed-width ``decode_step`` launch with a
   **per-slot position vector** and a live mask (freed slots drop their ring
   writes / SSM state updates — models/attention.py, models/ssm.py);
@@ -21,20 +19,41 @@ surface around **requests**:
   the admission queue **without re-jitting**: every launch has the same
   static shapes, so after one warmup pass the jit caches never grow
   (``compile_counts`` exposes the counters the tests and the
-  ``continuous_batching`` benchmark section assert on).
+  ``continuous_batching`` / ``paged_cache`` benchmark sections assert on).
 
-Numerical contract: with all slots admitted at once, full-length prompts
-and every slot live, each launch is operand-for-operand the lockstep
-session's launch — ``run`` is then bit-identical to
-``ServingSession.generate`` (tests/test_continuous_batching.py).  On
-staggered traces each slot's tokens depend only on its own request for the
-row-independent families (dense / ssm / hybrid attention); MoE couples
-rows only through expert-capacity overflow drops.
+Paged KV cache (PR 6).  By default the ring leaves are no longer dense
+``(max_slots, max_len)`` rows but **physical pages** managed by
+``repro.cache``: each slot carries a ``(pages_per_slot,)`` page-table row,
+admission allocates only ``ceil(prompt_len / page_size)`` pages and decode
+lazily maps one more page each time a slot's position crosses a page
+boundary, so resident KV bytes track the tokens actually held instead of
+``max_slots * max_len``.  Admission is gated by a **page reservation**
+invariant (``available >= reserved``) that guarantees a lazy decode
+allocation can never fail mid-request; when the head of the queue does not
+fit it waits (strict FIFO, ``deferred_admissions`` stat) while decode keeps
+ticking.  A radix index over prompt tokens additionally shares identical
+prompt prefixes **copy-free** (``prefix_sharing``, default on for the
+``dense`` family): matched full pages are mapped read-only with a refcount
+bump, a fully-cached prompt skips its prefill launch entirely (the slot
+bootstraps from the last prompt token in its first decode tick — zero
+prefill FLOPs), and pages of finished requests stay cached while free
+space lasts (LRU leaf-first eviction under pressure).  ``page_size=None``
+restores the dense PR5 pool bit-for-bit — the parity oracle the paged
+tests compare against.
+
+Numerical contract: the paged engine's launches gather per-slot ring views
+that are element-for-element the dense rings (``repro.cache.paged``), so
+its tokens are **bit-identical** to the dense engine's on any trace without
+prefix hits; a full-prefix hit samples its first token from a decode-step
+launch instead of the prefill launch (same math, different launch path).
+MoE couples rows through expert-capacity overflow, so sharing pages built
+under a different batch composition is approximate — prefix sharing there
+is an explicit opt-in.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import math
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -42,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import sampling as smp
+from repro.cache import NULL_PAGE, PagePool
 
 
 @dataclasses.dataclass
@@ -50,8 +70,8 @@ class Request:
 
     ``tokens``: (L,) int prompt ids; ``max_tokens``: total generated tokens
     INCLUDING the one sampled from the prefill logits (so ``max_tokens=G``
-    corresponds to ``ServingSession.generate(gen=G-1)``); ``eos_id``: stop
-    early when this id is sampled (still counted in the output);
+    corresponds to the old lockstep ``generate(gen=G-1)``); ``eos_id``:
+    stop early when this id is sampled (still counted in the output);
     ``extras``: per-request prefill arrays keyed like the batch dict
     (``frames`` for audio, ``prefix_embeds`` for vlm) — rows of slots not
     being admitted are zero-filled.
@@ -71,43 +91,77 @@ class RequestOutput:
 
 
 # Module-level jitted admission/step executables, keyed on (cfg id, backend,
-# sampling): the same hoisting rule as engine.serving_jits — two engines
-# over one deployed config share executables, and re-constructing an engine
-# never recompiles.  cfg is strongly referenced so its id() stays unique.
+# sampling, page_size): the same hoisting rule as engine.serving_jits — two
+# engines over one deployed config share executables, and re-constructing an
+# engine never recompiles.  cfg is strongly referenced so its id() stays
+# unique.
 _ENGINE_JITS: dict = {}
 
 
-def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams) -> dict:
-    key = (id(cfg), backend, sampling)
+def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
+                 page_size: Optional[int]) -> dict:
+    key = (id(cfg), backend, sampling, page_size)
     ent = _ENGINE_JITS.get(key)
     if ent is None:
         from repro.models import serving
 
-        def _admit(dp, batch, lens, admit, tok_old, caches, key):
-            """One admission: fixed-width prefill + slot-masked merge.
+        if page_size is None:
+            def _admit(dp, batch, lens, admit, tok_old, caches, key):
+                """One admission: fixed-width prefill + slot-masked merge.
 
-            ``admit`` (B,) bool selects the slots being (re)filled; their
-            prefill caches are right-padded into the pool ring and merged
-            row-wise, everything else keeps the in-flight state.  Returns
-            the next-token batch (admitted rows freshly sampled from their
-            own last-prompt-token logits, others untouched).
-            """
-            logits, pf = serving.prefill(dp, cfg, batch, backend, lens=lens)
-            ring = jax.tree_util.tree_map(jnp.zeros_like, caches)
-            emb = serving.embed_caches(pf, ring)
+                ``admit`` (B,) bool selects the slots being (re)filled;
+                their prefill caches are right-padded into the pool ring
+                and merged row-wise, everything else keeps the in-flight
+                state.  Returns the next-token batch (admitted rows
+                freshly sampled from their own last-prompt-token logits,
+                others untouched).
+                """
+                logits, pf = serving.prefill(dp, cfg, batch, backend,
+                                             lens=lens)
+                ring = jax.tree_util.tree_map(jnp.zeros_like, caches)
+                emb = serving.embed_caches(pf, ring)
 
-            def merge(new, old):   # stacked cache leaves: batch axis is 1
-                m = admit.reshape((1, -1) + (1,) * (new.ndim - 2))
-                return jnp.where(m, new, old)
-            caches = jax.tree_util.tree_map(merge, emb, caches)
-            tok = smp.sample(logits, sampling, key)          # (B, 1)
-            return jnp.where(admit[:, None], tok, tok_old), caches
+                def merge(new, old):  # stacked cache leaves: batch axis 1
+                    m = admit.reshape((1, -1) + (1,) * (new.ndim - 2))
+                    return jnp.where(m, new, old)
+                caches = jax.tree_util.tree_map(merge, emb, caches)
+                tok = smp.sample(logits, sampling, key)          # (B, 1)
+                return jnp.where(admit[:, None], tok, tok_old), caches
 
-        def _step(dp, tokens, caches, pos, live, key):
-            """One decode tick: per-slot positions, live-masked cache."""
-            logits, caches = serving.decode_step(dp, cfg, tokens, caches,
-                                                 pos, backend, live=live)
-            return smp.sample(logits, sampling, key), caches
+            def _step(dp, tokens, caches, pos, live, key):
+                """One decode tick: per-slot positions, live-masked cache."""
+                logits, caches = serving.decode_step(dp, cfg, tokens, caches,
+                                                     pos, backend, live=live)
+                return smp.sample(logits, sampling, key), caches
+        else:
+            def _admit(dp, batch, lens, admit, tok_old, caches, wp_flat,
+                       key):
+                """Paged admission: fixed-width prefill + page scatter.
+
+                ``wp_flat (B * n_prompt_pages,)`` maps each slot's prompt
+                pages to physical pages (out-of-bounds = skip the write:
+                non-admitted slots, junk tails, prefix-shared read-only
+                pages); per-slot leaves (hybrid SSM state, audio cross)
+                still merge on ``admit``.  Same launch shape regardless of
+                how many slots admit — zero recompiles after warmup.
+                """
+                logits, pf = serving.prefill(dp, cfg, batch, backend,
+                                             lens=lens)
+                caches = serving.merge_paged_caches(cfg, pf, caches, admit,
+                                                    wp_flat)
+                tok = smp.sample(logits, sampling, key)          # (B, 1)
+                return jnp.where(admit[:, None], tok, tok_old), caches
+
+            def _step(dp, tokens, caches, pos, live_write, pages, key):
+                """One paged decode tick: the ``(B, pages_per_slot)`` page
+                table routes every ring read/write; ``live_write`` also
+                masks rows whose write is suppressed for one tick (a
+                full-prefix hit whose last prompt position is already
+                cached in a shared page)."""
+                logits, caches = serving.decode_step(
+                    dp, cfg, tokens, caches, pos, backend, live=live_write,
+                    pages=pages, page_size=page_size)
+                return smp.sample(logits, sampling, key), caches
 
         ent = {"cfg": cfg,
                "admit": jax.jit(_admit, donate_argnums=(5,)),
@@ -116,13 +170,30 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams) -> dict:
     return ent
 
 
-class _Slot:
-    __slots__ = ("rid", "prompt_len", "max_tokens", "eos_id", "generated")
+def auto_page_size(cfg, max_len: int, prefill_len: int,
+                   cap: int = 16) -> Optional[int]:
+    """Default page size: the largest divisor of gcd(max_len, prefill_len)
+    not exceeding ``cap`` (both widths must split into whole pages so the
+    gathered ring and the scattered prefill stay exact-shape).  ``None``
+    (dense) for families with no ring to page (ssm)."""
+    from repro.models import serving
+    if not serving.supports_paging(cfg):
+        return None
+    g = math.gcd(max_len, prefill_len)
+    return max(t for t in range(1, min(cap, g) + 1) if g % t == 0)
 
-    def __init__(self, rid, prompt_len, max_tokens, eos_id):
+
+class _Slot:
+    __slots__ = ("rid", "prompt_len", "max_tokens", "eos_id", "generated",
+                 "worst", "mapped")
+
+    def __init__(self, rid, prompt_len, max_tokens, eos_id,
+                 worst=0, mapped=0):
         self.rid, self.prompt_len = rid, prompt_len
         self.max_tokens, self.eos_id = max_tokens, eos_id
         self.generated: List[int] = []
+        self.worst = worst              # page budget ceil((L+mt-1)/T)
+        self.mapped = mapped            # pages currently in the table row
 
 
 class ServingEngine:
@@ -135,25 +206,91 @@ class ServingEngine:
         outs = eng.collect()                 # finished RequestOutputs
 
     or, for a whole trace, ``eng.run(requests, arrivals)``.  One engine
-    ``step()`` is exactly one device launch (an admission prefill when
-    slots are free and requests are queued, else a decode tick over the
-    live slots), which is what the stats count.
+    ``step()`` is at most one device launch (an admission prefill when
+    slots and pages are free and requests are queued, else a decode tick
+    over the live slots), which is what the stats count.
+
+    ``page_size``: ``"auto"`` (default) pages the KV cache with
+    :func:`auto_page_size`; an int forces that page size; ``None`` serves
+    the dense PR5 slot pool.  ``num_pages`` (paged mode) sizes the physical
+    pool — default ``1 + max_slots * max_len / page_size``, the dense
+    capacity plus the NULL page, so default engines never defer.
+    ``prefix_sharing``: ``"auto"`` enables the radix prompt index for the
+    ``dense`` family; ``True`` additionally allows ``moe`` (approximate —
+    expert-capacity coupling makes prefill rows batch-dependent); families
+    whose generation depends on non-token inputs (vlm prefix embeds, audio
+    frames) or uncached recurrent state (ssm, hybrid) reject it.
     """
 
     def __init__(self, cfg, dparams, backend: str = "jnp",
                  max_slots: int = 4, max_len: int = 64,
                  prefill_len: Optional[int] = None,
-                 sampling: smp.SamplingParams = smp.GREEDY, seed: int = 0):
+                 sampling: smp.SamplingParams = smp.GREEDY, seed: int = 0,
+                 page_size="auto", num_pages: Optional[int] = None,
+                 prefix_sharing="auto"):
         from repro.models import serving
         self.cfg, self.dparams, self.backend = cfg, dparams, backend
         self.max_slots, self.max_len = max_slots, max_len
         self.prefill_len = prefill_len or max_len // 2
         if self.prefill_len > max_len:
             raise ValueError("prefill_len exceeds the slot ring max_len")
+
+        if page_size == "auto":
+            page_size = auto_page_size(cfg, max_len, self.prefill_len)
+        if page_size is not None:
+            if not serving.supports_paging(cfg):
+                raise ValueError(f"family {cfg.family!r} has no ring axis "
+                                 "to page (pass page_size=None)")
+            if max_len % page_size or self.prefill_len % page_size:
+                raise ValueError(
+                    f"page_size {page_size} must divide both max_len "
+                    f"{max_len} and prefill_len {self.prefill_len}")
+        self.page_size = page_size
+        self.pages_per_slot = (0 if page_size is None
+                               else max_len // page_size)
+        self.n_prompt_pages = (0 if page_size is None
+                               else self.prefill_len // page_size)
+        if prefix_sharing == "auto":
+            prefix_sharing = page_size is not None and cfg.family == "dense"
+        elif prefix_sharing:
+            if page_size is None:
+                raise ValueError("prefix_sharing requires a paged cache")
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"prefix_sharing unavailable for family {cfg.family!r}: "
+                    "its generation depends on inputs the token-keyed radix "
+                    "index cannot see (prefix embeds / frames / recurrent "
+                    "state)")
+        self.prefix_sharing = bool(prefix_sharing)
+
         self.sampling = sampling
-        fns = _engine_jits(cfg, backend, sampling)
+        fns = _engine_jits(cfg, backend, sampling, page_size)
         self._admit_fn, self._step_fn = fns["admit"], fns["step"]
-        self.caches = serving.init_caches(cfg, max_slots, max_len)
+
+        if page_size is None:
+            self.pool = None
+            self._pages = None
+            self.caches = serving.init_caches(cfg, max_slots, max_len)
+        else:
+            if num_pages is None:
+                num_pages = 1 + max_slots * self.pages_per_slot
+            if num_pages < 2:
+                raise ValueError("num_pages must be >= 2 (NULL page + one "
+                                 "allocatable page)")
+            self.pool = PagePool(num_pages, page_size,
+                                 prefix_sharing=self.prefix_sharing)
+            self._pages = np.full((max_slots, self.pages_per_slot),
+                                  NULL_PAGE, np.int32)
+            self.caches = serving.init_paged_caches(cfg, max_slots,
+                                                    num_pages, page_size)
+            mask = serving.paged_leaf_mask(cfg)
+            leaves = zip(jax.tree_util.tree_leaves(mask),
+                         jax.tree_util.tree_leaves(self.caches))
+            self._page_bytes = sum(t.nbytes // t.shape[1]
+                                   for m, t in leaves if m)
+        self._reserved = 0              # pages promised to live slots
+        self._suppress = np.zeros(max_slots, bool)
+
         self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
         self._pos = np.zeros(max_slots, np.int64)
         self._live = np.zeros(max_slots, bool)
@@ -164,21 +301,34 @@ class ServingEngine:
         self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
         self.stats = dict(prefill_launches=0, decode_launches=0,
-                          useful_tokens=0, occupancy_sum=0.0, idle_ticks=0)
+                          useful_tokens=0, occupancy_sum=0.0, idle_ticks=0,
+                          prefix_hits=0, zero_prefill_admits=0,
+                          cached_tokens=0, deferred_admissions=0,
+                          evictions=0, pages_peak=0)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, request: Request) -> int:
         """Queue a request for admission; returns its request id."""
+        rid = self._next_rid
         L = int(np.asarray(request.tokens).shape[0])
         if not 1 <= L <= self.prefill_len:
-            raise ValueError(f"prompt length {L} not in [1, "
-                             f"prefill_len={self.prefill_len}]")
+            raise ValueError(f"request {rid}: prompt length {L} not in "
+                             f"[1, prefill_len={self.prefill_len}]")
         if request.max_tokens < 1:
-            raise ValueError("max_tokens must be >= 1")
-        if L + request.max_tokens - 1 > self.max_len:
+            raise ValueError(f"request {rid}: max_tokens must be >= 1")
+        worst = (0 if self.pool is None
+                 else -(-(L + request.max_tokens - 1) // self.page_size))
+        if (L + request.max_tokens - 1 > self.max_len
+                or (self.pool is not None and worst > self.pool.capacity)):
+            budget = (f"slot rings {self.max_slots} x {self.max_len}"
+                      if self.pool is None else
+                      f"needs {worst} pages of {self.page_size} tokens, "
+                      f"pages free {self.pool.available}"
+                      f"/{self.pool.capacity}")
             raise ValueError(
-                f"prompt_len {L} + max_tokens {request.max_tokens} "
-                f"overflows the slot ring (max_len={self.max_len})")
+                f"request {rid}: prompt_len {L} + max_tokens "
+                f"{request.max_tokens} overflows the slot ring "
+                f"(max_len={self.max_len}; {budget})")
         if self.cfg.family == "vlm" and self.cfg.n_prefix_tokens:
             # the first n_prefix_tokens positions ARE the image context
             # (prefill swaps them for prefix_embeds); a shorter prompt would
@@ -199,7 +349,6 @@ class ServingEngine:
                 "audio requests need extras['frames'] (encoder input) — "
                 "an empty slot row would cross-attend to an all-zero "
                 "encoder and decode garbage")
-        rid = self._next_rid
         self._next_rid += 1
         self._pending[rid] = request
         self.queue.append(rid)
@@ -224,19 +373,59 @@ class ServingEngine:
         return {"admit": self._admit_fn._cache_size(),
                 "step": self._step_fn._cache_size()}
 
+    # -- KV residency metrics ------------------------------------------------
+    def kv_bytes_dense(self) -> int:
+        """Bytes the dense ``(max_slots, max_len)`` cache pool holds
+        resident for this config — the paged engine's baseline."""
+        from repro.models import serving
+        tree = jax.eval_shape(
+            lambda: serving.init_caches(self.cfg, self.max_slots,
+                                        self.max_len))
+        return sum(int(np.prod(t.shape)) * np.dtype(t.dtype).itemsize
+                   for t in jax.tree_util.tree_leaves(tree))
+
+    def kv_bytes_resident(self) -> int:
+        """KV bytes currently holding live or reusable data: pages in use
+        (referenced + radix-resident) plus the always-resident per-slot
+        leaves (hybrid SSM state, audio cross caches).  Dense mode: the
+        whole pool."""
+        if self.pool is None:
+            return self.kv_bytes_dense()
+        total = sum(t.nbytes for t in jax.tree_util.tree_leaves(self.caches))
+        paged_total = self._page_bytes * self.pool.num_pages
+        return (total - paged_total) + self._page_bytes * self.pool.in_use
+
+    def kv_bytes_peak(self) -> int:
+        """High-water resident KV bytes over the engine's lifetime — the
+        benchmark's memory headline (``pages_peak`` priced in bytes)."""
+        if self.pool is None:
+            return self.kv_bytes_dense()
+        total = sum(t.nbytes for t in jax.tree_util.tree_leaves(self.caches))
+        paged_total = self._page_bytes * self.pool.num_pages
+        return (total - paged_total) + \
+            self._page_bytes * self.stats["pages_peak"]
+
+    def _note_pool(self) -> None:
+        self.stats["evictions"] = self.pool.evictions
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.pool.in_use)
+
     # -- scheduler ticks -----------------------------------------------------
     def step(self) -> dict:
         """One scheduler tick = at most one device launch.
 
-        Admission has priority: if any slot is free and requests are
-        queued, refill (one fixed-width prefill launch, first token
-        sampled).  Otherwise run one decode tick over the live slots.
-        Returns a small stats dict (``kind`` in {"prefill", "decode",
-        "idle"}).
+        Admission has priority: if any slot is free, requests are queued
+        and (paged mode) the head of the queue passes the page-reservation
+        gate, refill (at most one fixed-width prefill launch; fully-cached
+        prompts admit with NO launch).  Otherwise run one decode tick over
+        the live slots.  Returns a small stats dict (``kind`` in
+        {"prefill", "cached", "decode", "idle"}).
         """
         free = [i for i, s in enumerate(self._slots) if s is None]
         if self.queue and free:
-            return self._admit_tick(free)
+            out = self._admit_tick(free)
+            if out is not None:
+                return out
         if self._live.any():
             return self._decode_tick()
         self.stats["idle_ticks"] += 1
@@ -248,13 +437,79 @@ class ServingEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
-    def _admit_tick(self, free: List[int]) -> dict:
-        B, P = self.max_slots, self.prefill_len
-        take = self.queue[:len(free)]
+    def _plan_admission(self, toks: np.ndarray, max_tokens: int):
+        """Page plan for one request, or None if it must wait.
+
+        Returns ``(matched, full_hit, worst)``.  The gate keeps the
+        invariant ``pool.available >= self._reserved`` — ``available``
+        counts free + radix-resident (evictable) pages and residency is
+        closed under prefix descendants, so a passing admission can take
+        its prompt pages NOW and every future lazy decode allocation of
+        every live slot is guaranteed to succeed.  Reviving a matched
+        resident page consumes it from ``available``, hence the ``+ r``.
+        """
+        T = self.page_size
+        L = len(toks)
+        matched = self.pool.match_prefix(toks) if self.prefix_sharing else []
+        m = len(matched)
+        full_hit = self.prefix_sharing and m > 0 and m * T >= L - 1
+        worst = -(-(L + max_tokens - 1) // T)
+        r = sum(self.pool.is_resident(p) for p in matched)
+        if self.pool.available - self._reserved < (worst - m) + r:
+            return None
+        return matched, full_hit, worst
+
+    def _admit_tick(self, free: List[int]) -> Optional[dict]:
+        """Admit queued requests into free slots; at most ONE prefill
+        launch.  Paged mode walks the queue strictly FIFO and stops at the
+        first request the page gate rejects (head-of-line waits; decode
+        keeps draining pages).  Returns None when nothing was admitted so
+        ``step`` falls through to a decode tick."""
+        B, P, T = self.max_slots, self.prefill_len, self.page_size
+        plans = {}
+        if self.pool is None:
+            take = self.queue[:len(free)]
+        else:
+            take = []
+            for rid in self.queue[:len(free)]:
+                req = self._pending[rid]
+                plan = self._plan_admission(
+                    np.asarray(req.tokens, np.int32), req.max_tokens)
+                if plan is None:
+                    self.stats["deferred_admissions"] += 1
+                    break
+                matched, full_hit, worst = plan
+                toks = np.asarray(req.tokens, np.int32)
+                L = toks.shape[0]
+                # take the pages NOW: shared first (so they cannot be
+                # evicted by our own fresh allocations), then fresh prompt
+                # pages; decode pages stay reserved, mapped lazily.
+                self.pool.acquire(matched)
+                if full_hit:
+                    row = list(matched)
+                else:
+                    n_prompt = -(-L // T)
+                    row = list(matched) + self.pool.alloc(n_prompt -
+                                                          len(matched))
+                    # publish the full prompt pages BEFORE the launch: a
+                    # same-tick duplicate prompt becomes a full hit whose
+                    # shared reads happen only in later decode ticks,
+                    # after this tick's prefill wrote the pages.
+                    self.pool.index_prompt(toks, row[:L // T])
+                self._reserved += worst - len(row)
+                plans[rid] = (matched, full_hit, worst, row)
+                take.append(rid)
+            if not take:
+                return None
         del self.queue[:len(take)]
+
         rows = np.zeros((B, P), np.int32)
         lens = np.ones(B, np.int32)
         admit = np.zeros(B, bool)
+        wp_flat = (None if self.pool is None else
+                   np.full(B * self.n_prompt_pages, self.pool.num_pages,
+                           np.int32))
+        boot: List[tuple] = []          # (slot, last prompt token)
         extras: Dict[str, np.ndarray] = {}
         if self.cfg.family == "audio":
             extras["frames"] = np.zeros(
@@ -266,37 +521,94 @@ class ServingEngine:
             req = self._pending.pop(rid)
             toks = np.asarray(req.tokens, np.int32)
             L = toks.shape[0]
-            rows[slot, :L] = toks
             lens[slot] = L
-            admit[slot] = True
             for k, v in req.extras.items():
                 extras[k][slot] = v
-            self._slots[slot] = _Slot(rid, L, req.max_tokens, req.eos_id)
-            self._pos[slot] = L
             self._live[slot] = True
-        batch = {"tokens": jnp.asarray(rows)}
-        batch.update({k: jnp.asarray(v) for k, v in extras.items()})
-        self.tokens, self.caches = self._admit_fn(
-            self.dparams, batch, jnp.asarray(lens), jnp.asarray(admit),
-            self.tokens, self.caches, self._next_key())
-        self.stats["prefill_launches"] += 1
-        self.stats["useful_tokens"] += len(take)
+            if self.pool is None:
+                rows[slot, :L] = toks
+                admit[slot] = True
+                self._slots[slot] = _Slot(rid, L, req.max_tokens, req.eos_id)
+                self._pos[slot] = L
+                continue
+            matched, full_hit, worst, row = plans[rid]
+            self._pages[slot, :len(row)] = row
+            self._slots[slot] = _Slot(rid, L, req.max_tokens, req.eos_id,
+                                      worst=worst, mapped=len(row))
+            self.stats["prefix_hits"] += bool(matched)
+            self.stats["cached_tokens"] += len(matched) * T
+            if full_hit:
+                # zero-prefill admission: every needed prompt position but
+                # (at most) the last is cached; bootstrap the slot from the
+                # last prompt token — its first decode tick writes that
+                # token's KV (or suppresses the write for one tick if even
+                # it is cached) and samples the first output token.
+                self.stats["zero_prefill_admits"] += 1
+                self._pos[slot] = L - 1
+                self._suppress[slot] = len(matched) * T == L
+                boot.append((slot, int(toks[-1])))
+            else:
+                rows[slot, :L] = toks
+                admit[slot] = True
+                self._pos[slot] = L
+                base = slot * self.n_prompt_pages
+                # prefill writes only the pages this slot OWNS: matched
+                # prefix pages stay read-only (their bits are already
+                # identical), the tail past ceil(L/T) stays dropped.
+                for j in range(len(matched), len(row)):
+                    wp_flat[base + j] = row[j]
+        if self.pool is not None:
+            self._note_pool()
+
+        launched = bool(admit.any())
+        if launched:
+            batch = {"tokens": jnp.asarray(rows)}
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+            args = (self.dparams, batch, jnp.asarray(lens),
+                    jnp.asarray(admit), self.tokens, self.caches)
+            if self.pool is not None:
+                args += (jnp.asarray(wp_flat),)
+            self.tokens, self.caches = self._admit_fn(*args,
+                                                      self._next_key())
+            self.stats["prefill_launches"] += 1
+            self.stats["useful_tokens"] += int(admit.sum())
+        if boot:
+            tok_np = np.asarray(self.tokens).copy()
+            for slot, last in boot:
+                tok_np[slot, 0] = last
+            self.tokens = jnp.asarray(tok_np)
         tok_np = np.asarray(self.tokens[:, 0])
         for slot, rid in zip(free, take):
-            self._record(slot, int(tok_np[slot]))
-        return {"kind": "prefill", "admitted": list(take)}
+            if admit[slot]:
+                self._record(slot, int(tok_np[slot]))
+        return ({"kind": "prefill", "admitted": list(take)} if launched
+                else {"kind": "cached", "admitted": list(take)})
 
     def _decode_tick(self) -> dict:
         live = self._live.copy()
-        self.tokens, self.caches = self._step_fn(
-            self.dparams, self.tokens, self.caches,
-            jnp.asarray(self._pos, jnp.int32), jnp.asarray(live),
-            self._next_key())
+        if self.pool is not None:
+            # lazily map the page under each live slot's write position —
+            # the reservation gate guarantees this allocation succeeds
+            for slot in np.nonzero(live)[0]:
+                pidx = int(self._pos[slot]) // self.page_size
+                if self._pages[slot, pidx] == NULL_PAGE:
+                    (pg,) = self.pool.alloc(1)
+                    self._pages[slot, pidx] = pg
+                    self._slots[slot].mapped += 1
+                    self._reserved -= 1
+            self._note_pool()
+        live_write = live & ~self._suppress
+        args = (self.dparams, self.tokens, self.caches,
+                jnp.asarray(self._pos, jnp.int32), jnp.asarray(live_write))
+        if self.pool is not None:
+            args += (jnp.asarray(self._pages),)
+        self.tokens, self.caches = self._step_fn(*args, self._next_key())
         self.stats["decode_launches"] += 1
         n_live = int(live.sum())
         self.stats["useful_tokens"] += n_live
         self.stats["occupancy_sum"] += n_live / self.max_slots
         self._pos[live] += 1
+        self._suppress[live] = False
         tok_np = np.asarray(self.tokens[:, 0])
         for slot in np.nonzero(live)[0]:
             self._record(int(slot), int(tok_np[slot]))
@@ -312,6 +624,12 @@ class ServingEngine:
                 rid=st.rid, tokens=np.asarray(st.generated, np.int32),
                 prompt_len=st.prompt_len,
                 finish_reason="eos" if done_eos else "length"))
+            if self.pool is not None:
+                row = self._pages[slot]
+                self.pool.release(int(p) for p in row if p != NULL_PAGE)
+                self._pages[slot, :] = NULL_PAGE
+                self._reserved -= st.worst - st.mapped
+                self._note_pool()
             self._slots[slot] = None
             self._live[slot] = False
 

@@ -1,0 +1,36 @@
+"""Paged KV cache: fixed-size page allocator, radix prefix index, and the
+device-side page gather/scatter helpers.
+
+The dense ``(max_slots, max_len)`` slot pool budgets cache memory for the
+worst-case request and stores identical system-prompt prefixes once *per
+slot*.  This subsystem splits every slot ring into fixed-size **pages**:
+
+* :class:`PageAllocator` — free-list + per-page refcounts over one physical
+  page pool (page 0 is the reserved NULL page: never allocated, never
+  written, always zero — unmapped page-table entries point at it);
+* :class:`RadixIndex` — a radix tree over token sequences at page
+  granularity, so admission can map a request's already-cached prompt pages
+  copy-free (refcount bump, zero prefill FLOPs for the cached prefix);
+* :class:`PagePool` — the host-side coordinator the scheduler talks to:
+  longest-prefix match, acquire/alloc/release, and LRU reclaim of
+  refcount-0 radix-resident pages under allocation pressure;
+* :mod:`repro.cache.paged` — the jnp gather/scatter index plumbing that
+  keeps every serving launch fixed-shape (models/attention.py threads it
+  through ``gqa_decode``/``mla_decode``).
+
+Everything in allocator/radix/pool is pure host Python — the invariants
+(no double-free, refcounts zero exactly at last release, longest-prefix
+matching under interleavings) are tested without a device in
+tests/test_paged_cache.py.
+"""
+from repro.cache.allocator import (DoubleFree, NULL_PAGE, PageAllocator,
+                                   PageError, PagesExhausted)
+from repro.cache.paged import gather_pages, scatter_prefill, write_coords
+from repro.cache.pool import PagePool
+from repro.cache.radix import RadixIndex
+
+__all__ = [
+    "DoubleFree", "NULL_PAGE", "PageAllocator", "PageError",
+    "PagesExhausted", "PagePool", "RadixIndex",
+    "gather_pages", "scatter_prefill", "write_coords",
+]

@@ -1,15 +1,18 @@
 """Serving launcher: deployed mixed-precision model, request-level
-continuous batching over a slot-pooled KV cache (repro.api.ServingEngine).
+continuous batching over a paged KV cache (repro.api.ServingEngine).
 
 The deployed weights are the Sec. III-C output: channels reordered and
 grouped by searched bit-width, packed sub-byte, consumed as per-precision
 sub-GEMMs (kernels/quant_matmul.py on TPU; jnp fallback on CPU).  The
 launcher synthesizes a staggered-arrival trace (requests arriving over
-time with ragged prompt/output lengths) and serves it through the slot
-pool: finished slots are reclaimed and refilled without re-jitting, so
-prefill of new arrivals interleaves with decode of in-flight requests.
-``--lockstep`` runs the same trace through the deprecated
-``ServingSession`` wave loop for comparison.
+time with ragged prompt/output lengths) and serves it through the paged
+slot pool: finished slots are reclaimed and refilled without re-jitting,
+so prefill of new arrivals interleaves with decode of in-flight requests,
+and KV pages of repeated prompt prefixes are shared copy-free (radix
+index, ``--no-prefix-sharing`` to disable).  ``--page-size 0`` serves the
+dense per-slot rings instead.  ``--lockstep`` runs the same trace
+wave-at-a-time through the engine (submit a wave, drain it, repeat) — the
+shortest-job-barrier baseline continuous batching removes.
 
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \
@@ -19,13 +22,10 @@ from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.api.engine import ServingSession
 from repro.api.scheduler import Request, ServingEngine
 from repro.config import ARCH_IDS, get_config
 from repro.dist import sharding as shd
@@ -56,11 +56,34 @@ def build_trace(cfg, args, rng):
     return reqs, arrivals
 
 
+def _engine(cfg, dparams, args):
+    page_size = {0: None, -1: "auto"}.get(args.page_size, args.page_size)
+    return ServingEngine(cfg, dparams, backend=args.backend,
+                         max_slots=args.slots,
+                         max_len=args.prompt_len + args.gen,
+                         prefill_len=args.prompt_len,
+                         page_size=page_size,
+                         num_pages=args.num_pages or None,
+                         prefix_sharing=(False if args.no_prefix_sharing
+                                         else "auto"))
+
+
+def _paged_line(eng):
+    if eng.pool is None:
+        return "paged:      off (dense slot rings)"
+    st = eng.stats
+    return (f"paged:      page_size {eng.page_size}, peak "
+            f"{st['pages_peak']}/{eng.pool.capacity} pages, "
+            f"{st['prefix_hits']} prefix hits "
+            f"({st['zero_prefill_admits']} zero-prefill, "
+            f"{st['cached_tokens']} cached tokens), "
+            f"{st['evictions']} evictions, "
+            f"{st['deferred_admissions']} deferred — resident KV "
+            f"{eng.kv_bytes_resident()} B vs dense {eng.kv_bytes_dense()} B")
+
+
 def run_continuous(cfg, dparams, reqs, arrivals, args):
-    eng = ServingEngine(cfg, dparams, backend=args.backend,
-                        max_slots=args.slots,
-                        max_len=args.prompt_len + args.gen,
-                        prefill_len=args.prompt_len)
+    eng = _engine(cfg, dparams, args)
     t0 = time.time()
     outs = eng.run(reqs, arrivals)
     dt = time.time() - t0
@@ -73,31 +96,30 @@ def run_continuous(cfg, dparams, reqs, arrivals, args):
           f"{st['prefill_launches']} prefills + {st['decode_launches']} "
           f"decode steps = {steps} launches, slot occupancy {occ:.2f}, "
           f"jit entries {eng.compile_counts()}")
+    print(_paged_line(eng))
     first = outs[0]
     print("sample token ids:", first.tokens[:16])
     return dt, st["useful_tokens"]
 
 
 def run_lockstep(cfg, dparams, reqs, args):
-    """Wave-at-a-time baseline: pad each wave to one batch, decode to the
-    wave's longest request (the shortest-job barrier the engine removes)."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        sess = ServingSession(cfg, dparams, backend=args.backend)
-    B, P = args.slots, args.prompt_len
-    t0, useful, steps = time.time(), 0, 0
+    """Wave-at-a-time baseline: submit one wave, drain it to completion,
+    repeat — every wave prefills together and idles behind its longest
+    request (the shortest-job barrier continuous batching removes).  Same
+    engine, same executables; only the schedule differs."""
+    eng = _engine(cfg, dparams, args)
+    B = args.slots
+    t0, useful = time.time(), 0
     for w0 in range(0, len(reqs), B):
         wave = reqs[w0:w0 + B]
-        rows = np.zeros((B, P), np.int32)
-        for i, r in enumerate(wave):
-            rows[i, :len(r.tokens)] = r.tokens
-        gen = max(r.max_tokens for r in wave) - 1
-        toks, _ = sess.generate({"tokens": jnp.asarray(rows)}, gen=gen,
-                                max_len=P + args.gen)
-        jax.block_until_ready(toks)
-        useful += sum(r.max_tokens for r in wave)
-        steps += 1 + gen
+        for r in wave:
+            eng.submit(r)
+        while eng.has_work():
+            eng.step()
+        useful += sum(len(o.tokens) for o in eng.collect())
     dt = time.time() - t0
+    st = eng.stats
+    steps = st["prefill_launches"] + st["decode_launches"]
     print(f"lockstep:   {len(reqs)} requests, {useful} useful tokens in "
           f"{dt:.2f}s ({useful / dt:.1f} tok/s) over {steps} launches")
     return dt, useful
@@ -114,8 +136,14 @@ def main() -> None:
     p.add_argument("--stagger", type=int, default=8,
                    help="arrival window in scheduler ticks")
     p.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    p.add_argument("--page-size", type=int, default=-1,
+                   help="KV page size in tokens (-1 auto, 0 dense rings)")
+    p.add_argument("--num-pages", type=int, default=0,
+                   help="physical page pool size (0 = default sizing)")
+    p.add_argument("--no-prefix-sharing", action="store_true",
+                   help="disable the radix prompt-prefix index")
     p.add_argument("--lockstep", action="store_true",
-                   help="also run the deprecated ServingSession wave loop")
+                   help="also run the wave-at-a-time lockstep baseline")
     p.add_argument("--production-mesh", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()

@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.cache import paged
 from repro.dist.sharding import constrain
 from repro.api.policy import PrecisionPolicy
 from repro.models import layers as L
@@ -221,7 +222,9 @@ def slot_write_pos(pos: jnp.ndarray, live: Optional[jnp.ndarray],
 
 def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
                pos: jnp.ndarray, dq_linear,
-               live: Optional[jnp.ndarray] = None
+               live: Optional[jnp.ndarray] = None,
+               pages: Optional[jnp.ndarray] = None,
+               page_size: Optional[int] = None
                ) -> tuple[jnp.ndarray, dict]:
     """One-token decode with int8 KV cache, per-slot positions.
 
@@ -233,6 +236,14 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
     untouched).  ``dq_linear`` is the linear application function for the
     deployed weight format (see models/serving.py) — this function is
     format-agnostic.
+
+    ``pages``: optional (B, P) int32 page table for the **paged** cache
+    (repro/cache): the cache leaves then hold physical pages ``(num_pages,
+    KV, page_size, hd)`` instead of per-slot rings; row ``b``'s write
+    scatters into page ``pages[b, pos[b] // page_size]`` and attention
+    gathers its ring view through the table.  The gathered view is exactly
+    the dense ``(B, KV, P*page_size, hd)`` ring, so the attention math —
+    and its bits — are identical to the dense path.
     """
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -251,20 +262,39 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
     # append new kv (int8), one ring index per slot
     kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))    # (B, KV, 1, hd)
     vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
-    S = cache["k"].shape[2]
-    bidx = jnp.arange(B)
-    wpos = slot_write_pos(pos, live, S)
-    cache = {
-        "k": cache["k"].at[bidx, :, wpos].set(kq[:, :, 0], mode="drop"),
-        "v": cache["v"].at[bidx, :, wpos].set(vq[:, :, 0], mode="drop"),
-        "k_scale": cache["k_scale"].at[bidx, :, wpos].set(ks[:, :, 0],
-                                                          mode="drop"),
-        "v_scale": cache["v_scale"].at[bidx, :, wpos].set(vs[:, :, 0],
-                                                          mode="drop"),
-    }
+    if pages is None:
+        S = cache["k"].shape[2]
+        bidx = jnp.arange(B)
+        wpos = slot_write_pos(pos, live, S)
+        cache = {
+            "k": cache["k"].at[bidx, :, wpos].set(kq[:, :, 0], mode="drop"),
+            "v": cache["v"].at[bidx, :, wpos].set(vq[:, :, 0], mode="drop"),
+            "k_scale": cache["k_scale"].at[bidx, :, wpos].set(ks[:, :, 0],
+                                                              mode="drop"),
+            "v_scale": cache["v_scale"].at[bidx, :, wpos].set(vs[:, :, 0],
+                                                              mode="drop"),
+        }
+        ki, vi, ksc, vsc = (cache["k"], cache["v"],
+                            cache["k_scale"], cache["v_scale"])
+    else:
+        NP = cache["k"].shape[0]
+        S = pages.shape[1] * page_size
+        phys, off = paged.write_coords(pos, live, pages, page_size, NP)
+        cache = {
+            "k": cache["k"].at[phys, :, off].set(kq[:, :, 0], mode="drop"),
+            "v": cache["v"].at[phys, :, off].set(vq[:, :, 0], mode="drop"),
+            "k_scale": cache["k_scale"].at[phys, :, off].set(ks[:, :, 0],
+                                                             mode="drop"),
+            "v_scale": cache["v_scale"].at[phys, :, off].set(vs[:, :, 0],
+                                                             mode="drop"),
+        }
+        ki = paged.gather_pages(cache["k"], pages)       # (B, KV, S, hd)
+        vi = paged.gather_pages(cache["v"], pages)
+        ksc = paged.gather_pages(cache["k_scale"], pages)
+        vsc = paged.gather_pages(cache["v_scale"], pages)
     rep = H // KV
-    kf = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(cd)
-    vf = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(cd)
+    kf = (ki.astype(jnp.float32) * ksc).astype(cd)
+    vf = (vi.astype(jnp.float32) * vsc).astype(cd)
     qh = q.transpose(0, 2, 1, 3)                          # (B, H, 1, hd)
     # grouped score: expand kv heads to full head count
     kfe = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf  # (B, H, S, hd)
@@ -338,13 +368,17 @@ def init_mla_cache(cfg, batch: int, max_len: int) -> dict:
 
 
 def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
-               dq_linear, live: Optional[jnp.ndarray] = None
+               dq_linear, live: Optional[jnp.ndarray] = None,
+               pages: Optional[jnp.ndarray] = None,
+               page_size: Optional[int] = None
                ) -> tuple[jnp.ndarray, dict]:
     """One-token MLA decode, fully packed, per-slot positions.
 
     ``pos`` is a (B,) int32 position vector (see :func:`gqa_decode`): each
     row writes its latent at its own ring index and attends to its own
-    history; ``live=False`` rows drop their write.
+    history; ``live=False`` rows drop their write.  ``pages (B, P)`` turns
+    the cache leaves into page pools (``(num_pages, page_size, feat)``) and
+    routes writes/reads through the table exactly as in :func:`gqa_decode`.
 
     The pre-PR4 path "absorbed" ``wkv_b`` per head (W_uk / W_uv) from a
     dense ``(c_out, c_in)`` view — re-materializing the full bf16 weight on
@@ -388,27 +422,44 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], cos, sin, rot)[:, :, 0]
 
     qc, qs = quant_per_token(c_kv)
-    S = cache["ckv"].shape[1]
-    bidx = jnp.arange(B)
-    wpos = slot_write_pos(pos, live, S)
-    cache = {
-        "ckv": cache["ckv"].at[bidx, wpos].set(qc[:, 0], mode="drop"),
-        "ckv_scale": cache["ckv_scale"].at[bidx, wpos].set(qs[:, 0],
-                                                           mode="drop"),
-        "krope": cache["krope"].at[bidx, wpos].set(
-            k_rope_new[:, 0].astype(jnp.bfloat16), mode="drop"),
-    }
+    if pages is None:
+        S = cache["ckv"].shape[1]
+        bidx = jnp.arange(B)
+        wpos = slot_write_pos(pos, live, S)
+        cache = {
+            "ckv": cache["ckv"].at[bidx, wpos].set(qc[:, 0], mode="drop"),
+            "ckv_scale": cache["ckv_scale"].at[bidx, wpos].set(qs[:, 0],
+                                                               mode="drop"),
+            "krope": cache["krope"].at[bidx, wpos].set(
+                k_rope_new[:, 0].astype(jnp.bfloat16), mode="drop"),
+        }
+        ckv_i, ckv_s, krope_i = (cache["ckv"], cache["ckv_scale"],
+                                 cache["krope"])
+    else:
+        NP = cache["ckv"].shape[0]
+        S = pages.shape[1] * page_size
+        phys, off = paged.write_coords(pos, live, pages, page_size, NP)
+        cache = {
+            "ckv": cache["ckv"].at[phys, off].set(qc[:, 0], mode="drop"),
+            "ckv_scale": cache["ckv_scale"].at[phys, off].set(qs[:, 0],
+                                                              mode="drop"),
+            "krope": cache["krope"].at[phys, off].set(
+                k_rope_new[:, 0].astype(jnp.bfloat16), mode="drop"),
+        }
+        ckv_i = paged.gather_pages(cache["ckv"], pages)      # (B, S, kvr)
+        ckv_s = paged.gather_pages(cache["ckv_scale"], pages)
+        krope_i = paged.gather_pages(cache["krope"], pages)
 
     # expand latents to per-head K/V through the packed low-rank factor:
     # ckv (B, S, kvr) -> (B, S, H, nope + vd), weights streaming sub-byte
-    ckv_f = (cache["ckv"].astype(jnp.float32) * cache["ckv_scale"]).astype(cd)
+    ckv_f = (ckv_i.astype(jnp.float32) * ckv_s).astype(cd)
     kv = dq_linear(ckv_f, p["wkv_b"]).reshape(B, S, H, nope + vd)
     k_nope, v = kv[..., :nope], kv[..., nope:]
 
     s = jnp.einsum("bqhn,bkhn->bhqk", q_nope.astype(cd),
                    k_nope.astype(cd)).astype(jnp.float32)
     s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(cd),
-                       cache["krope"].astype(cd)).astype(jnp.float32)
+                       krope_i.astype(cd)).astype(jnp.float32)
     s = s / math.sqrt(nope + rope)
     valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
     s = jnp.where(valid, s, -jnp.inf)

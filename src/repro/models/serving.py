@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.qtensor import QTensor
+from repro.cache import paged
 from repro.core import quantizers as qz
 from repro.models import attention as attn
 from repro.models import layers as L
@@ -648,11 +649,106 @@ def init_caches(cfg, batch: int, max_len: int):
         # weights over encoder positions — a shape stand-in for decode-only
         # dry-runs, never a real serving state.  Real generation embeds the
         # prefill's encoder-built cross cache over these zeros
-        # (api.engine.ServingSession._embed_caches).
+        # (embed_caches / merge_paged_caches).
         return jax.tree_util.tree_map(
             lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype),
             {"self": self_c, "cross": cross_c})
     raise ValueError(cfg.family)
+
+
+def supports_paging(cfg) -> bool:
+    """Whether the family has a ring axis the paged KV cache can page.
+
+    ``ssm`` is pure recurrent state (no per-token ring), so the engine
+    silently serves it dense; ``hybrid`` pages only its attention subtree
+    and ``audio`` only the decoder self-attention ring (the cross cache is
+    encoder-length per slot, written once at admission).
+    """
+    return cfg.family in ("dense", "vlm", "moe", "hybrid", "audio")
+
+
+def init_paged_caches(cfg, max_slots: int, num_pages: int, page_size: int):
+    """Paged serving caches: ring leaves become physical page pools.
+
+    Each paged leaf swaps its per-slot ``(max_slots, .., max_len, F)`` ring
+    for ``(num_pages, .., page_size, F)`` — same tree structure as
+    :func:`init_caches`, so the decode scan is unchanged; only the batch
+    axis meaning differs (physical pages indexed through the scheduler's
+    page table instead of slots).  Page 0 is the NULL page: never written,
+    always zero (repro/cache).  Non-ring leaves (hybrid SSM state, audio
+    cross caches) keep their per-slot layout.
+    """
+    stackN = lambda one, n: jax.tree_util.tree_map(
+        lambda t: jnp.zeros((n,) + t.shape, t.dtype), one)
+    if cfg.family in ("dense", "vlm", "moe"):
+        one = (attn.init_mla_cache(cfg, num_pages, page_size) if cfg.use_mla
+               else attn.init_gqa_cache(cfg, num_pages, page_size))
+        return stackN(one, cfg.n_layers)
+    if cfg.family == "hybrid":
+        n_groups = -(-cfg.n_layers // cfg.attn_every)
+        return {
+            "ssm": stackN(ssm_mod.init_ssm_cache(cfg, max_slots),
+                          cfg.n_layers),
+            "attn": stackN(attn.init_gqa_cache(cfg, num_pages, page_size),
+                           n_groups),
+        }
+    if cfg.family == "audio":
+        # cross keeps the zero-scale stand-in contract of init_caches; real
+        # serving admit-merges the prefill's encoder-built cross cache in.
+        return stackN({"self": attn.init_gqa_cache(cfg, num_pages, page_size),
+                       "cross": attn.init_gqa_cache(cfg, max_slots,
+                                                    cfg.encoder_seq)},
+                      cfg.n_layers)
+    raise ValueError(f"family {cfg.family!r} has no paged cache layout "
+                     "(see supports_paging)")
+
+
+def paged_leaf_mask(cfg):
+    """Bool tree over the serving cache structure: True = page-pool leaf
+    (indexed through the page table), False = per-slot leaf (admit-merged
+    and decoded exactly as in the dense engine)."""
+    tmap = jax.tree_util.tree_map
+    if cfg.family in ("dense", "vlm", "moe"):
+        one = (attn.init_mla_cache(cfg, 1, 1) if cfg.use_mla
+               else attn.init_gqa_cache(cfg, 1, 1))
+        return tmap(lambda t: True, one)
+    if cfg.family == "hybrid":
+        return {"ssm": tmap(lambda t: False, ssm_mod.init_ssm_cache(cfg, 1)),
+                "attn": tmap(lambda t: True, attn.init_gqa_cache(cfg, 1, 1))}
+    if cfg.family == "audio":
+        one = attn.init_gqa_cache(cfg, 1, 1)
+        return {"self": tmap(lambda t: True, one),
+                "cross": tmap(lambda t: False, one)}
+    raise ValueError(f"family {cfg.family!r} has no paged cache layout "
+                     "(see supports_paging)")
+
+
+def merge_paged_caches(cfg, prefill_caches, caches, admit, wp_flat):
+    """Admit a prefill into the paged caches — the paged counterpart of
+    ``embed_caches`` + where-merge in the dense engine.
+
+    Page-pool leaves scatter whole prompt pages through ``wp_flat (B *
+    n_pp,)`` (``cache.paged.scatter_prefill``): non-admitted slots, junk
+    tails past short prompts and prefix-shared (read-only) pages carry the
+    out-of-bounds sentinel and are dropped.  Per-slot leaves (hybrid SSM
+    state, audio cross) right-pad to the ring shape and where-merge on
+    ``admit (B,) bool`` exactly as the dense engine does, preserving
+    non-admitted slots bit-for-bit.
+    """
+    def one(m, pc, full):
+        if m:
+            return paged.scatter_prefill(full, pc, wp_flat)
+        if pc.shape != full.shape:
+            diff = [i for i, (a, b) in enumerate(zip(pc.shape, full.shape))
+                    if a != b]
+            assert len(diff) == 1, (pc.shape, full.shape)
+            widths = [(0, 0)] * pc.ndim
+            widths[diff[0]] = (0, full.shape[diff[0]] - pc.shape[diff[0]])
+            pc = jnp.pad(pc, widths)
+        sel = admit.reshape((1, -1) + (1,) * (pc.ndim - 2))
+        return jnp.where(sel, pc.astype(full.dtype), full)
+    return jax.tree_util.tree_map(one, paged_leaf_mask(cfg),
+                                  prefill_caches, caches)
 
 
 def embed_caches(prefill_caches, ring):
@@ -660,9 +756,11 @@ def embed_caches(prefill_caches, ring):
 
     Each leaf differs from its ring counterpart in at most the sequence
     axis; zero-padding IS the empty-slot convention (decode masks by
-    position), so generation really attends to the prompt.  Moved here
-    from ``ServingSession`` so the request-level scheduler
-    (api/scheduler.py) and the lockstep session share one embedding rule.
+    position), so generation really attends to the prompt.  One embedding
+    rule shared by the request-level scheduler's dense mode
+    (api/scheduler.py) and the lockstep oracle loops over
+    ``engine.serving_jits`` (paged engines merge via
+    :func:`merge_paged_caches` instead).
     """
     def one(pc, full):
         if pc.shape == full.shape:
@@ -696,7 +794,7 @@ def _cross_decode(p, cfg, x, cache, backend):
 
 
 def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
-                live=None):
+                live=None, pages=None, page_size=None):
     """One decode step: tokens (B, 1) -> (logits (B,1,V), caches').
 
     ``pos`` is a **per-slot position vector** (B,) int32: row ``b`` writes
@@ -710,6 +808,12 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
     (freed slots awaiting re-admission) leave every cache untouched:
     attention/MLA ring writes are dropped and SSM state updates are
     slot-masked.  Their logits row is garbage and must be ignored.
+
+    ``pages``: optional (B, P) int32 page table — ``caches`` then hold the
+    paged layout of :func:`init_paged_caches` (``P * page_size ==
+    max_len``) and every ring read/write routes through the table; the
+    gathered per-slot view is exactly the dense ring, so logits are
+    bit-identical to the dense path.  Non-ring leaves ignore the table.
     """
     cd = cfg.cdtype
     dq = _dq(cd, backend)
@@ -724,9 +828,11 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             if cfg.use_mla:
-                a, c2 = attn.mla_decode(p["attn"], cfg, hn, c, pos, dq, live)
+                a, c2 = attn.mla_decode(p["attn"], cfg, hn, c, pos, dq, live,
+                                        pages, page_size)
             else:
-                a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq, live)
+                a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq, live,
+                                        pages, page_size)
             h = h + a.astype(h.dtype)
             f = _deployed_ffn_full(p["ffn"], cfg,
                                    L.apply_norm(h, p["ln2"], cfg.norm), backend)
@@ -747,7 +853,8 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
             c_att = jax.tree_util.tree_map(lambda t: t[g], caches["attn"])
             hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
             a, c2 = attn.gqa_decode(dparams["shared_attn"]["attn"], cfg,
-                                    hn, c_att, pos, dq, live)
+                                    hn, c_att, pos, dq, live, pages,
+                                    page_size)
             x = x + a.astype(x.dtype)
             f = _deployed_ffn_full(
                 dparams["shared_attn"]["ffn"], cfg,
@@ -777,7 +884,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c["self"], pos, dq,
-                                    live)
+                                    live, pages, page_size)
             h = h + a.astype(h.dtype)
             xa = _cross_decode(p["xattn"], cfg,
                                L.apply_norm(h, p["ln2"], cfg.norm), c["cross"],

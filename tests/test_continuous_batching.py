@@ -2,21 +2,24 @@
 
 The continuous-batching redesign (api/scheduler.py) must not change a
 single token: with equal-length synchronized requests ``ServingEngine.run``
-is operand-for-operand the lockstep ``ServingSession.generate`` loop, so
-its tokens must be **bit-identical**; on staggered traces every request
-must decode as if it were alone in the pool (per-slot positions + live
-masks isolate slots), so each output must match a per-request lockstep
-generate token-for-token and be independent of co-scheduled slot contents.
+is operand-for-operand a lockstep prefill+decode loop over the shared
+``engine.serving_jits`` executables, so its tokens must be
+**bit-identical**; on staggered traces every request must decode as if it
+were alone in the pool (per-slot positions + live masks isolate slots), so
+each output must match a per-request lockstep generate token-for-token and
+be independent of co-scheduled slot contents.  The engines here run the
+default **paged** KV cache (PR 6) where the family supports it — the
+dense-vs-paged bit-parity guards live in tests/test_paged_cache.py.
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api.engine import ServingSession, serving_jits
+import repro.api.engine as engine_mod
+from repro.api.engine import serving_jits
 from repro.api.sampling import GREEDY, SamplingParams, sample
 from repro.api.scheduler import Request, ServingEngine
 from repro.config import get_config
@@ -38,10 +41,31 @@ def _setup(arch, seed=0, **overrides):
     return _CFG_CACHE[key]
 
 
-def _session(cfg, dp, backend):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return ServingSession(cfg, dp, backend=backend)
+def _lockstep_generate(cfg, dp, batch, gen, max_len, backend="jnp",
+                       sampling=GREEDY, key=None):
+    """Lockstep oracle: one shared prefill, then ``gen`` synchronized
+    decode steps over the module-cached ``serving_jits`` executables —
+    the ~10-line loop that replaced the removed ``ServingSession``.
+    Returns tokens (B, gen+1) including the prefill-sampled one."""
+    fns = serving_jits(cfg, backend)
+    B, S = batch["tokens"].shape
+    if sampling.kind != "greedy" and key is None:
+        key = jax.random.PRNGKey(0)
+    logits, pf = fns["prefill"](dp, batch)
+    caches = serving.embed_caches(pf, serving.init_caches(cfg, B, max_len))
+    if key is not None:
+        key, k0 = jax.random.split(key)
+    tokens = sample(logits[:, -1:], sampling, None if key is None else k0)
+    out = [tokens]
+    for i in range(gen):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, caches = fns["decode"](dp, tokens, caches, pos)
+        if key is not None:
+            key, ki = jax.random.split(key)
+        tokens = sample(logits[:, -1:], sampling,
+                        None if key is None else ki)
+        out.append(tokens)
+    return jnp.concatenate(out, axis=1)
 
 
 def _prompts(cfg, shape, seed):
@@ -50,7 +74,7 @@ def _prompts(cfg, shape, seed):
 
 
 # ---------------------------------------------------------------------------
-# Equal-length synchronized requests: bit-identical to the lockstep session
+# Equal-length synchronized requests: bit-identical to the lockstep loop
 # ---------------------------------------------------------------------------
 
 SYNC_CASES = [
@@ -66,8 +90,8 @@ def test_sync_requests_bit_identical_to_lockstep(arch, backend):
     cfg, dp = _setup(arch)
     B, S, G = (2, 4, 3) if backend == "pallas" else (2, 8, 6)
     toks = _prompts(cfg, (B, S), seed=1)
-    ref, _ = _session(cfg, dp, backend).generate(
-        {"tokens": jnp.asarray(toks)}, gen=G - 1, max_len=S + G)
+    ref = _lockstep_generate(cfg, dp, {"tokens": jnp.asarray(toks)},
+                             gen=G - 1, max_len=S + G, backend=backend)
     eng = ServingEngine(cfg, dp, backend=backend, max_slots=B,
                         max_len=S + G, prefill_len=S)
     outs = eng.run([Request(toks[i], max_tokens=G) for i in range(B)])
@@ -103,10 +127,10 @@ def test_staggered_matches_per_request_generate(arch):
     eng = ServingEngine(cfg, dp, backend="jnp", max_slots=STAGGER["B"],
                         max_len=STAGGER["M"], prefill_len=STAGGER["P"])
     outs = eng.run(reqs, STAGGER["arrivals"])
-    sess = _session(cfg, dp, "jnp")
     for i, r in enumerate(reqs):
-        ref, _ = sess.generate({"tokens": jnp.asarray(r.tokens)[None]},
-                               gen=r.max_tokens - 1, max_len=STAGGER["M"])
+        ref = _lockstep_generate(cfg, dp,
+                                 {"tokens": jnp.asarray(r.tokens)[None]},
+                                 gen=r.max_tokens - 1, max_len=STAGGER["M"])
         np.testing.assert_array_equal(
             outs[i].tokens, np.asarray(ref[0]),
             err_msg=f"request {i} diverged from its per-request lockstep "
@@ -117,7 +141,7 @@ def test_staggered_matches_per_request_generate(arch):
 def test_staggered_outputs_independent_of_coscheduled_slots():
     """The same request must produce the same tokens no matter what shares
     the pool with it: different co-requests, arrival patterns and queueing
-    pressure may not leak into a slot (per-slot masks + ring writes)."""
+    pressure may not leak into a slot (per-slot masks + page tables)."""
     cfg, dp = _setup("qwen1.5-4b")
     probe = Request(_prompts(cfg, (7,), seed=3), max_tokens=8)
 
@@ -176,20 +200,24 @@ def test_zero_recompiles_after_warmup():
         "slot-pool serving recompiled after warmup"
 
 
-def test_session_construction_reuses_module_jits():
-    """Satellite: ServingSession.__init__ used to build fresh jit wrappers
-    per instance (recompile per session); they are module-cached now."""
+def test_engine_construction_reuses_module_jits():
+    """Satellite: serving executables are module-cached — constructing a
+    second engine (or calling serving_jits twice) must reuse the same
+    compiled wrappers, never rebuild them per instance."""
     cfg, dp = _setup("qwen1.5-4b")
-    s1 = _session(cfg, dp, "jnp")
-    s2 = _session(cfg, dp, "jnp")
-    assert s1.prefill is s2.prefill and s1.decode is s2.decode
-    assert serving_jits(cfg, "jnp")["prefill"] is s1.prefill
+    assert serving_jits(cfg, "jnp")["prefill"] \
+        is serving_jits(cfg, "jnp")["prefill"]
+    mk = lambda: ServingEngine(cfg, dp, backend="jnp", max_slots=2,
+                               max_len=24, prefill_len=8)
+    e1, e2 = mk(), mk()
+    assert e1._admit_fn is e2._admit_fn and e1._step_fn is e2._step_fn
 
 
-def test_session_emits_deprecation_warning():
-    cfg, dp = _setup("qwen1.5-4b")
-    with pytest.warns(DeprecationWarning, match="ServingEngine"):
-        ServingSession(cfg, dp, backend="jnp")
+def test_serving_session_is_removed():
+    """Satellite: the deprecated lockstep ServingSession (PR 5) is gone —
+    request-level serving goes through ServingEngine, lockstep baselines
+    through serving_jits loops."""
+    assert not hasattr(engine_mod, "ServingSession")
 
 
 # ---------------------------------------------------------------------------
@@ -296,15 +324,17 @@ def test_sampling_validation():
         sample(jnp.zeros((2, 4)), SamplingParams(kind="temperature"))
 
 
-def test_session_generate_with_sampling_params():
-    """The session consumes the shared helper too (satellite): stochastic
-    generation is deterministic per key and shaped like greedy."""
+def test_lockstep_generate_with_sampling_params():
+    """The lockstep oracle consumes the shared helper too (satellite):
+    stochastic generation is deterministic per key and shaped like
+    greedy."""
     cfg, dp = _setup("qwen1.5-4b")
-    sess = _session(cfg, dp, "jnp")
     batch = {"tokens": jnp.asarray(_prompts(cfg, (2, 8), seed=9))}
     p = SamplingParams(kind="top_k", top_k=4, temperature=0.9)
-    t1, _ = sess.generate(batch, gen=3, key=jax.random.PRNGKey(0), sampling=p)
-    t2, _ = sess.generate(batch, gen=3, key=jax.random.PRNGKey(0), sampling=p)
+    t1 = _lockstep_generate(cfg, dp, batch, gen=3, max_len=12,
+                            key=jax.random.PRNGKey(0), sampling=p)
+    t2 = _lockstep_generate(cfg, dp, batch, gen=3, max_len=12,
+                            key=jax.random.PRNGKey(0), sampling=p)
     np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
     assert t1.shape == (2, 4)
 

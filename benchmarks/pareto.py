@@ -8,6 +8,10 @@ both dominating fixed precision — are what this benchmark measures.
 
 Run:  PYTHONPATH=src python -m benchmarks.pareto [--task dae-ad] [--fast]
 Output: CSV rows  task,method,lambda,metric,size_bits,energy
+
+`--kv-cache` runs the serving-side analog instead: the channel-wise
+bit-assignment applied to the KV cache (`kv_bits` policies vs the int8
+baseline), reporting token agreement against cache bytes.
 """
 from __future__ import annotations
 
@@ -81,6 +85,63 @@ def fixed_baseline(task: str, w_bits: int, x_bits: int,
     return metric, size, energy
 
 
+def kv_cache_sweep(fast: bool = False) -> list[str]:
+    """Serving-side Pareto: token fidelity vs KV-cache bytes under `kv_bits`.
+
+    The training sweep above trades task metric against weight bits; this
+    is the same trade applied to the *cache* (models/kv_quant.py).  Each
+    policy serves the identical staggered paged trace as an int8 baseline
+    engine (same backend, same seeds) and reports how many generated
+    tokens agree with the baseline before first divergence, next to the
+    dense and peak-resident cache cost — 8-bit sits at exact parity by
+    construction, sub-byte rows trade tokens for bytes.
+    """
+    from repro.api.scheduler import Request, ServingEngine
+    from repro.config import get_config
+    from repro.models import serving as msrv
+
+    rows = ["arch,kv_bits,agree_tok,total_tok,first_div,"
+            "kv_dense_kB,kv_peak_kB"]
+    archs = ["qwen1.5-4b"] if fast else ["qwen1.5-4b", "deepseek-v3-671b"]
+    B, P, G = 3, 8, 12
+    mts = [10, 3, 6, 4, 8, 5]
+    arrivals = [0, 0, 1, 3, 5, 7]
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        dp = msrv.init_deployed_model(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, (P,)).astype(np.int32)
+                   for _ in mts]
+
+        def run(kv_bits):
+            eng = ServingEngine(cfg, dp, backend="jnp", max_slots=B,
+                                max_len=P + G, prefill_len=P,
+                                kv_bits=kv_bits)
+            outs = eng.run([Request(p, max_tokens=m)
+                            for p, m in zip(prompts, mts)], arrivals)
+            return eng, [outs[i].tokens.tolist() for i in range(len(mts))]
+
+        _, base = run(None)
+        total = sum(len(t) for t in base)
+        for kv_bits in (None, 8, (4, 8), 4, (2, 4, 8), 2):
+            eng, toks = run(kv_bits)
+            agree, first_div = 0, -1
+            for off, (b, t) in enumerate(zip(base, toks)):
+                n = next((i for i, (x, y) in enumerate(zip(b, t)) if x != y),
+                         min(len(b), len(t)))
+                agree += n
+                if n < len(b) and first_div < 0:
+                    first_div = n
+            tag = ("int8" if kv_bits is None else
+                   "-".join(str(b) for b in kv_bits)
+                   if isinstance(kv_bits, tuple) else str(kv_bits))
+            rows.append(f"{arch},{tag},{agree},{total},{first_div},"
+                        f"{eng.kv_bytes_dense() / 1e3:.2f},"
+                        f"{eng.kv_bytes_peak() / 1e3:.2f}")
+            print(rows[-1], flush=True)
+    return rows
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--task", default="dae-ad",
@@ -90,8 +151,18 @@ def main(argv=None) -> None:
     p.add_argument("--lambdas", default="1e-8,1e-5,1e-4,1e-3")
     p.add_argument("--fast", action="store_true",
                    help="1-epoch phases, small data (CI speed)")
+    p.add_argument("--kv-cache", action="store_true",
+                   help="sweep serving KV-cache bit policies instead of "
+                        "the weight-precision search")
     p.add_argument("--out", default=None)
     args = p.parse_args(argv)
+
+    if args.kv_cache:
+        rows = kv_cache_sweep(fast=args.fast)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write("\n".join(rows) + "\n")
+        return
 
     epochs = (1, 2, 1) if args.fast else (2, 6, 2)
     n_data = 96 if args.fast else 512

@@ -357,6 +357,79 @@ def bench_paged_cache(smoke: bool = False) -> list[str]:
     return rows
 
 
+def bench_kv_quant(smoke: bool = False) -> list[str]:
+    """Channel-wise packed KV cache vs the legacy int8 rings.
+
+    The paper's per-channel bit assignment applied to the cache itself
+    (models/kv_quant.py): rings store packed sub-byte channel groups and
+    decode attention dequantizes per tile — in VMEM under
+    ``backend="pallas"`` (kernels/decode_attention.py).  All variants serve
+    the SAME staggered paged trace as an int8 baseline engine on the same
+    backend (backends may differ from EACH OTHER in low bf16 bits of the
+    linears; within a backend the packed cache must change nothing).  Smoke
+    gates (deterministic): 8-bit packed engines (jnp AND fused pallas) are
+    token-for-token their backend's int8 engine, zero recompiles after
+    warmup, and the 4-bit pool prices strictly below int8 on both the
+    dense-ring baseline and the peak resident pages.
+    """
+    from repro.api.scheduler import Request, ServingEngine
+    from repro.config import get_config
+    from repro.models import serving
+    rows = ["kv_quant:mode,prefills,decode_steps,useful_tok,kv_dense_kB,"
+            "kv_peak_kB,match_int8,recompiles"]
+    cfg = get_config("qwen1.5-4b").reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    B, P, G = 3, 8, 12
+    max_len = P + G                             # auto page_size
+    rng = np.random.default_rng(0)
+    mts = [10, 3, 6, 4, 8, 5]
+    arrivals = [0, 0, 1, 3, 5, 7]
+    prompts = [rng.integers(0, cfg.vocab_size, (P,)).astype(np.int32)
+               for _ in mts]
+
+    def run(kv_bits, backend):
+        eng = ServingEngine(cfg, dp, backend=backend, max_slots=B,
+                            max_len=max_len, prefill_len=P, kv_bits=kv_bits)
+        outs = eng.run([Request(p, max_tokens=m)
+                        for p, m in zip(prompts, mts)], arrivals)
+        return eng, [outs[i].tokens.tolist() for i in range(len(mts))]
+
+    base = {bk: run(None, bk)[1] for bk in ("jnp", "pallas")}
+    results = {}
+    for mode, kv_bits, backend in [("int8", None, "jnp"),
+                                   ("packed8-jnp", 8, "jnp"),
+                                   ("packed8-pallas", 8, "pallas"),
+                                   ("packed4", 4, "jnp"),
+                                   ("packed2-4-8", (2, 4, 8), "jnp")]:
+        eng, toks = run(kv_bits, backend)      # jits warmed by earlier runs
+        warm = eng.compile_counts()
+        eng, toks = run(kv_bits, backend)      # steady state
+        rec = sum(eng.compile_counts().values()) - sum(warm.values())
+        st = eng.stats
+        match = toks == base[backend]
+        results[mode] = (eng, match, rec)
+        rows.append(
+            f"kv_quant:{mode},{st['prefill_launches']},"
+            f"{st['decode_launches']},{st['useful_tokens']},"
+            f"{eng.kv_bytes_dense() / 1e3:.2f},"
+            f"{eng.kv_bytes_peak() / 1e3:.2f},{int(match)},{rec}")
+    if smoke:
+        for mode in ("packed8-jnp", "packed8-pallas"):
+            eng, match, rec = results[mode]
+            if not match:
+                raise SystemExit(f"{mode} diverged from the int8 engine")
+            if rec != 0:
+                raise SystemExit(f"{mode} recompiled after warmup: {rec}")
+        e4, e8 = results["packed4"][0], results["int8"][0]
+        if not (e4.kv_bytes_dense() < e8.kv_bytes_dense()
+                and e4.kv_bytes_peak() < e8.kv_bytes_peak()):
+            raise SystemExit(
+                f"4-bit cache not strictly below int8: dense "
+                f"{e4.kv_bytes_dense()} vs {e8.kv_bytes_dense()}, peak "
+                f"{e4.kv_bytes_peak()} vs {e8.kv_bytes_peak()}")
+    return rows
+
+
 def bench_serving(smoke: bool = False) -> list[str]:
     from repro.config import get_config
     from repro.models import serving
@@ -404,6 +477,7 @@ SECTIONS = {
     "moe_decode": bench_moe_decode,
     "continuous_batching": bench_continuous_batching,
     "paged_cache": bench_paged_cache,
+    "kv_quant": bench_kv_quant,
     "serving": bench_serving,
     "roofline": bench_roofline,
     "pareto": bench_pareto,
@@ -417,9 +491,11 @@ SECTIONS = {
 # continuous_batching asserts the slot-pooled engine beats the lockstep
 # wave barrier on useful tokens per launch with zero post-warmup recompiles,
 # and paged_cache asserts prefix sharing really elides prefills and keeps
-# peak resident KV below the dense rings at bit-identical trace output
+# peak resident KV below the dense rings at bit-identical trace output,
+# and kv_quant asserts the channel-wise packed cache is token-identical to
+# int8 at 8 bits (jnp + fused pallas) and strictly cheaper at 4 bits
 SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode",
-                  "continuous_batching", "paged_cache")
+                  "continuous_batching", "paged_cache", "kv_quant")
 
 
 def main() -> None:
@@ -432,6 +508,7 @@ def main() -> None:
         names = [args.only] if args.only else list(SMOKE_SECTIONS)
     else:
         names = [args.only] if args.only else list(SECTIONS)
+    report = {}
     for name in names:
         print(f"\n== {name} ==", flush=True)
         rows = SECTIONS[name](smoke=args.smoke)
@@ -440,8 +517,43 @@ def main() -> None:
         # sections emit a header row first; smoke requires actual data rows
         if args.smoke and len(rows) <= 1:
             raise SystemExit(f"smoke section {name} produced no data rows")
+        report[name] = _parse_rows(rows)
     if args.smoke:
-        print("\nSMOKE OK", flush=True)
+        # machine-readable trajectory: section -> headline metric records,
+        # so per-PR perf history is diffable instead of buried in CI logs
+        import json
+        with open("BENCH_smoke.json", "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print("\nwrote BENCH_smoke.json", flush=True)
+        print("SMOKE OK", flush=True)
+
+
+def _parse_rows(rows: list[str]) -> list:
+    """CSV rows ``section:a,b,...`` (header first) -> list of dicts keyed by
+    the header columns; non-CSV informational rows pass through verbatim."""
+    def split(row):
+        body = row.split(":", 1)[1] if ":" in row else row
+        return [c.strip() for c in body.split(",")]
+
+    def coerce(v):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        return v
+
+    if len(rows) < 2 or ":" not in rows[0]:
+        return rows
+    header = split(rows[0])
+    out = []
+    for row in rows[1:]:
+        cells = split(row)
+        if len(cells) != len(header):
+            out.append(row)                    # ragged info row, keep raw
+            continue
+        out.append({k: coerce(v) for k, v in zip(header, cells)})
+    return out
 
 
 if __name__ == "__main__":

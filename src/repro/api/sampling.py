@@ -60,6 +60,11 @@ def sample(logits: jnp.ndarray, params: SamplingParams = GREEDY,
         raise ValueError(f"sampling kind {params.kind!r} needs a PRNG key")
     lg = logits.astype(jnp.float32) / params.temperature
     if params.kind == "top_k":
-        kth = jax.lax.top_k(lg, params.top_k)[0][..., -1:]
+        # clamp: top_k is a request knob, not a vocab fact — asking for more
+        # candidates than the vocab axis holds means "no restriction", while
+        # the unclamped lax.top_k call is a crash inside jit.  The strict
+        # `lg < kth` mask keeps ALL logits tied with the kth one.
+        k = min(params.top_k, lg.shape[-1])
+        kth = jax.lax.top_k(lg, k)[0][..., -1:]
         lg = jnp.where(lg < kth, -jnp.inf, lg)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -91,16 +91,16 @@ class RequestOutput:
 
 
 # Module-level jitted admission/step executables, keyed on (cfg id, backend,
-# sampling, page_size): the same hoisting rule as engine.serving_jits — two
-# engines over one deployed config share executables, and re-constructing an
-# engine never recompiles.  cfg is strongly referenced so its id() stays
-# unique.
+# sampling, page_size, kv_bits): the same hoisting rule as
+# engine.serving_jits — two engines over one deployed config share
+# executables, and re-constructing an engine never recompiles.  cfg is
+# strongly referenced so its id() stays unique.
 _ENGINE_JITS: dict = {}
 
 
 def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
-                 page_size: Optional[int]) -> dict:
-    key = (id(cfg), backend, sampling, page_size)
+                 page_size: Optional[int], kv_bits=None) -> dict:
+    key = (id(cfg), backend, sampling, page_size, kv_bits)
     ent = _ENGINE_JITS.get(key)
     if ent is None:
         from repro.models import serving
@@ -117,7 +117,7 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
                 others untouched).
                 """
                 logits, pf = serving.prefill(dp, cfg, batch, backend,
-                                             lens=lens)
+                                             lens=lens, kv_bits=kv_bits)
                 ring = jax.tree_util.tree_map(jnp.zeros_like, caches)
                 emb = serving.embed_caches(pf, ring)
 
@@ -131,7 +131,8 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
             def _step(dp, tokens, caches, pos, live, key):
                 """One decode tick: per-slot positions, live-masked cache."""
                 logits, caches = serving.decode_step(dp, cfg, tokens, caches,
-                                                     pos, backend, live=live)
+                                                     pos, backend, live=live,
+                                                     kv_bits=kv_bits)
                 return smp.sample(logits, sampling, key), caches
         else:
             def _admit(dp, batch, lens, admit, tok_old, caches, wp_flat,
@@ -146,7 +147,7 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
                 how many slots admit — zero recompiles after warmup.
                 """
                 logits, pf = serving.prefill(dp, cfg, batch, backend,
-                                             lens=lens)
+                                             lens=lens, kv_bits=kv_bits)
                 caches = serving.merge_paged_caches(cfg, pf, caches, admit,
                                                     wp_flat)
                 tok = smp.sample(logits, sampling, key)          # (B, 1)
@@ -160,7 +161,7 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
                 cached in a shared page)."""
                 logits, caches = serving.decode_step(
                     dp, cfg, tokens, caches, pos, backend, live=live_write,
-                    pages=pages, page_size=page_size)
+                    pages=pages, page_size=page_size, kv_bits=kv_bits)
                 return smp.sample(logits, sampling, key), caches
 
         ent = {"cfg": cfg,
@@ -220,6 +221,14 @@ class ServingEngine:
     expert-capacity coupling makes prefill rows batch-dependent); families
     whose generation depends on non-token inputs (vlm prefix embeds, audio
     frames) or uncached recurrent state (ssm, hybrid) reject it.
+
+    ``kv_bits``: cache quantization policy (``serving.kv_specs``).  ``None``
+    (default) keeps the legacy int8-per-token cache; an int or bit-tuple
+    stores the rings channel-wise packed (models/kv_quant.py) — page pools
+    shrink to the packed bytes, ``kv_bytes_*`` price the packed layout, and
+    ``backend="pallas"`` decodes GQA rings through the fused dequant
+    decode-attention kernel.  Part of the jit key: one policy = one warmup,
+    zero recompiles after.
     """
 
     def __init__(self, cfg, dparams, backend: str = "jnp",
@@ -227,10 +236,17 @@ class ServingEngine:
                  prefill_len: Optional[int] = None,
                  sampling: smp.SamplingParams = smp.GREEDY, seed: int = 0,
                  page_size="auto", num_pages: Optional[int] = None,
-                 prefix_sharing="auto"):
+                 prefix_sharing="auto", kv_bits=None):
         from repro.models import serving
         self.cfg, self.dparams, self.backend = cfg, dparams, backend
         self.max_slots, self.max_len = max_slots, max_len
+        # normalize to a hashable jit-key component and resolve eagerly: an
+        # unpackable feature axis raises HERE (engine construction), never
+        # inside a jitted launch
+        if isinstance(kv_bits, (list, tuple)):
+            kv_bits = tuple(int(b) for b in kv_bits)
+        serving.kv_specs(cfg, kv_bits)
+        self.kv_bits = kv_bits
         self.prefill_len = prefill_len or max_len // 2
         if self.prefill_len > max_len:
             raise ValueError("prefill_len exceeds the slot ring max_len")
@@ -264,13 +280,14 @@ class ServingEngine:
         self.prefix_sharing = bool(prefix_sharing)
 
         self.sampling = sampling
-        fns = _engine_jits(cfg, backend, sampling, page_size)
+        fns = _engine_jits(cfg, backend, sampling, page_size, kv_bits)
         self._admit_fn, self._step_fn = fns["admit"], fns["step"]
 
         if page_size is None:
             self.pool = None
             self._pages = None
-            self.caches = serving.init_caches(cfg, max_slots, max_len)
+            self.caches = serving.init_caches(cfg, max_slots, max_len,
+                                              kv_bits=kv_bits)
         else:
             if num_pages is None:
                 num_pages = 1 + max_slots * self.pages_per_slot
@@ -282,7 +299,8 @@ class ServingEngine:
             self._pages = np.full((max_slots, self.pages_per_slot),
                                   NULL_PAGE, np.int32)
             self.caches = serving.init_paged_caches(cfg, max_slots,
-                                                    num_pages, page_size)
+                                                    num_pages, page_size,
+                                                    kv_bits=kv_bits)
             mask = serving.paged_leaf_mask(cfg)
             leaves = zip(jax.tree_util.tree_leaves(mask),
                          jax.tree_util.tree_leaves(self.caches))
@@ -376,11 +394,12 @@ class ServingEngine:
     # -- KV residency metrics ------------------------------------------------
     def kv_bytes_dense(self) -> int:
         """Bytes the dense ``(max_slots, max_len)`` cache pool holds
-        resident for this config — the paged engine's baseline."""
+        resident for this config at THIS engine's ``kv_bits`` policy — the
+        paged engine's baseline (packed layouts price their packed bytes)."""
         from repro.models import serving
         tree = jax.eval_shape(
             lambda: serving.init_caches(self.cfg, self.max_slots,
-                                        self.max_len))
+                                        self.max_len, kv_bits=self.kv_bits))
         return sum(int(np.prod(t.shape)) * np.dtype(t.dtype).itemsize
                    for t in jax.tree_util.tree_leaves(tree))
 

@@ -1,0 +1,135 @@
+"""Pallas decode-attention kernel over the packed channel-wise KV cache.
+
+The cache analog of the fused expert GEMM's ``dequant_first`` contract
+(kernels/quant_matmul.py): the K/V rings are stored as packed sub-byte bytes
+(models/kv_quant.py — contiguous channel groups at 2/4/8 bits, one scale per
+token per group) and this kernel unpacks + scales each tile **in VMEM**
+right before the dot, so HBM cache traffic stays the packed bytes.  One
+``pallas_call`` serves the whole one-token GQA decode attention:
+
+    grid (B, KV): block ``(b, g)`` loads query rows ``q[b, g*rep:(g+1)*rep]``
+    (the GQA head group sharing kv-head ``g`` — no materialized
+    ``jnp.repeat``), the packed K/V rings ``(S, packed_bytes)`` and scales
+    ``(S, n_groups)`` of that kv head, dequantizes in VMEM, and computes
+    masked softmax attention over positions ``<= pos[b]``.
+
+The arithmetic mirrors ``models/attention.gqa_decode``'s jnp reference op
+for op (bf16 score dot -> f32 mask/softmax -> bf16 value dot), so the fused
+path produces the same tokens as the jnp packed path and — at 8-bit — as
+the legacy int8 engine (the bit-parity harness in tests/test_kv_quant.py).
+
+Callers pass GATHERED per-slot ring views: the paged engine's page gather
+(cache/paged.gather_pages) is a pure index copy of packed bytes, so pages
+stream packed end to end and the kernel is oblivious to the page table —
+the same composition contract as PR 6's dense-ring equivalence.
+
+Static parameters are plain ``(bits, sizes)`` tuples rather than the
+KVQuantSpec object so the kernels layer stays import-independent of
+``repro.models``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True executes the kernel body in Python on CPU (validation);
+# mirrors kernels/ops.INTERPRET for the matmul family.
+INTERPRET = True
+
+
+def _unpack_group(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(S, nb) uint8 -> (S, nb * 8/bits) int8, sign-extended.
+
+    Same byte layout contract as ``core.quantizers.unpack_int`` and
+    ``quant_matmul._unpack_block``: value ``j`` of byte ``b`` at bit
+    ``j * bits``, interleaved back via stack+reshape.
+    """
+    if bits == 8:
+        return jax.lax.bitcast_convert_type(packed, jnp.int8)
+    f = 8 // bits
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    parts = []
+    for i in range(f):
+        u = (packed >> (i * bits)) & mask                    # uint8 lanes
+        s = u.astype(jnp.int32)
+        s = jnp.where(s >= sign, s - (1 << bits), s)
+        parts.append(s.astype(jnp.int8))
+    stacked = jnp.stack(parts, axis=-1)                      # (S, nb, f)
+    return stacked.reshape(packed.shape[0], packed.shape[1] * f)
+
+
+def _dequant_tile(packed, scales, bits, sizes, dtype):
+    """In-VMEM dequant of one ring tile: ``(S, packed_bytes)`` -> ``(S, feat)``.
+
+    Elementwise-identical to ``models.kv_quant.dequant_channelwise`` (unpack
+    -> f32 -> per-group scale -> cast), so the fused and jnp paths agree.
+    """
+    outs, lo = [], 0
+    for g, (b, n) in enumerate(zip(bits, sizes)):
+        nb = n * b // 8
+        q = _unpack_group(packed[:, lo:lo + nb], b)
+        lo += nb
+        outs.append((q.astype(jnp.float32)
+                     * scales[:, g:g + 1]).astype(dtype))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+
+def _kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, pos_ref, o_ref, *,
+            bits, sizes, compute_dtype):
+    q = q_ref[0, 0]                          # (rep, hd) compute_dtype
+    kf = _dequant_tile(kp_ref[0, 0], ks_ref[0, 0], bits, sizes,
+                       compute_dtype)        # (S, hd)
+    vf = _dequant_tile(vp_ref[0, 0], vs_ref[0, 0], bits, sizes,
+                       compute_dtype)
+    S, hd = kf.shape
+    # same promotion semantics as the reference einsum: result_type(q, kf)
+    # first (bf16 q -> rounded bf16 scores, f32 q -> f32), THEN the f32 cast
+    s = jnp.dot(q, kf.T).astype(jnp.float32) / math.sqrt(hd)   # (rep, S)
+    valid = jnp.arange(S)[None, :] <= pos_ref[0]
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(compute_dtype)
+    o_ref[0, 0] = jnp.dot(w, vf)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "sizes", "out_dtype",
+                                             "interpret"))
+def decode_attention(q: jnp.ndarray, k_packed: jnp.ndarray,
+                     k_scales: jnp.ndarray, v_packed: jnp.ndarray,
+                     v_scales: jnp.ndarray, pos: jnp.ndarray,
+                     bits: tuple, sizes: tuple, out_dtype=jnp.bfloat16,
+                     interpret: bool = INTERPRET) -> jnp.ndarray:
+    """Fused packed-cache GQA decode attention.
+
+    ``q (B, KV, rep, hd)`` query head groups in their NATIVE dtype (f32
+    after RoPE — the score dot then promotes exactly like the reference
+    einsum, which is what keeps the fused path token-identical to jnp);
+    ``k_packed``/``v_packed (B, KV, S, packed_bytes)`` uint8 ring views;
+    ``k_scales``/``v_scales (B, KV, S, n_groups)`` f32; ``pos (B,)`` int32
+    per-slot positions (attend to ``<= pos[b]``).  Returns
+    ``(B, KV, rep, hd)`` in ``out_dtype``.
+    """
+    B, KV, rep, hd = q.shape
+    S, NB = k_packed.shape[2], k_packed.shape[3]
+    G = k_scales.shape[3]
+    assert sum(sizes) == hd and sum(n * b // 8 for b, n in
+                                    zip(bits, sizes)) == NB, (bits, sizes,
+                                                              hd, NB)
+    ring = lambda nf: pl.BlockSpec((1, 1, S, nf), lambda b, g: (b, g, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, sizes=sizes,
+                          compute_dtype=out_dtype),
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g: (b, g, 0, 0)),
+            ring(NB), ring(G), ring(NB), ring(G),
+            pl.BlockSpec((1,), lambda b, g: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, g: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, hd), out_dtype),
+        interpret=interpret,
+    )(q, k_packed, k_scales, v_packed, v_scales, pos)

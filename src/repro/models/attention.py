@@ -8,9 +8,14 @@ is what makes the 32k-prefill dry-run cells fit in HBM, and it is the compute
 pattern a Pallas flash kernel would implement on real hardware (the jnp
 version is the oracle; see kernels/).
 
-KV caches are stored int8 with per-token scales (layer-wise activation
+KV caches default to int8 with per-token scales (layer-wise activation
 quantization applied to the cache — the paper's activation scheme, DESIGN.md
-§2).
+§2).  A ``kv_spec`` (models/kv_quant.KVQuantSpec) switches a ring to the
+**channel-wise packed** layout: contiguous feature-axis channel groups at
+2/4/8 bits, one scale per token per group, stored packed in uint8; decode
+then either dequantizes with the jnp reference or — ``backend="pallas"`` —
+runs the fused decode-attention kernel that unpacks+scales ring tiles in
+VMEM right before the dot (kernels/decode_attention.py).
 """
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ import jax.numpy as jnp
 from repro.cache import paged
 from repro.dist.sharding import constrain
 from repro.api.policy import PrecisionPolicy
+from repro.kernels import decode_attention as datt_kernel
+from repro.models import kv_quant as kvq
 from repro.models import layers as L
 
 
@@ -180,13 +187,28 @@ def gqa_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
                   partial_dtype=L.partial_dtype_of(cfg))
 
 
-def init_gqa_cache(cfg, batch: int, max_len: int) -> dict:
+def init_gqa_cache(cfg, batch: int, max_len: int,
+                   spec: Optional[kvq.KVQuantSpec] = None) -> dict:
+    """GQA ring cache.  ``spec=None``: legacy int8 values + per-token scales;
+    with a spec the value leaves hold packed sub-byte rows (uint8, feature
+    axis in bytes) and the scale leaves one f32 per channel group — same
+    keys and tree structure either way, so the paging/merge machinery in
+    models/serving.py is layout-agnostic."""
     KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if spec is None:
+        return {
+            "k": jnp.zeros((batch, KV, max_len, hd), jnp.int8),
+            "v": jnp.zeros((batch, KV, max_len, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, KV, max_len, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, KV, max_len, 1), jnp.float32),
+        }
+    assert spec.feat == hd, (spec, hd)
+    nb, G = spec.packed_bytes, spec.n_groups
     return {
-        "k": jnp.zeros((batch, KV, max_len, hd), jnp.int8),
-        "v": jnp.zeros((batch, KV, max_len, hd), jnp.int8),
-        "k_scale": jnp.zeros((batch, KV, max_len, 1), jnp.float32),
-        "v_scale": jnp.zeros((batch, KV, max_len, 1), jnp.float32),
+        "k": jnp.zeros((batch, KV, max_len, nb), jnp.uint8),
+        "v": jnp.zeros((batch, KV, max_len, nb), jnp.uint8),
+        "k_scale": jnp.zeros((batch, KV, max_len, G), jnp.float32),
+        "v_scale": jnp.zeros((batch, KV, max_len, G), jnp.float32),
     }
 
 
@@ -224,9 +246,10 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
                pos: jnp.ndarray, dq_linear,
                live: Optional[jnp.ndarray] = None,
                pages: Optional[jnp.ndarray] = None,
-               page_size: Optional[int] = None
-               ) -> tuple[jnp.ndarray, dict]:
-    """One-token decode with int8 KV cache, per-slot positions.
+               page_size: Optional[int] = None,
+               kv_spec: Optional[kvq.KVQuantSpec] = None,
+               backend: str = "jnp") -> tuple[jnp.ndarray, dict]:
+    """One-token decode with quantized KV cache, per-slot positions.
 
     ``x``: (B, 1, d); ``pos``: (B,) int32 **position vector** — row ``b``
     writes its new KV at ring index ``pos[b]`` and attends to history
@@ -244,6 +267,15 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
     gathers its ring view through the table.  The gathered view is exactly
     the dense ``(B, KV, P*page_size, hd)`` ring, so the attention math —
     and its bits — are identical to the dense path.
+
+    ``kv_spec``: optional channel-wise packed cache layout (the cache leaves
+    must come from ``init_gqa_cache(..., spec=kv_spec)``).  New tokens
+    quantize per channel group and the ring stays packed through the
+    scatter/gather (packing is feature-axis only, so page boundaries never
+    split a byte); ``backend="pallas"`` then attends through the fused
+    decode-attention kernel (in-VMEM unpack+scale), anything else through
+    the jnp dequant reference — token-identical paths, pinned by
+    tests/test_kv_quant.py.
     """
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -259,9 +291,14 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
                                      pos[:, None], cfg.rope_partial)
         q = L.apply_rope(q, cos, sin, rot)
         k = L.apply_rope(k, cos, sin, rot)
-    # append new kv (int8), one ring index per slot
-    kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))    # (B, KV, 1, hd)
-    vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
+    # append new kv (int8 per-token or packed channel-wise), one ring
+    # index per slot
+    if kv_spec is None:
+        kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))  # (B, KV, 1, hd)
+        vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
+    else:
+        kq, ks = kvq.quant_channelwise(k.transpose(0, 2, 1, 3), kv_spec)
+        vq, vs = kvq.quant_channelwise(v.transpose(0, 2, 1, 3), kv_spec)
     if pages is None:
         S = cache["k"].shape[2]
         bidx = jnp.arange(B)
@@ -293,8 +330,24 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
         ksc = paged.gather_pages(cache["k_scale"], pages)
         vsc = paged.gather_pages(cache["v_scale"], pages)
     rep = H // KV
-    kf = (ki.astype(jnp.float32) * ksc).astype(cd)
-    vf = (vi.astype(jnp.float32) * vsc).astype(cd)
+    if kv_spec is not None and backend == "pallas":
+        # fused path: the ring stays packed into VMEM; unpack+scale happens
+        # per (slot, kv-head) tile right before the dot
+        # q keeps its native dtype (f32 after RoPE): the kernel's score dot
+        # then promotes exactly like the reference einsum, so fused and jnp
+        # paths stay token-identical
+        qg = q.transpose(0, 2, 1, 3).reshape(B, KV, rep, hd)
+        o = datt_kernel.decode_attention(qg, ki, ksc, vi, vsc,
+                                         pos, kv_spec.bits, kv_spec.sizes,
+                                         out_dtype=cd,
+                                         interpret=datt_kernel.INTERPRET)
+        return dq_linear(o.reshape(B, 1, H * hd), p["wo"]), cache
+    if kv_spec is None:
+        kf = (ki.astype(jnp.float32) * ksc).astype(cd)
+        vf = (vi.astype(jnp.float32) * vsc).astype(cd)
+    else:
+        kf = kvq.dequant_channelwise(ki, ksc, kv_spec, cd)
+        vf = kvq.dequant_channelwise(vi, vsc, kv_spec, cd)
     qh = q.transpose(0, 2, 1, 3)                          # (B, H, 1, hd)
     # grouped score: expand kv heads to full head count
     kfe = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf  # (B, H, S, hd)
@@ -357,12 +410,27 @@ def mla_forward(p: dict, nas: Optional[dict], policy: PrecisionPolicy, cfg,
                   partial_dtype=L.partial_dtype_of(cfg))
 
 
-def init_mla_cache(cfg, batch: int, max_len: int) -> dict:
+def init_mla_cache(cfg, batch: int, max_len: int,
+                   spec: Optional[kvq.KVQuantSpec] = None) -> dict:
     """MLA cache stores the *latent* c_kv + shared k_rope — (kvr + rope) per
-    token instead of 2*H*hd: the paper-aligned memory win for decode."""
+    token instead of 2*H*hd: the paper-aligned memory win for decode.
+
+    With a ``spec`` the latent leaf holds packed channel-wise sub-byte rows
+    (``kv_lora_rank`` is the feature axis) and the scale leaf one f32 per
+    channel group; ``krope`` stays bf16 — it is the shared rotary phase
+    (``qk_rope_dim`` small), not a searched activation.
+    """
+    if spec is None:
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.int8),
+            "ckv_scale": jnp.zeros((batch, max_len, 1), jnp.float32),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim),
+                               jnp.bfloat16),
+        }
+    assert spec.feat == cfg.kv_lora_rank, (spec, cfg.kv_lora_rank)
     return {
-        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.int8),
-        "ckv_scale": jnp.zeros((batch, max_len, 1), jnp.float32),
+        "ckv": jnp.zeros((batch, max_len, spec.packed_bytes), jnp.uint8),
+        "ckv_scale": jnp.zeros((batch, max_len, spec.n_groups), jnp.float32),
         "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), jnp.bfloat16),
     }
 
@@ -370,7 +438,8 @@ def init_mla_cache(cfg, batch: int, max_len: int) -> dict:
 def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                dq_linear, live: Optional[jnp.ndarray] = None,
                pages: Optional[jnp.ndarray] = None,
-               page_size: Optional[int] = None
+               page_size: Optional[int] = None,
+               kv_spec: Optional[kvq.KVQuantSpec] = None
                ) -> tuple[jnp.ndarray, dict]:
     """One-token MLA decode, fully packed, per-slot positions.
 
@@ -399,6 +468,14 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     absorption proper needs a transpose (contract-over-``c_out``) packed
     matmul, which the channel-grouped layout does not support — revisit if
     long-context MLA decode becomes a target workload.
+
+    ``kv_spec``: optional channel-wise packed *latent* storage (cache from
+    ``init_mla_cache(..., spec=kv_spec)``).  The win is the packed ring
+    bytes; the dequantized latent still materializes once per step because
+    it immediately expands through the packed ``wkv_b`` matmul — there is
+    no attention dot to fuse the latent unpack into (unlike GQA's
+    decode-attention kernel), so the channel-wise jnp dequant IS the packed
+    path here, on every backend.
     """
     B = x.shape[0]
     H = cfg.n_heads
@@ -421,7 +498,10 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     q_rope = L.apply_rope(q_rope, cos, sin, rot)
     k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], cos, sin, rot)[:, :, 0]
 
-    qc, qs = quant_per_token(c_kv)
+    if kv_spec is None:
+        qc, qs = quant_per_token(c_kv)
+    else:
+        qc, qs = kvq.quant_channelwise(c_kv, kv_spec)
     if pages is None:
         S = cache["ckv"].shape[1]
         bidx = jnp.arange(B)
@@ -452,7 +532,10 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
 
     # expand latents to per-head K/V through the packed low-rank factor:
     # ckv (B, S, kvr) -> (B, S, H, nope + vd), weights streaming sub-byte
-    ckv_f = (ckv_i.astype(jnp.float32) * ckv_s).astype(cd)
+    if kv_spec is None:
+        ckv_f = (ckv_i.astype(jnp.float32) * ckv_s).astype(cd)
+    else:
+        ckv_f = kvq.dequant_channelwise(ckv_i, ckv_s, kv_spec, cd)
     kv = dq_linear(ckv_f, p["wkv_b"]).reshape(B, S, H, nope + vd)
     k_nope, v = kv[..., :nope], kv[..., nope:]
 

@@ -1,0 +1,172 @@
+"""Channel-wise sub-byte KV-cache quantization.
+
+The paper's thesis — per-channel bit-width assignment beats per-layer — has
+so far only been applied to weights; the KV cache was uniform int8 per token
+(``attention.quant_per_token``, the layer-wise activation scheme).  This
+module applies the same channel-grouping machinery to the cache itself: the
+feature axis of a cache leaf (``head_dim`` for GQA K/V, ``kv_lora_rank`` for
+the MLA latent) splits into a few static contiguous channel groups, each
+quantized symmetric at its own bit-width with ONE scale per (token, group),
+and stored packed in uint8 (``core.quantizers.pack_int`` — 4x int2 / 2x int4
+per byte).  Decode bandwidth then scales with the assigned bits exactly as
+weight bandwidth does for the deployed linears.
+
+Contracts
+---------
+* Packing is along the FEATURE axis only.  Every token row is a whole number
+  of bytes, so the token axis slices freely — page pools (repro/cache) carry
+  packed rows through ``gather_pages`` / ``scatter_prefill`` unchanged, and a
+  page boundary can never split a packed byte.
+* At ``bits=8`` with a single group this is **bit-identical** to
+  ``quant_per_token`` + the legacy int8 dequant: same amax/127 scale with
+  the same 1e-6 floor, same clip, and 8-bit "packing" is a pure int8<->uint8
+  bitcast.  That equivalence is what pins the packed engines token-for-token
+  against the legacy int8 engine (tests/test_kv_quant.py).
+* All-zero rows quantize to zero codes with the floored scale, and zero
+  codes dequantize to exact 0.0 under ANY scale — including the audio
+  zero-scale cross-cache stand-in (all-zero packed bytes AND all-zero
+  scales), which must keep dequantizing to exact zeros.
+
+:class:`KVQuantSpec` is a frozen hashable dataclass, so it rides in jit
+cache keys next to :class:`~repro.api.sampling.SamplingParams` — the serving
+engine specializes per cache-bits policy with zero recompiles afterwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax.numpy as jnp
+
+from repro.core import quantizers as qz
+
+# Channel-count granularity every group size must honor regardless of its
+# bit-width: the largest pack factor (int2 -> 4 values/byte), so group byte
+# boundaries exist for any member of the bit alphabet.
+GROUP_ALIGN = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Static channel-group bit assignment for one cache feature axis.
+
+    ``bits[g]`` and ``sizes[g]`` describe contiguous channel groups covering
+    the feature axis in storage order: channels ``[sum(sizes[:g]),
+    sum(sizes[:g+1]))`` are quantized at ``bits[g]`` with one shared scale
+    per token.  Hashable (usable as a jit-cache key); all shape math is
+    static Python.
+    """
+    bits: tuple
+    sizes: tuple
+
+    def __post_init__(self):
+        if not self.bits or len(self.bits) != len(self.sizes):
+            raise ValueError(f"bits {self.bits} / sizes {self.sizes} must be "
+                             "non-empty and the same length")
+        for b, n in zip(self.bits, self.sizes):
+            if b not in (2, 4, 8):
+                raise ValueError(f"unsupported cache bit-width {b} "
+                                 "(alphabet: 2, 4, 8)")
+            if n < 1 or n % qz.pack_factor(b):
+                raise ValueError(
+                    f"group size {n} not a positive multiple of the {b}-bit "
+                    f"pack factor {qz.pack_factor(b)}")
+
+    @property
+    def feat(self) -> int:
+        """Channels covered (the unpacked feature-axis width)."""
+        return sum(self.sizes)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.bits)
+
+    @property
+    def packed_bytes(self) -> int:
+        """Bytes per token row — what the cache leaf actually stores."""
+        return sum(n // qz.pack_factor(b)
+                   for b, n in zip(self.bits, self.sizes))
+
+
+def spec_for(kv_bits: Union[int, Sequence[int], None],
+             feat: int) -> Optional[KVQuantSpec]:
+    """Resolve the engine-facing ``kv_bits`` policy knob for one feature axis.
+
+    * ``None`` — no spec (the caller keeps the legacy int8-per-token path);
+    * ``int`` — uniform: ONE group spanning all ``feat`` channels (at 8 this
+      reproduces ``quant_per_token`` bit-for-bit);
+    * sequence of ints — channel-wise: ``len(kv_bits)`` contiguous groups
+      splitting ``feat`` as evenly as :data:`GROUP_ALIGN` allows, the last
+      group absorbing the remainder (mirroring
+      ``config.DeploySpec.group_sizes``'s upward promotion).
+    """
+    if kv_bits is None:
+        return None
+    for b in ((kv_bits,) if isinstance(kv_bits, int) else kv_bits):
+        if b not in (2, 4, 8):
+            raise ValueError(f"kv_bits widths must be in (2, 4, 8), "
+                             f"got {b} (kv_bits={kv_bits})")
+    if isinstance(kv_bits, int):
+        if feat % qz.pack_factor(kv_bits):
+            raise ValueError(
+                f"feature axis {feat} not divisible by the {kv_bits}-bit "
+                f"pack factor {qz.pack_factor(kv_bits)}")
+        return KVQuantSpec((kv_bits,), (feat,))
+    bits = tuple(int(b) for b in kv_bits)
+    n = len(bits)
+    base = max((feat // n) // GROUP_ALIGN * GROUP_ALIGN, GROUP_ALIGN)
+    if base * (n - 1) >= feat:
+        raise ValueError(
+            f"feature axis {feat} too narrow to split into {n} groups of "
+            f">= {GROUP_ALIGN} channels (kv_bits={bits})")
+    sizes = (base,) * (n - 1) + (feat - base * (n - 1),)
+    return KVQuantSpec(bits, sizes)
+
+
+def quant_channelwise(t: jnp.ndarray, spec: KVQuantSpec
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize + pack a cache write along its feature axis.
+
+    ``t (..., feat) -> (packed uint8 (..., spec.packed_bytes),
+    scales f32 (..., spec.n_groups))`` with
+    ``t[..., group g] ≈ unpack(packed)[..., g] * scales[..., g]``.
+    Per group: symmetric signed with the amax-over-group scale —
+    ``quant_per_token`` generalized from one full-width 8-bit group.
+    """
+    assert t.shape[-1] == spec.feat, (t.shape, spec)
+    packs, scales = [], []
+    lo = 0
+    for b, n in zip(spec.bits, spec.sizes):
+        g = t[..., lo:lo + n]
+        lo += n
+        half = float((1 << (b - 1)) - 1)
+        amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax.astype(jnp.float32), 1e-6) / half
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -half, half
+                     ).astype(jnp.int8)
+        packs.append(qz.pack_int(q, b))
+        scales.append(scale)
+    packed = packs[0] if len(packs) == 1 else jnp.concatenate(packs, axis=-1)
+    sc = scales[0] if len(scales) == 1 else jnp.concatenate(scales, axis=-1)
+    return packed, sc
+
+
+def dequant_channelwise(packed: jnp.ndarray, scales: jnp.ndarray,
+                        spec: KVQuantSpec, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Inverse of :func:`quant_channelwise`: ``(..., packed_bytes)`` uint8 +
+    ``(..., n_groups)`` f32 -> ``(..., feat)`` in ``dtype``.
+
+    The jnp reference for the fused Pallas decode-attention kernel
+    (kernels/decode_attention.py), which performs the identical unpack +
+    scale per tile in VMEM; zero codes dequantize to exact 0.0 under any
+    scale (the audio zero-scale cross-cache contract).
+    """
+    assert packed.shape[-1] == spec.packed_bytes, (packed.shape, spec)
+    outs, lo = [], 0
+    for g, (b, n) in enumerate(zip(spec.bits, spec.sizes)):
+        nb = n // qz.pack_factor(b)
+        q = qz.unpack_int(packed[..., lo:lo + nb], b)
+        lo += nb
+        outs.append((q.astype(jnp.float32)
+                     * scales[..., g:g + 1]).astype(dtype))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)

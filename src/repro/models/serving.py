@@ -34,6 +34,7 @@ from repro.api.qtensor import QTensor
 from repro.cache import paged
 from repro.core import quantizers as qz
 from repro.models import attention as attn
+from repro.models import kv_quant as kvq
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -330,9 +331,30 @@ def _dq(cd, backend="jnp"):
     return lambda x, dp: dq_linear(x, dp, cd, backend)
 
 
+def kv_specs(cfg, kv_bits):
+    """Resolve the ``kv_bits`` cache policy knob into per-site channel-group
+    specs: ``(gqa_spec, mla_spec)``.
+
+    ``kv_bits=None`` keeps the legacy int8-per-token cache contract on every
+    ring (``(None, None)``).  An int or bit-tuple builds a
+    :class:`~repro.models.kv_quant.KVQuantSpec` over each ring's feature
+    axis — ``head_dim`` for GQA K/V (dense/vlm/moe attention, the hybrid
+    shared block, audio self+cross) and ``kv_lora_rank`` for the MLA latent.
+    ``ssm`` has no per-token ring, so the knob is a no-op there.  Raises at
+    resolution time (engine construction) when a feature axis cannot honor
+    the requested packing, never inside a jitted step.
+    """
+    if kv_bits is None or cfg.family == "ssm":
+        return None, None
+    if cfg.use_mla and cfg.family in ("dense", "vlm", "moe"):
+        return None, kvq.spec_for(kv_bits, cfg.kv_lora_rank)
+    return kvq.spec_for(kv_bits, cfg.head_dim), None
+
+
 def _deployed_attn_full(p, cfg, x, positions, causal=True, enc=None,
-                        backend="jnp", build_cache=False):
-    """Full-seq attention on deployed weights; optionally emit an int8 cache."""
+                        backend="jnp", build_cache=False, kv_spec=None):
+    """Full-seq attention on deployed weights; optionally emit a quantized
+    cache (legacy int8 per token, or channel-wise packed under ``kv_spec``)."""
     B, S, _ = x.shape
     cd = cfg.cdtype
     dq = _dq(cd, backend)
@@ -350,14 +372,18 @@ def _deployed_attn_full(p, cfg, x, positions, causal=True, enc=None,
     y = dq(o.reshape(B, S, H * hd), p["wo"])
     cache = None
     if build_cache:
-        kq, ksc = attn.quant_per_token(k.transpose(0, 2, 1, 3))
-        vq, vsc = attn.quant_per_token(v.transpose(0, 2, 1, 3))
+        if kv_spec is None:
+            kq, ksc = attn.quant_per_token(k.transpose(0, 2, 1, 3))
+            vq, vsc = attn.quant_per_token(v.transpose(0, 2, 1, 3))
+        else:
+            kq, ksc = kvq.quant_channelwise(k.transpose(0, 2, 1, 3), kv_spec)
+            vq, vsc = kvq.quant_channelwise(v.transpose(0, 2, 1, 3), kv_spec)
         cache = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
     return y, cache
 
 
 def _deployed_mla_full(p, cfg, x, positions, backend="jnp",
-                       build_cache=False):
+                       build_cache=False, kv_spec=None):
     B, S, _ = x.shape
     cd = cfg.cdtype
     dq = _dq(cd, backend)
@@ -382,7 +408,10 @@ def _deployed_mla_full(p, cfg, x, positions, backend="jnp",
     y = dq(o.reshape(B, S, H * vd), p["wo"])
     cache = None
     if build_cache:
-        qc, qs = attn.quant_per_token(c_kv)
+        if kv_spec is None:
+            qc, qs = attn.quant_per_token(c_kv)
+        else:
+            qc, qs = kvq.quant_channelwise(c_kv, kv_spec)
         cache = {"ckv": qc, "ckv_scale": qs,
                  "krope": k_rope_r[:, :, 0].astype(jnp.bfloat16)}
     return y, cache
@@ -495,7 +524,8 @@ def _last_token(x, lens):
     return jnp.take_along_axis(x, idx, axis=1)
 
 
-def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None):
+def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None,
+            kv_bits=None):
     """Full-sequence deployed forward.  Returns (last-token logits, caches).
 
     ``lens``: optional (B,) int32 per-row true prompt lengths for a
@@ -507,10 +537,16 @@ def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None):
     those sit strictly *above* each slot's position and every decode mask
     is ``<= pos``, and the first ``pos`` advance overwrites index ``lens``
     before it ever becomes visible — so the padding is never attended.
+
+    ``kv_bits``: cache quantization policy (see :func:`kv_specs`) — the
+    emitted caches then carry the channel-wise packed layout and must pair
+    with ``init_caches``/``init_paged_caches``/``decode_step`` at the SAME
+    ``kv_bits``.
     """
     cd = cfg.cdtype
+    gqa_spec, mla_spec = kv_specs(cfg, kv_bits)
     if cfg.family == "audio":
-        return _prefill_encdec(dparams, cfg, batch, backend, lens)
+        return _prefill_encdec(dparams, cfg, batch, backend, lens, gqa_spec)
     x = dparams["embed"][batch["tokens"]].astype(cd)
     if cfg.n_prefix_tokens and "prefix_embeds" in batch:
         n = cfg.n_prefix_tokens
@@ -524,10 +560,12 @@ def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None):
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             if cfg.use_mla:
                 a, c = _deployed_mla_full(p["attn"], cfg, hn, positions,
-                                          backend, build_cache=True)
+                                          backend, build_cache=True,
+                                          kv_spec=mla_spec)
             else:
                 a, c = _deployed_attn_full(p["attn"], cfg, hn, positions,
-                                           backend=backend, build_cache=True)
+                                           backend=backend, build_cache=True,
+                                           kv_spec=gqa_spec)
             h = h + a.astype(h.dtype)
             f = _deployed_ffn_full(p["ffn"], cfg,
                                    L.apply_norm(h, p["ln2"], cfg.norm), backend)
@@ -546,7 +584,7 @@ def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None):
             hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
             a, c = _deployed_attn_full(dparams["shared_attn"]["attn"], cfg, hn,
                                        positions, backend=backend,
-                                       build_cache=True)
+                                       build_cache=True, kv_spec=gqa_spec)
             x = x + a.astype(x.dtype)
             f = _deployed_ffn_full(
                 dparams["shared_attn"]["ffn"], cfg,
@@ -573,7 +611,7 @@ def prefill(dparams, cfg, batch, backend: str = "jnp", lens=None):
     return logits.astype(jnp.float32), caches
 
 
-def _prefill_encdec(dparams, cfg, batch, backend, lens=None):
+def _prefill_encdec(dparams, cfg, batch, backend, lens=None, kv_spec=None):
     cd = cfg.cdtype
     enc = batch["frames"].astype(cd)
     Se = enc.shape[1]
@@ -599,12 +637,13 @@ def _prefill_encdec(dparams, cfg, batch, backend, lens=None):
     def dbody(h, p):
         a, c = _deployed_attn_full(p["attn"], cfg,
                                    L.apply_norm(h, p["ln1"], cfg.norm), pos,
-                                   backend=backend, build_cache=True)
+                                   backend=backend, build_cache=True,
+                                   kv_spec=kv_spec)
         h = h + a.astype(h.dtype)
         xa, cc = _deployed_attn_full(p["xattn"], cfg,
                                      L.apply_norm(h, p["ln2"], cfg.norm), pos,
                                      enc=enc, backend=backend,
-                                     build_cache=True)
+                                     build_cache=True, kv_spec=kv_spec)
         h = h + xa.astype(h.dtype)
         f = _deployed_ffn_full(p["mlp"], cfg,
                                L.apply_norm(h, p["ln3"], cfg.norm), backend)
@@ -619,11 +658,17 @@ def _prefill_encdec(dparams, cfg, batch, backend, lens=None):
 # Decode step (one new token, full KV cache) — the decode_* dry-run workload
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg, batch: int, max_len: int):
-    """Empty caches for decode-only dry-runs (shape stand-ins)."""
+def init_caches(cfg, batch: int, max_len: int, kv_bits=None):
+    """Empty caches for decode-only dry-runs (shape stand-ins).
+
+    ``kv_bits`` (see :func:`kv_specs`) swaps the ring leaves for the
+    channel-wise packed layout — same tree structure, packed-byte dtypes.
+    """
+    gqa_spec, mla_spec = kv_specs(cfg, kv_bits)
     if cfg.family in ("dense", "vlm", "moe"):
-        one = (attn.init_mla_cache(cfg, batch, max_len) if cfg.use_mla
-               else attn.init_gqa_cache(cfg, batch, max_len))
+        one = (attn.init_mla_cache(cfg, batch, max_len, mla_spec)
+               if cfg.use_mla
+               else attn.init_gqa_cache(cfg, batch, max_len, gqa_spec))
         return jax.tree_util.tree_map(
             lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one)
     if cfg.family == "ssm":
@@ -632,7 +677,7 @@ def init_caches(cfg, batch: int, max_len: int):
             lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one)
     if cfg.family == "hybrid":
         ssm_one = ssm_mod.init_ssm_cache(cfg, batch)
-        attn_one = attn.init_gqa_cache(cfg, batch, max_len)
+        attn_one = attn.init_gqa_cache(cfg, batch, max_len, gqa_spec)
         n_groups = -(-cfg.n_layers // cfg.attn_every)
         return {
             "ssm": jax.tree_util.tree_map(
@@ -641,8 +686,8 @@ def init_caches(cfg, batch: int, max_len: int):
                 lambda t: jnp.zeros((n_groups,) + t.shape, t.dtype), attn_one),
         }
     if cfg.family == "audio":
-        self_c = attn.init_gqa_cache(cfg, batch, max_len)
-        cross_c = attn.init_gqa_cache(cfg, batch, cfg.encoder_seq)
+        self_c = attn.init_gqa_cache(cfg, batch, max_len, gqa_spec)
+        cross_c = attn.init_gqa_cache(cfg, batch, cfg.encoder_seq, gqa_spec)
         # Zero-scale decode-only contract: this cross cache ships all-zero
         # int8 values AND all-zero per-token scales, so the dequantized
         # encoder KV is exactly 0 and cross-attention softmaxes to uniform
@@ -667,7 +712,8 @@ def supports_paging(cfg) -> bool:
     return cfg.family in ("dense", "vlm", "moe", "hybrid", "audio")
 
 
-def init_paged_caches(cfg, max_slots: int, num_pages: int, page_size: int):
+def init_paged_caches(cfg, max_slots: int, num_pages: int, page_size: int,
+                      kv_bits=None):
     """Paged serving caches: ring leaves become physical page pools.
 
     Each paged leaf swaps its per-slot ``(max_slots, .., max_len, F)`` ring
@@ -677,27 +723,37 @@ def init_paged_caches(cfg, max_slots: int, num_pages: int, page_size: int):
     page table instead of slots).  Page 0 is the NULL page: never written,
     always zero (repro/cache).  Non-ring leaves (hybrid SSM state, audio
     cross caches) keep their per-slot layout.
+
+    ``kv_bits`` packs the page pools channel-wise (:func:`kv_specs`): the
+    packing is feature-axis only, so a page boundary never splits a packed
+    byte and the page-table machinery is unchanged — pages just carry fewer
+    bytes per token.
     """
+    gqa_spec, mla_spec = kv_specs(cfg, kv_bits)
     stackN = lambda one, n: jax.tree_util.tree_map(
         lambda t: jnp.zeros((n,) + t.shape, t.dtype), one)
     if cfg.family in ("dense", "vlm", "moe"):
-        one = (attn.init_mla_cache(cfg, num_pages, page_size) if cfg.use_mla
-               else attn.init_gqa_cache(cfg, num_pages, page_size))
+        one = (attn.init_mla_cache(cfg, num_pages, page_size, mla_spec)
+               if cfg.use_mla
+               else attn.init_gqa_cache(cfg, num_pages, page_size, gqa_spec))
         return stackN(one, cfg.n_layers)
     if cfg.family == "hybrid":
         n_groups = -(-cfg.n_layers // cfg.attn_every)
         return {
             "ssm": stackN(ssm_mod.init_ssm_cache(cfg, max_slots),
                           cfg.n_layers),
-            "attn": stackN(attn.init_gqa_cache(cfg, num_pages, page_size),
+            "attn": stackN(attn.init_gqa_cache(cfg, num_pages, page_size,
+                                               gqa_spec),
                            n_groups),
         }
     if cfg.family == "audio":
         # cross keeps the zero-scale stand-in contract of init_caches; real
         # serving admit-merges the prefill's encoder-built cross cache in.
-        return stackN({"self": attn.init_gqa_cache(cfg, num_pages, page_size),
+        return stackN({"self": attn.init_gqa_cache(cfg, num_pages, page_size,
+                                                   gqa_spec),
                        "cross": attn.init_gqa_cache(cfg, max_slots,
-                                                    cfg.encoder_seq)},
+                                                    cfg.encoder_seq,
+                                                    gqa_spec)},
                       cfg.n_layers)
     raise ValueError(f"family {cfg.family!r} has no paged cache layout "
                      "(see supports_paging)")
@@ -774,27 +830,40 @@ def embed_caches(prefill_caches, ring):
     return jax.tree_util.tree_map(one, prefill_caches, ring)
 
 
-def _cross_decode(p, cfg, x, cache, backend):
-    """Cross-attention decode: query new token against the cached encoder KV."""
+def _cross_decode(p, cfg, x, cache, backend, kv_spec=None):
+    """Cross-attention decode: query new token against the cached encoder KV.
+
+    Query heads fold to ``(B, KV, rep, hd)`` groups so the encoder KV stays
+    at its ``KV`` kv-heads inside the einsums — no ``jnp.repeat`` ever
+    materializes the ``rep``-fold redundant f32 encoder tensors (the head
+    broadcast happens in the contraction).  Under ``kv_spec`` the encoder
+    rings are channel-wise packed; zero codes dequantize to exact 0.0 under
+    any scale, so the decode-only zero-scale cross-cache stand-in (all-zero
+    packed bytes AND zero scales — see :func:`init_caches`) is preserved
+    exactly on the packed path too.
+    """
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // KV
     cd = cfg.cdtype
     dq = _dq(cd, backend)
-    q = dq(x, p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
-    kf = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(cd)
-    vf = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(cd)
-    rep = H // KV
-    kf = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf
-    vf = jnp.repeat(vf, rep, axis=1) if rep > 1 else vf
-    s = jnp.einsum("bhqd,bhkd->bhqk", q, kf).astype(jnp.float32)
+    # (B, H, hd) is head-major, so the group fold/unfold is a pure reshape
+    qg = dq(x, p["wq"]).reshape(B, H, hd).reshape(B, KV, rep, hd)
+    if kv_spec is None:
+        kf = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(cd)
+        vf = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(cd)
+    else:
+        kf = kvq.dequant_channelwise(cache["k"], cache["k_scale"], kv_spec, cd)
+        vf = kvq.dequant_channelwise(cache["v"], cache["v_scale"], kv_spec, cd)
+    s = jnp.einsum("bgrd,bgkd->bgrk", qg, kf).astype(jnp.float32)
     s = s / np.sqrt(hd)
     w = jax.nn.softmax(s, axis=-1).astype(cd)
-    o = jnp.einsum("bhqk,bhkd->bhqd", w, vf).transpose(0, 2, 1, 3)
+    o = jnp.einsum("bgrk,bgkd->bgrd", w, vf)
     return dq(o.reshape(B, 1, H * hd), p["wo"])
 
 
 def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
-                live=None, pages=None, page_size=None):
+                live=None, pages=None, page_size=None, kv_bits=None):
     """One decode step: tokens (B, 1) -> (logits (B,1,V), caches').
 
     ``pos`` is a **per-slot position vector** (B,) int32: row ``b`` writes
@@ -814,7 +883,13 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
     max_len``) and every ring read/write routes through the table; the
     gathered per-slot view is exactly the dense ring, so logits are
     bit-identical to the dense path.  Non-ring leaves ignore the table.
+
+    ``kv_bits``: cache quantization policy (:func:`kv_specs`); must match
+    the policy the caches were built with.  Under ``backend="pallas"`` the
+    packed GQA rings decode through the fused dequant decode-attention
+    kernel (kernels/decode_attention.py).
     """
+    gqa_spec, mla_spec = kv_specs(cfg, kv_bits)
     cd = cfg.cdtype
     dq = _dq(cd, backend)
     x = dparams["embed"][tokens].astype(cd)
@@ -829,10 +904,10 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             if cfg.use_mla:
                 a, c2 = attn.mla_decode(p["attn"], cfg, hn, c, pos, dq, live,
-                                        pages, page_size)
+                                        pages, page_size, mla_spec)
             else:
                 a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c, pos, dq, live,
-                                        pages, page_size)
+                                        pages, page_size, gqa_spec, backend)
             h = h + a.astype(h.dtype)
             f = _deployed_ffn_full(p["ffn"], cfg,
                                    L.apply_norm(h, p["ln2"], cfg.norm), backend)
@@ -854,7 +929,7 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
             hn = L.apply_norm(x, dparams["shared_attn"]["ln1"], cfg.norm)
             a, c2 = attn.gqa_decode(dparams["shared_attn"]["attn"], cfg,
                                     hn, c_att, pos, dq, live, pages,
-                                    page_size)
+                                    page_size, gqa_spec, backend)
             x = x + a.astype(x.dtype)
             f = _deployed_ffn_full(
                 dparams["shared_attn"]["ffn"], cfg,
@@ -884,11 +959,11 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
             p, c = pc
             hn = L.apply_norm(h, p["ln1"], cfg.norm)
             a, c2 = attn.gqa_decode(p["attn"], cfg, hn, c["self"], pos, dq,
-                                    live, pages, page_size)
+                                    live, pages, page_size, gqa_spec, backend)
             h = h + a.astype(h.dtype)
             xa = _cross_decode(p["xattn"], cfg,
                                L.apply_norm(h, p["ln2"], cfg.norm), c["cross"],
-                               backend)
+                               backend, gqa_spec)
             h = h + xa.astype(h.dtype)
             f = _deployed_ffn_full(p["mlp"], cfg,
                                    L.apply_norm(h, p["ln3"], cfg.norm), backend)

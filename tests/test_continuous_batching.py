@@ -306,6 +306,31 @@ def test_sampling_top_k_restricts_support():
     assert all(ids[i] in top3[i] for i in range(ids.shape[0]))
 
 
+def test_sampling_top_k_clamps_to_vocab():
+    """Regression: ``top_k > vocab_size`` used to crash inside
+    ``jax.lax.top_k``; it must mean "no restriction" instead, and the
+    clamped kind must stay usable under jit (the serving steps jit it)."""
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.standard_normal((8, 11)))
+    big = SamplingParams(kind="top_k", top_k=999, temperature=0.8)
+    full = SamplingParams(kind="top_k", top_k=11, temperature=0.8)
+    key = jax.random.PRNGKey(3)
+    a = np.asarray(sample(logits, big, key))            # must not raise
+    np.testing.assert_array_equal(a, np.asarray(sample(logits, full, key)))
+    jitted = jax.jit(lambda lg, k: sample(lg, big, k))
+    np.testing.assert_array_equal(np.asarray(jitted(logits, key)), a)
+
+
+def test_sampling_top_k_keeps_kth_ties():
+    """Tie pinning: every logit EQUAL to the kth-largest stays in the
+    support (the strict ``lg < kth`` mask) — top_k=1 over an all-tied row
+    can therefore sample any index."""
+    logits = jnp.zeros((256, 5))
+    p = SamplingParams(kind="top_k", top_k=1)
+    ids = np.asarray(sample(logits, p, jax.random.PRNGKey(0)))
+    assert len(np.unique(ids)) > 1                     # ties all reachable
+
+
 def test_sampling_temperature_deterministic_per_key():
     logits = jnp.asarray(np.random.default_rng(3).standard_normal((5, 13)))
     p = SamplingParams(kind="temperature", temperature=1.3)

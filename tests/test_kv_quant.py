@@ -1,0 +1,318 @@
+"""Channel-wise packed KV cache (models/kv_quant + kernels/decode_attention).
+
+Four layers of guards:
+
+* **quantizer properties** — round-trip error bounds per channel group at
+  every bit-width, the all-zero-row scale floor, GQA / MLA-latent layouts,
+  and the 8-bit single-group case being BIT-identical to the legacy
+  ``attn.quant_per_token`` int8 scheme;
+* **page composition** — packing is feature-axis only, so packed rows pass
+  through the page-pool scatter/gather byte-for-byte and reconstruct the
+  dense ring exactly regardless of how channel groups align with
+  ``page_size``;
+* **fused kernel** — the Pallas decode-attention kernel (in-VMEM
+  unpack+scale) is bitwise-equal to the jitted jnp dequant reference;
+* **serving level** — at ``kv_bits=8`` the packed engines (jnp AND pallas,
+  dense + moe+mla + audio) are token-for-token identical to the legacy
+  int8 engine on the staggered paged trace with zero recompiles after
+  warmup, and 4-bit packing keeps strictly fewer KV bytes resident.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.scheduler import Request, ServingEngine
+from repro.cache import paged
+from repro.core import quantizers as qz
+from repro.kernels import decode_attention as datt
+from repro.models import attention as attn
+from repro.models import kv_quant as kvq
+from repro.models import serving
+from test_continuous_batching import STAGGER, _setup, _stagger_trace
+
+BITS_CASES = [8, 4, 2, (2, 4, 8), (4, 8)]
+
+
+def _rand(shape, seed, scale=2.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape) * scale,
+        jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+
+def test_spec_for_uniform_and_grouped():
+    s = kvq.spec_for(8, 16)
+    assert s.bits == (8,) and s.sizes == (16,)
+    assert s.feat == 16 and s.n_groups == 1 and s.packed_bytes == 16
+    s = kvq.spec_for(4, 16)
+    assert s.packed_bytes == 8
+    s = kvq.spec_for((2, 4, 8), 16)
+    assert s.sizes == (4, 4, 8) and sum(s.sizes) == 16
+    assert s.packed_bytes == 4 // 4 + 4 // 2 + 8  # 1 + 2 + 8
+    assert kvq.spec_for(None, 16) is None
+
+
+def test_spec_for_rejects_unpackable():
+    with pytest.raises(ValueError):
+        kvq.spec_for(2, 14)                      # 14 % 4 != 0
+    with pytest.raises(ValueError):
+        kvq.spec_for((2, 4, 8), 8)               # too narrow for 3 groups
+    with pytest.raises(ValueError):
+        kvq.KVQuantSpec((3,), (16,))             # bit not in alphabet
+    with pytest.raises(ValueError):
+        kvq.KVQuantSpec((2,), (6,))              # 6 % pack_factor(2) != 0
+
+
+def test_kv_specs_family_routing():
+    cfg, _ = _setup("qwen1.5-4b")
+    g, m = serving.kv_specs(cfg, 8)
+    assert g is not None and m is None and g.feat == cfg.head_dim
+    mcfg, _ = _setup("deepseek-v3-671b", capacity_factor=64.0)
+    g, m = serving.kv_specs(mcfg, 8)
+    assert g is None and m is not None and m.feat == mcfg.kv_lora_rank
+    scfg, _ = _setup("mamba2-780m")
+    assert serving.kv_specs(scfg, 8) == (None, None)   # no ring to pack
+    assert serving.kv_specs(cfg, None) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", BITS_CASES)
+@pytest.mark.parametrize("shape", [(2, 2, 9, 16),   # GQA (B, KV, S, hd)
+                                   (2, 9, 16)])     # MLA latent (B, S, kvr)
+def test_roundtrip_error_bound(kv_bits, shape):
+    """|t - dequant(quant(t))| <= scale/2 per element: symmetric rounding
+    never loses more than half a step, for every group at its own bits."""
+    spec = kvq.spec_for(kv_bits, shape[-1])
+    t = _rand(shape, seed=hash((kv_bits, shape)) % 1000)
+    packed, scales = kvq.quant_channelwise(t, spec)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == shape[:-1] + (spec.packed_bytes,)
+    assert scales.dtype == jnp.float32
+    assert scales.shape == shape[:-1] + (spec.n_groups,)
+    deq = kvq.dequant_channelwise(packed, scales, spec, jnp.float32)
+    lo = 0
+    for g, n in enumerate(spec.sizes):
+        err = np.abs(np.asarray(t[..., lo:lo + n], np.float32)
+                     - np.asarray(deq[..., lo:lo + n]))
+        bound = np.asarray(scales[..., g:g + 1]) * 0.5 + 1e-6
+        # bf16 inputs are exactly representable in f32, so the only error
+        # is the quantization step itself
+        assert (err <= bound).all(), (kv_bits, g, err.max())
+        lo += n
+
+
+@pytest.mark.parametrize("kv_bits", BITS_CASES)
+def test_zero_rows_floor_scale_and_roundtrip_exact(kv_bits):
+    spec = kvq.spec_for(kv_bits, 16)
+    t = jnp.zeros((3, 5, 16), jnp.bfloat16)
+    packed, scales = kvq.quant_channelwise(t, spec)
+    assert not np.asarray(packed).any()              # zero codes
+    halves = [float((1 << (b - 1)) - 1) for b in spec.bits]
+    np.testing.assert_allclose(
+        np.asarray(scales),
+        np.stack([np.full((3, 5), 1e-6 / h) for h in halves], -1),
+        rtol=1e-6)
+    deq = np.asarray(kvq.dequant_channelwise(packed, scales, spec))
+    assert (deq == 0.0).all()                        # exact zeros back
+
+
+@pytest.mark.parametrize("kv_bits", BITS_CASES)
+def test_zero_codes_zero_scales_dequantize_to_exact_zero(kv_bits):
+    """The audio cross-cache decode-only stand-in ships all-zero packed
+    bytes AND all-zero scales; the packed path must keep it exactly 0.0."""
+    spec = kvq.spec_for(kv_bits, 16)
+    packed = jnp.zeros((2, 4, 6, spec.packed_bytes), jnp.uint8)
+    scales = jnp.zeros((2, 4, 6, spec.n_groups), jnp.float32)
+    deq = np.asarray(kvq.dequant_channelwise(packed, scales, spec))
+    assert (deq == 0.0).all()
+
+
+def test_8bit_single_group_is_bitwise_quant_per_token():
+    """kv_bits=8 reproduces the legacy int8-per-token scheme exactly: same
+    amax/127 scale with the same 1e-6 floor, same clip; 8-bit "packing" is
+    a pure int8<->uint8 bitcast.  This equivalence is what pins the packed
+    engine token-for-token against the legacy engine below."""
+    spec = kvq.spec_for(8, 16)
+    t = _rand((2, 3, 7, 16), seed=11)
+    t = t.at[0, 0, 0].set(0)                         # exercise the floor
+    packed, scales = kvq.quant_channelwise(t, spec)
+    q8, s8 = attn.quant_per_token(t)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(q8.view(jnp.uint8)))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(s8))
+    legacy = (q8.astype(jnp.float32) * s8).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(kvq.dequant_channelwise(packed, scales, spec)).view(np.uint16),
+        np.asarray(legacy).view(np.uint16))
+
+
+# ---------------------------------------------------------------------------
+# Page composition: packed rows stream through the pool byte-for-byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits,page_size", [(8, 4), (4, 3), ((2, 4, 8), 2)])
+def test_packed_rows_survive_page_scatter_gather(kv_bits, page_size):
+    """Packing is feature-axis only — a page boundary never splits a byte —
+    so scatter_prefill + gather_pages reconstruct the packed dense ring
+    bitwise for ANY (group sizes, page_size) combination."""
+    B, KV, n_pp = 2, 2, 3
+    S = n_pp * page_size
+    spec = kvq.spec_for(kv_bits, 16)
+    t = _rand((B, KV, S, 16), seed=7)
+    packed, scales = kvq.quant_channelwise(t, spec)
+    NP = 1 + B * n_pp                                # + NULL page
+    pages = jnp.arange(1, NP, dtype=jnp.int32).reshape(B, n_pp)
+    wp_flat = pages.reshape(-1)
+    for leaf in (packed, scales):
+        pool = jnp.zeros((1, NP, KV, page_size, leaf.shape[-1]), leaf.dtype)
+        pool = paged.scatter_prefill(pool, leaf[None], wp_flat)
+        ring = paged.gather_pages(pool[0], pages)
+        np.testing.assert_array_equal(np.asarray(ring), np.asarray(leaf))
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas kernel vs jnp dequant reference (bitwise, jit vs jit)
+# ---------------------------------------------------------------------------
+
+def _jnp_reference(q, kp, ks, vp, vs, pos, spec):
+    """The legacy einsum formulation of gqa_decode's attention math over
+    the channel-wise dequantized ring — what the packed jnp path runs."""
+    B, KV, rep, hd = q.shape
+    S = kp.shape[2]
+    kf = kvq.dequant_channelwise(kp, ks, spec, jnp.bfloat16)
+    vf = kvq.dequant_channelwise(vp, vs, spec, jnp.bfloat16)
+    qh = q.reshape(B, KV * rep, 1, hd)
+    kfe = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf
+    vfe = jnp.repeat(vf, rep, axis=1) if rep > 1 else vf
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kfe).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(jnp.bfloat16)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vfe)
+    return o.reshape(B, KV, rep, hd)
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4, (2, 4, 8)])
+@pytest.mark.parametrize("qdtype", [jnp.bfloat16, jnp.float32])
+def test_fused_kernel_bitwise_matches_jnp_reference(kv_bits, qdtype):
+    """Both query dtypes matter: post-RoPE queries arrive f32 (the score
+    dot must promote like the einsum, not round to bf16 first), while
+    rope-free sites pass bf16."""
+    B, KV, rep, hd, S = 2, 2, 3, 16, 12
+    spec = kvq.spec_for(kv_bits, hd)
+    k = _rand((B, KV, S, hd), seed=3)
+    v = _rand((B, KV, S, hd), seed=4)
+    q = _rand((B, KV, rep, hd), seed=5, scale=1.0).astype(qdtype)
+    kp, ks = kvq.quant_channelwise(k, spec)
+    vp, vs = kvq.quant_channelwise(v, spec)
+    pos = jnp.asarray([5, S - 1], jnp.int32)
+    ref = jax.jit(lambda *a: _jnp_reference(*a, spec))(q, kp, ks, vp, vs, pos)
+    out = datt.decode_attention(q, kp, ks, vp, vs, pos,
+                                spec.bits, spec.sizes)
+    # compare bit patterns: both paths are jitted, and the per-block dot
+    # rounds bf16 identically to the batched einsum under jit
+    np.testing.assert_array_equal(np.asarray(out).view(np.uint16),
+                                  np.asarray(ref).view(np.uint16))
+
+
+# ---------------------------------------------------------------------------
+# Serving level: packed engines vs the legacy int8 engine
+# ---------------------------------------------------------------------------
+
+def _run_stagger(arch, **ekw):
+    over = ({"capacity_factor": 64.0} if arch == "deepseek-v3-671b" else {})
+    cfg, dp = _setup(arch, **over)
+    reqs = _stagger_trace(cfg, seed=2)
+    if cfg.family == "audio":
+        rng = np.random.default_rng(5)
+        for r in reqs:
+            r.extras["frames"] = (rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)) * 0.1).astype(np.float32)
+    eng = ServingEngine(cfg, dp, max_slots=STAGGER["B"],
+                        max_len=STAGGER["M"], prefill_len=STAGGER["P"],
+                        **ekw)
+    outs = eng.run(reqs, STAGGER["arrivals"])
+    return [outs[i].tokens.tolist() for i in range(len(reqs))], eng
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b",        # dense GQA
+                                  "deepseek-v3-671b",  # moe + mla latent
+                                  "whisper-small"])    # audio self + cross
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_packed_8bit_token_identical_to_int8_engine(arch, backend):
+    """The acceptance pin: at kv_bits=8 the packed paged engine (fused
+    Pallas AND jnp dequant) emits token-for-token the legacy int8 engine's
+    staggered trace, and never recompiles after its warmup launches.  The
+    baseline runs on the SAME backend — backends may legitimately differ
+    from each other in low bf16 bits (the linears), but within a backend
+    the packed cache must change nothing."""
+    base, _ = _run_stagger(arch, backend=backend)
+    got, eng = _run_stagger(arch, kv_bits=8, backend=backend)
+    assert got == base
+    counts = eng.compile_counts()
+    assert counts == {"admit": 1, "step": 1}, counts
+    # steady state: another trace through the same engine adds no entries
+    cfg = eng.cfg
+    reqs = _stagger_trace(cfg, seed=3)
+    if cfg.family == "audio":
+        rng = np.random.default_rng(6)
+        for r in reqs:
+            r.extras["frames"] = (rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)) * 0.1).astype(np.float32)
+    eng.run(reqs, STAGGER["arrivals"])
+    assert eng.compile_counts() == counts
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "deepseek-v3-671b"])
+def test_4bit_resident_bytes_strictly_below_int8(arch):
+    def mid_resident(**ekw):
+        over = ({"capacity_factor": 64.0}
+                if arch == "deepseek-v3-671b" else {})
+        cfg, dp = _setup(arch, **over)
+        eng = ServingEngine(cfg, dp, max_slots=STAGGER["B"],
+                            max_len=STAGGER["M"], prefill_len=STAGGER["P"],
+                            **ekw)
+        for r in _stagger_trace(cfg, seed=2)[:2]:
+            eng.submit(r)
+        for _ in range(6):
+            eng.step()
+        assert eng.live_slots > 0                    # measured mid-flight
+        return eng.kv_bytes_resident(), eng.kv_bytes_dense()
+
+    r4, d4 = mid_resident(kv_bits=4)
+    r8, d8 = mid_resident()
+    assert r4 < r8 and d4 < d8
+
+
+def test_mixed_bits_engine_runs_and_prices_between():
+    """A channel-wise (2, 8) policy serves end to end; its cache bytes sit
+    strictly between uniform 2-bit and the int8 baseline.  (At the reduced
+    head_dim the per-group f32 scales are a large fraction of a row, so a
+    milder mix like (4, 8) lands exactly ON the int8 figure — the byte
+    ordering that must hold for ANY mix is packed values + scales,
+    monotone in the assigned bits.)"""
+    cfg, dp = _setup("qwen1.5-4b")
+    _, eng_m = _run_stagger("qwen1.5-4b", kv_bits=(2, 8))
+    assert eng_m.compile_counts() == {"admit": 1, "step": 1}
+    d = {b: ServingEngine(cfg, dp, max_slots=2, max_len=16, prefill_len=8,
+                          kv_bits=b).kv_bytes_dense()
+         for b in (2, (2, 8), None)}
+    assert d[2] < d[(2, 8)] < d[None]
+
+
+def test_engine_rejects_unpackable_policy_eagerly():
+    cfg, dp = _setup("qwen1.5-4b")
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, dp, kv_bits=3, max_slots=2, max_len=16,
+                      prefill_len=8)

@@ -50,6 +50,7 @@ class Engine:
         self.driver = SearchDriver(apply_fn, loss_fn, specs, params, nas,
                                    settings)
         self.deployed_params: Optional[dict] = None
+        self.draft_params: Optional[dict] = None
         self._serve_fn = None
 
     @classmethod
@@ -105,7 +106,8 @@ class Engine:
                 rng.standard_normal(site["delta"].shape), jnp.float32)
         return self
 
-    def deploy(self, align: int = 1, tile_n="auto") -> dict:
+    def deploy(self, align: int = 1, tile_n="auto",
+               draft_bits: Optional[int] = None) -> dict:
         """Sec. III-C offline transform: searched float weights -> QTensor.
 
         Returns (and stores) the deployed params tree.  Channel order is
@@ -119,6 +121,17 @@ class Engine:
         models/tinyml.py naming contract) always skip the fused layout —
         their per-channel tap contraction is not a GEMM and never reads it.
 
+        ``draft_bits`` switches deploy to **dual-policy** mode: alongside
+        the searched (verifier) tree, every QTensor site is additionally
+        re-quantized to a uniform ``draft_bits`` channel assignment
+        (api/qtensor.requantize) — the aggressive end of the channel-wise
+        Pareto front, derived from the same checkpoint — and the return
+        value becomes ``{"verifier": tree, "draft": tree}`` (stored as
+        ``self.deployed_params`` / ``self.draft_params``).  Non-QTensor
+        site leaves (biases) are shared by reference between the trees.
+        The speculative ``ServingEngine`` pairs such a draft with its
+        verifier (docs/serving.md).
+
         Operates on **flat site-keyed params trees** (models/tinyml.py
         style: ``params[site]["w"]`` with ``site in nas``).  Nested /
         scan-stacked trees (models/transformer.py) deploy through
@@ -126,6 +139,7 @@ class Engine:
         one here raises rather than silently serving float weights.
         """
         from repro.core import deploy as dpl
+        from repro.api.qtensor import requantize
         params, nas = self.driver.params, self.driver.nas
         sites = [n for n in params if n in nas]
         if not sites:
@@ -135,6 +149,7 @@ class Engine:
                 "nested trees must be deployed per site via "
                 "models.serving.deployed_from_search")
         deployed = {}
+        draft = {}
         for name, p in params.items():
             if name in nas:
                 site_p = dict(p)
@@ -148,10 +163,17 @@ class Engine:
                 site_p.pop("aw", None)
                 site_p.pop("ax", None)
                 deployed[name] = site_p
+                if draft_bits is not None:
+                    draft[name] = dict(site_p, w=requantize(qt, draft_bits))
             else:
                 deployed[name] = p
+                if draft_bits is not None:
+                    draft[name] = p
         self.deployed_params = deployed
+        self.draft_params = draft if draft_bits is not None else None
         self._serve_fn = None
+        if draft_bits is not None:
+            return {"verifier": deployed, "draft": draft}
         return deployed
 
     def memory_bits(self) -> int:

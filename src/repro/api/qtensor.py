@@ -497,3 +497,46 @@ class QTensor:
             outs.append(jnp.einsum("...ck,ck->...c", seg, w))
             offset += rows
         return self._concat_restore(outs)
+
+
+def requantize(qt: QTensor, bits: int) -> QTensor:
+    """Re-quantize a deployed QTensor to a uniform ``bits`` assignment.
+
+    The one-checkpoint-many-precisions derivation behind speculative
+    drafting (models/serving.draft_model): dequantize the searched deploy
+    back to its canonical float view, then re-pack every channel at the
+    single aggressive ``bits`` with fresh per-channel amax clipping — a new
+    static assignment, NOT a lossy cast of the packed bytes.  Layer-stacked
+    (scan) and expert-stacked (MoE) leaves round-trip: leading stack axes
+    are rebuilt slice by slice offline and restacked, preserving the shared
+    static tile schedule, and ``experts`` is restored on the result.  The
+    fused single-launch layout, ``restore_order``, activation quantization
+    and conv kernel tail all carry over.
+    """
+    if bits not in (2, 4, 8):
+        raise ValueError(f"requantize bits must be one of (2, 4, 8); "
+                         f"got {bits}")
+    deq = lambda t: t.dequantize_canonical(jnp.float32)
+    for _ in range(qt.packed[0].ndim - 2):      # layer/expert stack axes
+        deq = jax.vmap(deq)
+    w = np.asarray(deq(qt))                     # (*stack, c_out, c_in)
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    assign = np.full(qt.c_out, bits, np.int64)
+    rebuilt = []
+    for i in range(flat.shape[0]):
+        wi = flat[i]
+        alpha = np.maximum(np.max(np.abs(wi), axis=1), 1e-8)
+        if qt.kernel_shape is not None:
+            wi = wi.reshape((qt.c_out,) + qt.kernel_shape)
+        rebuilt.append(QTensor.from_assignment(
+            wi, assign, alpha, bitwidths=(2, 4, 8),
+            restore_order=qt.restore_order, act_bits=qt.act_bits,
+            act_scale=qt.act_scale, tile_n=qt.tile_n))
+    if not lead:
+        return rebuilt[0]
+    out = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls).reshape(lead + ls[0].shape), *rebuilt)
+    if qt.experts is not None:
+        out = dataclasses.replace(out, experts=qt.experts)
+    return out

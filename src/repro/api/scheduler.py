@@ -99,8 +99,10 @@ _ENGINE_JITS: dict = {}
 
 
 def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
-                 page_size: Optional[int], kv_bits=None) -> dict:
-    key = (id(cfg), backend, sampling, page_size, kv_bits)
+                 page_size: Optional[int], kv_bits=None,
+                 speculate_k: int = 0, draft_kv_bits=None) -> dict:
+    key = (id(cfg), backend, sampling, page_size, kv_bits, speculate_k,
+           draft_kv_bits)
     ent = _ENGINE_JITS.get(key)
     if ent is None:
         from repro.models import serving
@@ -167,6 +169,88 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
         ent = {"cfg": cfg,
                "admit": jax.jit(_admit, donate_argnums=(5,)),
                "step": jax.jit(_step, donate_argnums=(2,))}
+
+        if speculate_k:
+            # Speculative serving replaces the admission executable with a
+            # combined verifier+draft prefill (the draft pool has no prefix
+            # sharing, so it prefills even slots the radix index admits with
+            # zero verifier FLOPs — ``dadmit`` covers ``admit``) and adds the
+            # round executables: a single-token draft step that also returns
+            # the logits row its token was sampled from, and a (k+1)-wide
+            # verify that fuses the multi-token decode with rejection
+            # sampling (api/sampling.speculative_accept).  The baseline
+            # ``step`` stays — it is the suppressed-slot fallback tick.
+            if page_size is None:
+                def _admit_spec(dp, ddp, batch, lens, admit, dadmit, tok_old,
+                                caches, dcaches, key):
+                    logits, pf = serving.prefill(dp, cfg, batch, backend,
+                                                 lens=lens, kv_bits=kv_bits)
+                    emb = serving.embed_caches(
+                        pf, jax.tree_util.tree_map(jnp.zeros_like, caches))
+
+                    def merge(sel):
+                        def m(new, old):
+                            s = sel.reshape((1, -1) + (1,) * (new.ndim - 2))
+                            return jnp.where(s, new, old)
+                        return m
+                    caches = jax.tree_util.tree_map(merge(admit), emb, caches)
+                    _, dpf = serving.prefill(ddp, cfg, batch, backend,
+                                             lens=lens, kv_bits=draft_kv_bits)
+                    demb = serving.embed_caches(
+                        dpf, jax.tree_util.tree_map(jnp.zeros_like, dcaches))
+                    dcaches = jax.tree_util.tree_map(merge(dadmit), demb,
+                                                     dcaches)
+                    tok = smp.sample(logits, sampling, key)
+                    return (jnp.where(admit[:, None], tok, tok_old), caches,
+                            dcaches)
+
+                def _draft(ddp, tokens, dcaches, pos, live, key):
+                    lg, dcaches = serving.decode_step(
+                        ddp, cfg, tokens, dcaches, pos, backend, live=live,
+                        kv_bits=draft_kv_bits)
+                    return smp.sample(lg, sampling, key), lg[:, 0], dcaches
+
+                def _verify(dp, tokens, caches, pos, live, dtok, dlg, key):
+                    lg, caches = serving.decode_step(
+                        dp, cfg, tokens, caches, pos, backend, live=live,
+                        kv_bits=kv_bits)
+                    acc, out = smp.speculative_accept(dtok, dlg, lg,
+                                                      sampling, key)
+                    return acc, out, caches
+            else:
+                def _admit_spec(dp, ddp, batch, lens, admit, dadmit, tok_old,
+                                caches, dcaches, wp_flat, dwp_flat, key):
+                    logits, pf = serving.prefill(dp, cfg, batch, backend,
+                                                 lens=lens, kv_bits=kv_bits)
+                    caches = serving.merge_paged_caches(cfg, pf, caches,
+                                                        admit, wp_flat)
+                    _, dpf = serving.prefill(ddp, cfg, batch, backend,
+                                             lens=lens, kv_bits=draft_kv_bits)
+                    dcaches = serving.merge_paged_caches(cfg, dpf, dcaches,
+                                                         dadmit, dwp_flat)
+                    tok = smp.sample(logits, sampling, key)
+                    return (jnp.where(admit[:, None], tok, tok_old), caches,
+                            dcaches)
+
+                def _draft(ddp, tokens, dcaches, pos, live, pages, key):
+                    lg, dcaches = serving.decode_step(
+                        ddp, cfg, tokens, dcaches, pos, backend, live=live,
+                        pages=pages, page_size=page_size,
+                        kv_bits=draft_kv_bits)
+                    return smp.sample(lg, sampling, key), lg[:, 0], dcaches
+
+                def _verify(dp, tokens, caches, pos, live, pages, dtok, dlg,
+                            key):
+                    lg, caches = serving.decode_step(
+                        dp, cfg, tokens, caches, pos, backend, live=live,
+                        pages=pages, page_size=page_size, kv_bits=kv_bits)
+                    acc, out = smp.speculative_accept(dtok, dlg, lg,
+                                                      sampling, key)
+                    return acc, out, caches
+
+            ent["admit"] = jax.jit(_admit_spec, donate_argnums=(7, 8))
+            ent["draft_step"] = jax.jit(_draft, donate_argnums=(2,))
+            ent["verify"] = jax.jit(_verify, donate_argnums=(2,))
         _ENGINE_JITS[key] = ent
     return ent
 
@@ -229,6 +313,17 @@ class ServingEngine:
     ``backend="pallas"`` decodes GQA rings through the fused dequant
     decode-attention kernel.  Part of the jit key: one policy = one warmup,
     zero recompiles after.
+
+    ``speculate_k`` > 0 turns every decode tick into a speculative round
+    (``_speculative_tick``): a draft model (``draft_dparams``, default the
+    verifier itself; pair it with a low-bit re-quantization from
+    ``serving.draft_model`` / dual-policy ``Engine.deploy``) proposes k
+    tokens in k single-token launches against its own private KV pool
+    (``draft_kv_bits`` independently settable), then ONE (k+1)-wide verify
+    launch scores all of them and rejection sampling keeps the longest
+    valid prefix plus a correction token.  Under greedy sampling the
+    emitted stream is bit-identical to the non-speculative engine's on the
+    same backend — the parity anchor tests/test_speculative.py pins.
     """
 
     def __init__(self, cfg, dparams, backend: str = "jnp",
@@ -236,10 +331,33 @@ class ServingEngine:
                  prefill_len: Optional[int] = None,
                  sampling: smp.SamplingParams = smp.GREEDY, seed: int = 0,
                  page_size="auto", num_pages: Optional[int] = None,
-                 prefix_sharing="auto", kv_bits=None):
+                 prefix_sharing="auto", kv_bits=None, speculate_k: int = 0,
+                 draft_dparams=None, draft_kv_bits=None):
         from repro.models import serving
         self.cfg, self.dparams, self.backend = cfg, dparams, backend
         self.max_slots, self.max_len = max_slots, max_len
+        self.speculate_k = int(speculate_k)
+        if self.speculate_k < 0:
+            raise ValueError("speculate_k must be >= 0")
+        if self.speculate_k:
+            if not serving.supports_speculative(cfg):
+                raise ValueError(
+                    f"family {cfg.family!r} cannot serve speculatively "
+                    "(serving.supports_speculative): rewinding to the "
+                    "accepted length needs position-addressed cache writes")
+            if isinstance(draft_kv_bits, (list, tuple)):
+                draft_kv_bits = tuple(int(b) for b in draft_kv_bits)
+            serving.kv_specs(cfg, draft_kv_bits)
+        else:
+            draft_kv_bits = None
+            draft_dparams = None
+        self.draft_kv_bits = draft_kv_bits
+        # self-draft by default: the verifier proposes for itself — the
+        # degenerate case the greedy parity tests pin (every proposal
+        # accepted, output bit-identical to the baseline engine)
+        self.draft_dparams = (dparams if (self.speculate_k
+                                          and draft_dparams is None)
+                              else draft_dparams)
         # normalize to a hashable jit-key component and resolve eagerly: an
         # unpackable feature axis raises HERE (engine construction), never
         # inside a jitted launch
@@ -280,8 +398,13 @@ class ServingEngine:
         self.prefix_sharing = bool(prefix_sharing)
 
         self.sampling = sampling
-        fns = _engine_jits(cfg, backend, sampling, page_size, kv_bits)
+        fns = _engine_jits(cfg, backend, sampling, page_size, kv_bits,
+                           speculate_k=self.speculate_k,
+                           draft_kv_bits=draft_kv_bits)
         self._admit_fn, self._step_fn = fns["admit"], fns["step"]
+        if self.speculate_k:
+            self._draft_fn = fns["draft_step"]
+            self._verify_fn = fns["verify"]
 
         if page_size is None:
             self.pool = None
@@ -309,6 +432,35 @@ class ServingEngine:
         self._reserved = 0              # pages promised to live slots
         self._suppress = np.zeros(max_slots, bool)
 
+        if self.speculate_k:
+            if page_size is None:
+                self.draft_caches = serving.init_caches(
+                    cfg, max_slots, max_len, kv_bits=draft_kv_bits)
+                self._draft_pages = None
+                self._draft_num_pages = 0
+            else:
+                # private draft pool behind a STATIC identity page table:
+                # slot i owns pages [1 + i*pps, 1 + (i+1)*pps) forever — no
+                # allocator, no sharing, nothing to release.  Rewind after a
+                # rejected proposal is the same masked-overwrite contract as
+                # the verifier pool: entries above the accepted position are
+                # never read (``<= pos`` masks) and the next round's writes
+                # land on them in order.
+                dnp = 1 + max_slots * self.pages_per_slot
+                self.draft_caches = serving.init_paged_caches(
+                    cfg, max_slots, dnp, page_size, kv_bits=draft_kv_bits)
+                self._draft_num_pages = dnp
+                self._draft_pages = jnp.asarray(
+                    1 + np.arange(max_slots * self.pages_per_slot,
+                                  dtype=np.int32).reshape(
+                                      max_slots, self.pages_per_slot))
+        # one pending catch-up token per slot: fed to the draft at pos-1
+        # before the next round's proposals (set when a round accepts all k
+        # — the draft never consumed its own last token — or when a
+        # suppressed-slot fallback tick advanced the verifier without it)
+        self._catchup = np.zeros(max_slots, bool)
+        self._catchup_tok = np.zeros(max_slots, np.int64)
+
         self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
         self._pos = np.zeros(max_slots, np.int64)
         self._live = np.zeros(max_slots, bool)
@@ -322,13 +474,24 @@ class ServingEngine:
                           useful_tokens=0, occupancy_sum=0.0, idle_ticks=0,
                           prefix_hits=0, zero_prefill_admits=0,
                           cached_tokens=0, deferred_admissions=0,
-                          evictions=0, pages_peak=0)
+                          evictions=0, pages_peak=0, draft_launches=0,
+                          verify_launches=0, spec_rounds=0,
+                          accepted_tokens=0)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, request: Request) -> int:
         """Queue a request for admission; returns its request id."""
         rid = self._next_rid
-        L = int(np.asarray(request.tokens).shape[0])
+        toks = np.asarray(request.tokens)
+        if toks.ndim != 1:
+            raise ValueError(
+                f"request {rid}: prompt must be a 1-D array of token ids; "
+                f"got shape {toks.shape}")
+        if not np.issubdtype(toks.dtype, np.integer):
+            raise ValueError(
+                f"request {rid}: prompt dtype {toks.dtype} is not an "
+                "integer type — token ids would be silently truncated")
+        L = int(toks.shape[0])
         if not 1 <= L <= self.prefill_len:
             raise ValueError(f"request {rid}: prompt length {L} not in "
                              f"[1, prefill_len={self.prefill_len}]")
@@ -388,8 +551,12 @@ class ServingEngine:
         """Jit-cache sizes of the two engine executables (recompile guard:
         after a warmup trace these must never grow — same-shaped launches
         forever, the whole point of the fixed-width slot pool)."""
-        return {"admit": self._admit_fn._cache_size(),
-                "step": self._step_fn._cache_size()}
+        out = {"admit": self._admit_fn._cache_size(),
+               "step": self._step_fn._cache_size()}
+        if self.speculate_k:
+            out["draft"] = self._draft_fn._cache_size()
+            out["verify"] = self._verify_fn._cache_size()
+        return out
 
     # -- KV residency metrics ------------------------------------------------
     def kv_bytes_dense(self) -> int:
@@ -436,9 +603,10 @@ class ServingEngine:
         Admission has priority: if any slot is free, requests are queued
         and (paged mode) the head of the queue passes the page-reservation
         gate, refill (at most one fixed-width prefill launch; fully-cached
-        prompts admit with NO launch).  Otherwise run one decode tick over
-        the live slots.  Returns a small stats dict (``kind`` in
-        {"prefill", "cached", "decode", "idle"}).
+        prompts admit with NO launch).  Otherwise run one decode tick —
+        a speculative round when ``speculate_k`` > 0 — over the live
+        slots.  Returns a small stats dict (``kind`` in {"prefill",
+        "cached", "decode", "speculative", "idle"}).
         """
         free = [i for i, s in enumerate(self._slots) if s is None]
         if self.queue and free:
@@ -446,7 +614,8 @@ class ServingEngine:
             if out is not None:
                 return out
         if self._live.any():
-            return self._decode_tick()
+            return (self._speculative_tick() if self.speculate_k
+                    else self._decode_tick())
         self.stats["idle_ticks"] += 1
         return {"kind": "idle"}
 
@@ -525,9 +694,13 @@ class ServingEngine:
         rows = np.zeros((B, P), np.int32)
         lens = np.ones(B, np.int32)
         admit = np.zeros(B, bool)
+        dadmit = np.zeros(B, bool)
         wp_flat = (None if self.pool is None else
                    np.full(B * self.n_prompt_pages, self.pool.num_pages,
                            np.int32))
+        dwp_flat = (None if (self.pool is None or not self.speculate_k) else
+                    np.full(B * self.n_prompt_pages, self._draft_num_pages,
+                            np.int32))
         boot: List[tuple] = []          # (slot, last prompt token)
         extras: Dict[str, np.ndarray] = {}
         if self.cfg.family == "audio":
@@ -544,6 +717,17 @@ class ServingEngine:
             for k, v in req.extras.items():
                 extras[k][slot] = v
             self._live[slot] = True
+            if self.speculate_k:
+                # the draft pool never prefix-shares: prefill it for every
+                # admitted slot, including full-hit boots the verifier
+                # admits with zero prefill FLOPs
+                self._catchup[slot] = False
+                dadmit[slot] = True
+                if dwp_flat is not None:
+                    dbase = slot * self.n_prompt_pages
+                    dpage0 = 1 + slot * self.pages_per_slot
+                    for j in range(-(-L // T)):
+                        dwp_flat[dbase + j] = dpage0 + j
             if self.pool is None:
                 rows[slot, :L] = toks
                 admit[slot] = True
@@ -566,6 +750,10 @@ class ServingEngine:
                 self._pos[slot] = L - 1
                 self._suppress[slot] = len(matched) * T == L
                 boot.append((slot, int(toks[-1])))
+                if self.speculate_k:
+                    # the verifier merge ignores this row (admit stays
+                    # False); the draft prefill still needs the prompt
+                    rows[slot, :L] = toks
             else:
                 rows[slot, :L] = toks
                 admit[slot] = True
@@ -579,16 +767,26 @@ class ServingEngine:
         if self.pool is not None:
             self._note_pool()
 
-        launched = bool(admit.any())
+        launched = bool(dadmit.any() if self.speculate_k else admit.any())
         if launched:
             batch = {"tokens": jnp.asarray(rows)}
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
-            args = (self.dparams, batch, jnp.asarray(lens),
-                    jnp.asarray(admit), self.tokens, self.caches)
-            if self.pool is not None:
-                args += (jnp.asarray(wp_flat),)
-            self.tokens, self.caches = self._admit_fn(*args,
-                                                      self._next_key())
+            if self.speculate_k:
+                args = (self.dparams, self.draft_dparams, batch,
+                        jnp.asarray(lens), jnp.asarray(admit),
+                        jnp.asarray(dadmit), self.tokens, self.caches,
+                        self.draft_caches)
+                if self.pool is not None:
+                    args += (jnp.asarray(wp_flat), jnp.asarray(dwp_flat))
+                self.tokens, self.caches, self.draft_caches = \
+                    self._admit_fn(*args, self._next_key())
+            else:
+                args = (self.dparams, batch, jnp.asarray(lens),
+                        jnp.asarray(admit), self.tokens, self.caches)
+                if self.pool is not None:
+                    args += (jnp.asarray(wp_flat),)
+                self.tokens, self.caches = self._admit_fn(*args,
+                                                          self._next_key())
             self.stats["prefill_launches"] += 1
             self.stats["useful_tokens"] += int(admit.sum())
         if boot:
@@ -633,6 +831,124 @@ class ServingEngine:
             self._record(int(slot), int(tok_np[slot]))
         return {"kind": "decode", "live": n_live}
 
+    def _drain_catchup(self, live: np.ndarray) -> None:
+        """Feed every pending catch-up token to the draft at ``pos - 1`` in
+        ONE batched draft launch (its logits predict a position already
+        emitted — discarded): afterwards the draft ring covers every
+        position below each slot's frontier."""
+        mask = self._catchup & live
+        if not mask.any():
+            return
+        toks = np.asarray(self.tokens).copy()
+        toks[mask, 0] = self._catchup_tok[mask]
+        pos = self._pos.copy()
+        pos[mask] -= 1
+        args = (self.draft_dparams, jnp.asarray(toks), self.draft_caches,
+                jnp.asarray(pos, jnp.int32), jnp.asarray(mask))
+        if self.pool is not None:
+            args += (self._draft_pages,)
+        _, _, self.draft_caches = self._draft_fn(*args, self._next_key())
+        self.stats["draft_launches"] += 1
+        self._catchup[mask] = False
+
+    def _speculative_tick(self) -> dict:
+        """One speculative round: [catch-up draft] + k draft launches + ONE
+        (k+1)-wide verify launch; every live slot emits 1..k+1 tokens.
+
+        The draft proposes d_1..d_k from the last emitted token t at
+        position p (each single-token launch also writes the draft's KV);
+        the verify launch feeds ``[t, d_1..d_k]`` at positions ``p..p+k``
+        through the multi-token decode path and fuses rejection sampling
+        (greedy: longest argmax-prefix match, so the emitted stream is the
+        baseline verifier stream token for token — for ANY draft).  Both
+        caches rewind by masked overwrite: rejected positions are above the
+        new frontier, never read, and overwritten in order next round.
+
+        Suppressed slots (full-prefix-hit boot, first tick) fall back to a
+        baseline decode tick for everyone: their write position lives in a
+        shared read-only radix page, which the W-wide batched scatter
+        cannot skip per-position; the draft catches up next round.
+        """
+        live = self._live.copy()
+        k = self.speculate_k
+        if (live & self._suppress).any():
+            self._drain_catchup(live)
+            fed = {int(s): int(np.asarray(self.tokens)[s, 0])
+                   for s in np.nonzero(live)[0]}
+            out = self._decode_tick()
+            for s, t in fed.items():
+                if self._slots[s] is not None:  # draft missed this token
+                    self._catchup[s] = True
+                    self._catchup_tok[s] = t
+            return out
+        if self.pool is not None:
+            # map every verifier page the verify scatter can land on (up to
+            # the slot's write budget — beyond it the entries stay NULL and
+            # the writes drop); all within the reserved worst-case pages,
+            # so these allocations are guaranteed to succeed
+            T = self.page_size
+            for slot in np.nonzero(live)[0]:
+                st = self._slots[slot]
+                p = int(self._pos[slot])
+                last = min(p + k, st.prompt_len + st.max_tokens - 2)
+                for pidx in range(p // T, last // T + 1):
+                    if self._pages[slot, pidx] == NULL_PAGE:
+                        (pg,) = self.pool.alloc(1)
+                        self._pages[slot, pidx] = pg
+                        st.mapped += 1
+                        self._reserved -= 1
+            self._note_pool()
+        self._drain_catchup(live)
+        live_j = jnp.asarray(live)
+        pos0 = self._pos.copy()
+        cur = self.tokens
+        dtoks, dlgs = [], []
+        for j in range(k):
+            args = (self.draft_dparams, cur, self.draft_caches,
+                    jnp.asarray(pos0 + j, jnp.int32), live_j)
+            if self.pool is not None:
+                args += (self._draft_pages,)
+            cur, row, self.draft_caches = self._draft_fn(*args,
+                                                         self._next_key())
+            self.stats["draft_launches"] += 1
+            dtoks.append(cur)
+            dlgs.append(row)
+        draft_toks = jnp.concatenate(dtoks, axis=1)           # (B, k)
+        draft_logits = jnp.stack(dlgs, axis=1)                # (B, k, V)
+        tokens_w = jnp.concatenate([self.tokens, draft_toks], axis=1)
+        args = (self.dparams, tokens_w, self.caches,
+                jnp.asarray(pos0, jnp.int32), live_j)
+        if self.pool is not None:
+            args += (jnp.asarray(self._pages),)
+        accepted, out_tokens, self.caches = self._verify_fn(
+            *args, draft_toks, draft_logits, self._next_key())
+        self.stats["verify_launches"] += 1
+        self.stats["spec_rounds"] += 1
+        acc = np.asarray(accepted)
+        out_np = np.asarray(out_tokens)
+        n_live = int(live.sum())
+        self.stats["occupancy_sum"] += n_live / self.max_slots
+        tok_np = np.asarray(self.tokens).copy()
+        for slot in np.nonzero(live)[0]:
+            m = int(acc[slot])
+            self.stats["accepted_tokens"] += m
+            for j in range(m + 1):
+                self._record(int(slot), int(out_np[slot, j]))
+                self.stats["useful_tokens"] += 1
+                if self._slots[slot] is None:   # finished mid-round: the
+                    break                       # rest of the window drops
+            self._pos[slot] += m + 1
+            if self._slots[slot] is not None:
+                tok_np[slot, 0] = out_np[slot, m]
+                if m == k:
+                    # all accepted: the draft sampled d_k but never fed it
+                    # — its KV at position p+k is owed before next round
+                    self._catchup[slot] = True
+                    self._catchup_tok[slot] = int(out_np[slot, k - 1])
+        self.tokens = jnp.asarray(tok_np)
+        return {"kind": "speculative", "live": n_live,
+                "accepted": [int(a) for a in acc[live]]}
+
     def _record(self, slot: int, token: int) -> None:
         st = self._slots[slot]
         st.generated.append(token)
@@ -651,11 +967,12 @@ class ServingEngine:
                 self._note_pool()
             self._slots[slot] = None
             self._live[slot] = False
+            self._catchup[slot] = False
 
     # -- whole-trace driver --------------------------------------------------
     def run(self, requests: Sequence[Request],
             arrivals: Optional[Sequence[int]] = None
-            ) -> Dict[int, RequestOutput]:
+            ) -> Dict[object, RequestOutput]:
         """Serve a trace to completion; returns outputs keyed by the
         request's index in ``requests``.
 
@@ -663,6 +980,11 @@ class ServingEngine:
         ticks (default: all at tick 0 — the synchronized case).  A request
         is submitted the first tick at/after its arrival; the loop runs
         idle ticks while waiting on future arrivals.
+
+        Requests that were ``submit()``-ed directly before this call also
+        finish under the loop; since they have no index in ``requests``,
+        their outputs come back under the string key ``f"rid:{rid}"``
+        instead of clashing with (or crashing on) the positional keys.
         """
         arrivals = ([0] * len(requests) if arrivals is None
                     else [int(a) for a in arrivals])
@@ -670,7 +992,7 @@ class ServingEngine:
             raise ValueError("arrivals and requests length mismatch")
         order = sorted(range(len(requests)), key=lambda i: (arrivals[i], i))
         rid_to_idx: Dict[int, int] = {}
-        outs: Dict[int, RequestOutput] = {}
+        outs: Dict[object, RequestOutput] = {}
         nxt, t = 0, 0
         while nxt < len(order) or self.has_work():
             while nxt < len(order) and arrivals[order[nxt]] <= t:
@@ -679,6 +1001,9 @@ class ServingEngine:
                 nxt += 1
             self.step()
             for out in self.collect():
-                outs[rid_to_idx[out.rid]] = out
+                if out.rid in rid_to_idx:
+                    outs[rid_to_idx[out.rid]] = out
+                else:           # submitted before run(): key by request id
+                    outs[f"rid:{out.rid}"] = out
             t += 1
         return outs

@@ -46,15 +46,27 @@ def write_coords(pos: jnp.ndarray, live: Optional[jnp.ndarray],
     unmapped or masking ``live``) — get page index ``num_pages``, out of
     bounds so the ``mode="drop"`` scatter skips them.  The NULL page is
     thereby never written and stays all-zero.
+
+    ``pos`` may also be ``(B, W)`` — the multi-token verify launch of
+    speculative decoding writes ``W`` consecutive entries per slot in one
+    scatter; the returned coordinate arrays are then ``(B, W)`` with the
+    same drop rules applied elementwise (``live`` still masks whole
+    slots).  A write that lands past the slot's mapped pages is dropped,
+    never unwound — the cache-rewind contract: rejected draft positions
+    stay masked (``<= pos``) until later writes overwrite them.
     """
     pos = pos.astype(jnp.int32)
     P = pages.shape[1]
     S = P * page_size
-    wpos = pos if live is None else jnp.where(live, pos, S)
+    vec = pos.ndim == 1
+    posw = pos[:, None] if vec else pos                    # (B, W)
+    wpos = posw if live is None else jnp.where(live[:, None], posw, S)
     pidx = jnp.clip(wpos // page_size, 0, P - 1)
-    phys = jnp.take_along_axis(pages, pidx[:, None], axis=1)[:, 0]
+    phys = jnp.take_along_axis(pages, pidx, axis=1)        # (B, W)
     drop = (wpos >= S) | (phys == 0)
-    return jnp.where(drop, num_pages, phys), wpos % page_size
+    phys = jnp.where(drop, num_pages, phys)
+    off = wpos % page_size
+    return (phys[:, 0], off[:, 0]) if vec else (phys, off)
 
 
 def scatter_prefill(pool: jnp.ndarray, pf: jnp.ndarray,

@@ -13,6 +13,10 @@ index, ``--no-prefix-sharing`` to disable).  ``--page-size 0`` serves the
 dense per-slot rings instead.  ``--lockstep`` runs the same trace
 wave-at-a-time through the engine (submit a wave, drain it, repeat) — the
 shortest-job-barrier baseline continuous batching removes.
+``--speculate-k K`` serves speculatively: a draft proposes K tokens per
+verify launch (``--draft-bits B`` re-quantizes the draft to a uniform
+B-bit channel assignment — the aggressive end of the paper's channel-wise
+Pareto front; default self-draft).
 
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \
@@ -58,6 +62,9 @@ def build_trace(cfg, args, rng):
 
 def _engine(cfg, dparams, args):
     page_size = {0: None, -1: "auto"}.get(args.page_size, args.page_size)
+    draft = None
+    if args.speculate_k and args.draft_bits:
+        draft = serving.draft_model(dparams, cfg, args.draft_bits)
     return ServingEngine(cfg, dparams, backend=args.backend,
                          max_slots=args.slots,
                          max_len=args.prompt_len + args.gen,
@@ -65,7 +72,9 @@ def _engine(cfg, dparams, args):
                          page_size=page_size,
                          num_pages=args.num_pages or None,
                          prefix_sharing=(False if args.no_prefix_sharing
-                                         else "auto"))
+                                         else "auto"),
+                         speculate_k=args.speculate_k,
+                         draft_dparams=draft)
 
 
 def _paged_line(eng):
@@ -97,6 +106,14 @@ def run_continuous(cfg, dparams, reqs, arrivals, args):
           f"decode steps = {steps} launches, slot occupancy {occ:.2f}, "
           f"jit entries {eng.compile_counts()}")
     print(_paged_line(eng))
+    if eng.speculate_k:
+        vl = steps + st["verify_launches"]  # verifier-model launches
+        acc = (st["accepted_tokens"] / st["verify_launches"]
+               if st["verify_launches"] else 0.0)
+        print(f"speculative: k={eng.speculate_k}, {st['spec_rounds']} "
+              f"rounds, {acc:.2f} drafts accepted/verify, "
+              f"{st['useful_tokens'] / vl:.2f} useful tokens per "
+              f"verifier launch (+{st['draft_launches']} draft launches)")
     first = outs[0]
     print("sample token ids:", first.tokens[:16])
     return dt, st["useful_tokens"]
@@ -142,6 +159,12 @@ def main() -> None:
                    help="physical page pool size (0 = default sizing)")
     p.add_argument("--no-prefix-sharing", action="store_true",
                    help="disable the radix prompt-prefix index")
+    p.add_argument("--speculate-k", type=int, default=0,
+                   help="speculative decoding: draft k tokens per verify "
+                        "launch (0 = off)")
+    p.add_argument("--draft-bits", type=int, default=0,
+                   help="re-quantize the draft to this uniform channel "
+                        "bit-width (0 = self-draft at full precision)")
     p.add_argument("--lockstep", action="store_true",
                    help="also run the wave-at-a-time lockstep baseline")
     p.add_argument("--production-mesh", action="store_true")

@@ -277,6 +277,9 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
     the jnp dequant reference — token-identical paths, pinned by
     tests/test_kv_quant.py.
     """
+    if x.shape[1] > 1:                # speculative verify: W tokens at once
+        return _gqa_decode_multi(p, cfg, x, cache, pos, dq_linear, live,
+                                 pages, page_size, kv_spec, backend)
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = cfg.cdtype
@@ -360,6 +363,112 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
     o = jnp.einsum("bhqk,bhkd->bhqd", w, vfe)
     o = o.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
     return dq_linear(o, p["wo"]), cache
+
+
+def _gqa_decode_multi(p: dict, cfg, x: jnp.ndarray, cache: dict,
+                      pos: jnp.ndarray, dq_linear,
+                      live: Optional[jnp.ndarray] = None,
+                      pages: Optional[jnp.ndarray] = None,
+                      page_size: Optional[int] = None,
+                      kv_spec: Optional[kvq.KVQuantSpec] = None,
+                      backend: str = "jnp") -> tuple[jnp.ndarray, dict]:
+    """W-token verify decode: one batched KV scatter, then W attention steps.
+
+    ``x (B, W, d)`` are the speculative verify inputs ``[t0, d1..d_{W-1}]``;
+    row ``b``'s token ``j`` lives at ring position ``pos[b] + j``, so ALL W
+    entries are written in one scatter up front.  That is the cache-rewind
+    contract: entries past the eventually-accepted length are never
+    unwound — the ``<= pos`` attention mask keeps them invisible until a
+    later write overwrites them (exactly like stale reused pages, pinned by
+    tests/test_paged_cache.py).  Attention then runs as W successive
+    single-query steps whose operands match the baseline :func:`gqa_decode`
+    step for step — same masks, same per-step fused-kernel calls — so the
+    verify logits are bit-identical to W sequential decode launches (the
+    greedy parity anchor of tests/test_speculative.py).
+    """
+    B, W, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.cdtype
+    pos = jnp.asarray(pos, jnp.int32)
+    posk = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B, W)
+    q = dq_linear(x, p["wq"]).reshape(B, W, H, hd)
+    k = dq_linear(x, p["wk"]).reshape(B, W, KV, hd)
+    v = dq_linear(x, p["wv"]).reshape(B, W, KV, hd)
+    if cfg.rope_partial > 0:
+        cos, sin, rot = L.rope_freqs(hd, cfg.rope_theta, posk,
+                                     cfg.rope_partial)
+        q = L.apply_rope(q, cos, sin, rot)
+        k = L.apply_rope(k, cos, sin, rot)
+    if kv_spec is None:
+        kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))  # (B, KV, W, ...)
+        vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
+    else:
+        kq, ks = kvq.quant_channelwise(k.transpose(0, 2, 1, 3), kv_spec)
+        vq, vs = kvq.quant_channelwise(v.transpose(0, 2, 1, 3), kv_spec)
+    kq, ks = kq.transpose(0, 2, 1, 3), ks.transpose(0, 2, 1, 3)  # (B, W, KV, .)
+    vq, vs = vq.transpose(0, 2, 1, 3), vs.transpose(0, 2, 1, 3)
+    if pages is None:
+        S = cache["k"].shape[2]
+        bidx = jnp.arange(B)[:, None]                            # (B, 1)
+        wposk = posk if live is None else jnp.where(live[:, None], posk, S)
+        # advanced indices (bidx, wposk) separated by the KV-head slice ->
+        # their broadcast (B, W) dims lead, so values are (B, W, KV, feat)
+        cache = {
+            "k": cache["k"].at[bidx, :, wposk].set(kq, mode="drop"),
+            "v": cache["v"].at[bidx, :, wposk].set(vq, mode="drop"),
+            "k_scale": cache["k_scale"].at[bidx, :, wposk].set(ks,
+                                                               mode="drop"),
+            "v_scale": cache["v_scale"].at[bidx, :, wposk].set(vs,
+                                                               mode="drop"),
+        }
+        ki, vi, ksc, vsc = (cache["k"], cache["v"],
+                            cache["k_scale"], cache["v_scale"])
+    else:
+        NP = cache["k"].shape[0]
+        S = pages.shape[1] * page_size
+        phys, off = paged.write_coords(posk, live, pages, page_size, NP)
+        cache = {
+            "k": cache["k"].at[phys, :, off].set(kq, mode="drop"),
+            "v": cache["v"].at[phys, :, off].set(vq, mode="drop"),
+            "k_scale": cache["k_scale"].at[phys, :, off].set(ks,
+                                                             mode="drop"),
+            "v_scale": cache["v_scale"].at[phys, :, off].set(vs,
+                                                             mode="drop"),
+        }
+        ki = paged.gather_pages(cache["k"], pages)       # (B, KV, S, hd)
+        vi = paged.gather_pages(cache["v"], pages)
+        ksc = paged.gather_pages(cache["k_scale"], pages)
+        vsc = paged.gather_pages(cache["v_scale"], pages)
+    rep = H // KV
+    outs = []
+    if kv_spec is not None and backend == "pallas":
+        for j in range(W):
+            qg = q[:, j:j + 1].transpose(0, 2, 1, 3).reshape(B, KV, rep, hd)
+            o = datt_kernel.decode_attention(qg, ki, ksc, vi, vsc,
+                                             posk[:, j], kv_spec.bits,
+                                             kv_spec.sizes, out_dtype=cd,
+                                             interpret=datt_kernel.INTERPRET)
+            outs.append(o.reshape(B, 1, H * hd))
+        return dq_linear(jnp.concatenate(outs, axis=1), p["wo"]), cache
+    if kv_spec is None:
+        kf = (ki.astype(jnp.float32) * ksc).astype(cd)
+        vf = (vi.astype(jnp.float32) * vsc).astype(cd)
+    else:
+        kf = kvq.dequant_channelwise(ki, ksc, kv_spec, cd)
+        vf = kvq.dequant_channelwise(vi, vsc, kv_spec, cd)
+    kfe = jnp.repeat(kf, rep, axis=1) if rep > 1 else kf  # (B, H, S, hd)
+    vfe = jnp.repeat(vf, rep, axis=1) if rep > 1 else vf
+    for j in range(W):
+        qh = q[:, j:j + 1].transpose(0, 2, 1, 3)          # (B, H, 1, hd)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kfe).astype(jnp.float32)
+        s = s / math.sqrt(hd)
+        valid = (jnp.arange(S)[None, None, None, :]
+                 <= posk[:, j][:, None, None, None])
+        s = jnp.where(valid, s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1).astype(cd)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w, vfe)
+        outs.append(o.transpose(0, 2, 1, 3).reshape(B, 1, H * hd))
+    return dq_linear(jnp.concatenate(outs, axis=1), p["wo"]), cache
 
 
 # ---------------------------------------------------------------------------
@@ -477,6 +586,9 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     decode-attention kernel), so the channel-wise jnp dequant IS the packed
     path here, on every backend.
     """
+    if x.shape[1] > 1:                # speculative verify: W tokens at once
+        return _mla_decode_multi(p, cfg, x, cache, pos, dq_linear, live,
+                                 pages, page_size, kv_spec)
     B = x.shape[0]
     H = cfg.n_heads
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -550,6 +662,96 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     o = jnp.einsum("bhqk,bkhv->bqhv", w, v.astype(cd))   # (B, 1, H, vd)
     o = o.reshape(B, 1, H * vd)
     return dq_linear(o, p["wo"]), cache
+
+
+def _mla_decode_multi(p: dict, cfg, x: jnp.ndarray, cache: dict,
+                      pos: jnp.ndarray, dq_linear,
+                      live: Optional[jnp.ndarray] = None,
+                      pages: Optional[jnp.ndarray] = None,
+                      page_size: Optional[int] = None,
+                      kv_spec: Optional[kvq.KVQuantSpec] = None
+                      ) -> tuple[jnp.ndarray, dict]:
+    """W-token MLA verify decode — see :func:`_gqa_decode_multi` for the
+    write-then-mask contract.  The W latents land in one batched scatter;
+    the packed ``wkv_b`` expansion then runs once over the full ring
+    (identical to the baseline step, which also expands all ``S`` cached
+    latents), and attention runs W single-query steps under the per-step
+    ``<= pos + j`` mask."""
+    B, W, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    cd = cfg.cdtype
+    pos = jnp.asarray(pos, jnp.int32)
+    posk = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B, W)
+
+    cq = L.rmsnorm(dq_linear(x, p["wq_a"]), p["q_norm"])
+    q = dq_linear(cq, p["wq_b"]).reshape(B, W, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    ckv_new = dq_linear(x, p["wkv_a"])
+    c_kv, k_rope_new = ckv_new[..., :kvr], ckv_new[..., kvr:]
+    c_kv = L.rmsnorm(c_kv, p["kv_norm"])
+
+    cos, sin, rot = L.rope_freqs(rope, cfg.rope_theta, posk, 1.0)
+    q_rope = L.apply_rope(q_rope, cos, sin, rot)
+    k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], cos, sin, rot)[:, :, 0]
+
+    if kv_spec is None:
+        qc, qs = quant_per_token(c_kv)             # (B, W, kvr) / (B, W, 1)
+    else:
+        qc, qs = kvq.quant_channelwise(c_kv, kv_spec)
+    if pages is None:
+        S = cache["ckv"].shape[1]
+        bidx = jnp.arange(B)[:, None]                            # (B, 1)
+        wposk = posk if live is None else jnp.where(live[:, None], posk, S)
+        # adjacent advanced indices (bidx, wposk) broadcast in place ->
+        # values are (B, W, feat)
+        cache = {
+            "ckv": cache["ckv"].at[bidx, wposk].set(qc, mode="drop"),
+            "ckv_scale": cache["ckv_scale"].at[bidx, wposk].set(qs,
+                                                                mode="drop"),
+            "krope": cache["krope"].at[bidx, wposk].set(
+                k_rope_new.astype(jnp.bfloat16), mode="drop"),
+        }
+        ckv_i, ckv_s, krope_i = (cache["ckv"], cache["ckv_scale"],
+                                 cache["krope"])
+    else:
+        NP = cache["ckv"].shape[0]
+        S = pages.shape[1] * page_size
+        phys, off = paged.write_coords(posk, live, pages, page_size, NP)
+        cache = {
+            "ckv": cache["ckv"].at[phys, off].set(qc, mode="drop"),
+            "ckv_scale": cache["ckv_scale"].at[phys, off].set(qs,
+                                                              mode="drop"),
+            "krope": cache["krope"].at[phys, off].set(
+                k_rope_new.astype(jnp.bfloat16), mode="drop"),
+        }
+        ckv_i = paged.gather_pages(cache["ckv"], pages)      # (B, S, kvr)
+        ckv_s = paged.gather_pages(cache["ckv_scale"], pages)
+        krope_i = paged.gather_pages(cache["krope"], pages)
+
+    if kv_spec is None:
+        ckv_f = (ckv_i.astype(jnp.float32) * ckv_s).astype(cd)
+    else:
+        ckv_f = kvq.dequant_channelwise(ckv_i, ckv_s, kv_spec, cd)
+    kv = dq_linear(ckv_f, p["wkv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    outs = []
+    for j in range(W):
+        s = jnp.einsum("bqhn,bkhn->bhqk", q_nope[:, j:j + 1].astype(cd),
+                       k_nope.astype(cd)).astype(jnp.float32)
+        s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope[:, j:j + 1].astype(cd),
+                           krope_i.astype(cd)).astype(jnp.float32)
+        s = s / math.sqrt(nope + rope)
+        valid = (jnp.arange(S)[None, None, None, :]
+                 <= posk[:, j][:, None, None, None])
+        s = jnp.where(valid, s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1).astype(cd)
+        o = jnp.einsum("bhqk,bkhv->bqhv", w, v.astype(cd))   # (B, 1, H, vd)
+        outs.append(o.reshape(B, 1, H * vd))
+    return dq_linear(jnp.concatenate(outs, axis=1), p["wo"]), cache
 
 
 # ---------------------------------------------------------------------------

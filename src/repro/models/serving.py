@@ -712,6 +712,39 @@ def supports_paging(cfg) -> bool:
     return cfg.family in ("dense", "vlm", "moe", "hybrid", "audio")
 
 
+def supports_speculative(cfg) -> bool:
+    """Whether the family can run as a speculative draft/verifier.
+
+    Needs (a) a multi-token verify path — attention rings rewind for free
+    (rejected entries stay masked by ``<= pos`` until overwritten) but
+    recurrent SSM state cannot un-apply a token, ruling out ``ssm`` and
+    ``hybrid`` — and (b) a decode path that is width-generic (``audio``'s
+    cross-attention decode is hardcoded to one query token).
+    """
+    return cfg.family in ("dense", "vlm", "moe")
+
+
+def draft_model(dparams, cfg, draft_bits: int):
+    """Derive a low-bit draft policy from a deployed verifier param tree.
+
+    Every :class:`QTensor` leaf is re-quantized to a uniform ``draft_bits``
+    channel assignment (api/qtensor.requantize) — the one-checkpoint-many-
+    precisions trick: the aggressive end of the paper's channel-wise Pareto
+    front drafts, the searched 8-bit deploy verifies.  Non-QTensor leaves
+    (the embedding / lm_head table, norms, biases) are shared **by
+    reference** with the verifier tree, so the draft costs only the packed
+    low-bit linears.
+    """
+    from repro.api.qtensor import requantize
+    if not supports_speculative(cfg):
+        raise ValueError(
+            f"family {cfg.family!r} cannot draft (see supports_speculative)")
+    return jax.tree_util.tree_map(
+        lambda leaf: (requantize(leaf, draft_bits)
+                      if isinstance(leaf, QTensor) else leaf),
+        dparams, is_leaf=lambda leaf: isinstance(leaf, QTensor))
+
+
 def init_paged_caches(cfg, max_slots: int, num_pages: int, page_size: int,
                       kv_bits=None):
     """Paged serving caches: ring leaves become physical page pools.
@@ -864,7 +897,13 @@ def _cross_decode(p, cfg, x, cache, backend, kv_spec=None):
 
 def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
                 live=None, pages=None, page_size=None, kv_bits=None):
-    """One decode step: tokens (B, 1) -> (logits (B,1,V), caches').
+    """One decode step: tokens (B, W) -> (logits (B, W, V), caches').
+
+    ``W`` is normally 1.  ``W > 1`` is the speculative **verify** launch:
+    row ``b``'s token ``j`` is scored at position ``pos[b] + j`` (the
+    attention multi-token path writes all W KV entries in one scatter and
+    masks per step — see models/attention._gqa_decode_multi), supported for
+    the ``dense``/``vlm``/``moe`` families only (:func:`supports_speculative`).
 
     ``pos`` is a **per-slot position vector** (B,) int32: row ``b`` writes
     its new cache entry at its own ring index ``pos[b]`` and attends to
@@ -894,6 +933,10 @@ def decode_step(dparams, cfg, tokens, caches, pos, backend: str = "jnp",
     dq = _dq(cd, backend)
     x = dparams["embed"][tokens].astype(cd)
     B = tokens.shape[0]
+    if tokens.shape[1] > 1 and not supports_speculative(cfg):
+        raise ValueError(
+            f"family {cfg.family!r} has no multi-token verify path "
+            "(see supports_speculative)")
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:                 # legacy scalar: all slots synchronized
         pos = jnp.broadcast_to(pos[None], (B,))

@@ -1,0 +1,275 @@
+"""Speculative decoding: draft/verify rounds over the serving engine.
+
+Three layers of guards:
+
+* **acceptance rule** (api/sampling.speculative_accept) — greedy
+  acceptance is exact argmax-prefix match; stochastic acceptance with
+  ``q == p`` keeps every proposal; with a DIVERGENT draft the emitted
+  first token is still distributed as verifier-only sampling (the
+  rejection-sampling guarantee, checked empirically on fixed keys);
+* **engine parity** (the anchor) — under greedy sampling the speculative
+  ``ServingEngine`` emits token-for-token the non-speculative engine's
+  staggered trace on the SAME backend (dense + paged, jnp + pallas,
+  dense + moe configs), for the self-draft AND for an aggressively
+  re-quantized 2-bit draft whose proposals are mostly rejected.  The
+  full-prefix-hit boot path (suppressed first write in a shared radix
+  page) goes through the one-tick baseline fallback and stays exact.
+  PR 7's caveat restated: parity is per backend — backends may differ
+  from each other in low bf16 bits of the linears;
+* **serving-surface regressions** — ``run()`` no longer KeyErrors on
+  requests submitted before it (they come back under ``"rid:<n>"``
+  keys), ``submit()`` rejects non-1-D / non-integer prompts, and
+  ``SamplingParams`` rejects inapplicable knob combinations instead of
+  silently ignoring them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.sampling import (GREEDY, SamplingParams, _dist,
+                                speculative_accept)
+from repro.api.scheduler import Request, ServingEngine
+from repro.models import serving
+from test_continuous_batching import STAGGER, _setup, _stagger_trace
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rule
+# ---------------------------------------------------------------------------
+
+def _onehot_logits(ids, V, lo=-4.0, hi=4.0):
+    """Logit rows whose argmax is ``ids`` — (len(ids), V)."""
+    lg = np.full((len(ids), V), lo, np.float32)
+    lg[np.arange(len(ids)), ids] = hi
+    return jnp.asarray(lg)
+
+
+def test_greedy_accept_is_argmax_prefix_match():
+    V = 11
+    verify = jnp.stack([_onehot_logits([5, 3, 7], V),
+                        _onehot_logits([2, 2, 2], V)])      # (B=2, k+1, V)
+    draft_lg = verify[:, :2]                                # unused by greedy
+    drafts = jnp.asarray([[5, 9],     # first matches, second rejected
+                          [4, 2]])    # first rejected (match after it moot)
+    accepted, out = speculative_accept(drafts, draft_lg, verify, GREEDY)
+    np.testing.assert_array_equal(np.asarray(accepted), [1, 0])
+    # every emitted token is a verifier argmax: row b emits out[:acc+1]
+    np.testing.assert_array_equal(np.asarray(out), [[5, 3, 7], [2, 2, 2]])
+
+
+def test_stochastic_accepts_everything_when_q_equals_p():
+    rng = np.random.default_rng(0)
+    B, k, V = 64, 3, 7
+    lg = jnp.asarray(rng.standard_normal((B, k + 1, V)), jnp.float32)
+    params = SamplingParams(kind="temperature", temperature=0.8)
+    # draft tokens genuinely sampled from q = p's filtered distribution
+    key = jax.random.PRNGKey(1)
+    kq, ka = jax.random.split(key)
+    drafts = jax.random.categorical(kq, lg[:, :k] / 0.8, axis=-1)
+    accepted, out = speculative_accept(drafts, lg[:, :k], lg, params, key=ka)
+    # q(d)/p(d) == 1 -> accept prob min(1, 1) beats every uniform draw
+    np.testing.assert_array_equal(np.asarray(accepted), np.full(B, k))
+    np.testing.assert_array_equal(np.asarray(out[:, :k]),
+                                  np.asarray(drafts, np.int32))
+
+
+def test_stochastic_first_token_matches_verifier_distribution():
+    """Rejection sampling with a DIVERGENT draft: the marginal of the
+    first emitted token equals the verifier's filtered softmax (Leviathan
+    et al. Thm. 1), checked empirically over many independent rows."""
+    rng = np.random.default_rng(3)
+    B, k, V = 4000, 2, 8
+    p_row = jnp.asarray(rng.standard_normal((k + 1, V)) * 1.5, jnp.float32)
+    q_row = jnp.asarray(rng.standard_normal((k, V)) * 1.5, jnp.float32)
+    verify = jnp.broadcast_to(p_row, (B, k + 1, V))
+    draft_lg = jnp.broadcast_to(q_row, (B, k, V))
+    params = SamplingParams(kind="temperature", temperature=1.0)
+    kq, ka = jax.random.split(jax.random.PRNGKey(4))
+    drafts = jax.random.categorical(kq, draft_lg, axis=-1)   # per-row iid
+    _, out = speculative_accept(drafts, draft_lg, verify, params, key=ka)
+    first = np.asarray(out[:, 0])
+    emp = np.bincount(first, minlength=V) / B
+    target = np.asarray(_dist(p_row[0], params))
+    # ~6 sigma at B=4000 for per-bin std sqrt(p(1-p)/B) <= 0.008
+    np.testing.assert_allclose(emp, target, atol=0.05)
+    # and the draft really diverges (otherwise this test proves nothing)
+    assert not np.allclose(np.asarray(_dist(q_row[0], params)), target,
+                           atol=0.05)
+
+
+def test_stochastic_accept_requires_key():
+    lg = jnp.zeros((1, 3, 4))
+    with pytest.raises(ValueError, match="needs a PRNG key"):
+        speculative_accept(jnp.zeros((1, 2), jnp.int32), lg[:, :2], lg,
+                           SamplingParams(kind="temperature",
+                                          temperature=0.5))
+
+
+def test_sampling_params_reject_inapplicable_knobs():
+    """Regression: inapplicable knobs used to be silently ignored —
+    kind="temperature" with top_k=5 sampled the FULL vocab."""
+    with pytest.raises(ValueError, match="top_k=5 is inapplicable"):
+        SamplingParams(kind="temperature", temperature=0.7, top_k=5)
+    with pytest.raises(ValueError, match="inapplicable"):
+        SamplingParams(kind="greedy", top_k=3)
+    with pytest.raises(ValueError, match="temperature=0.5 is inapplicable"):
+        SamplingParams(kind="greedy", temperature=0.5)
+    # the applicable combinations still construct
+    SamplingParams(kind="top_k", top_k=5, temperature=0.7)
+    SamplingParams(kind="temperature", temperature=0.7)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: greedy speculative == baseline, token for token
+# ---------------------------------------------------------------------------
+
+def _run(arch, k=0, draft=None, page_size="auto", backend="jnp",
+         trace_seed=2, **ekw):
+    over = ({"capacity_factor": 64.0} if arch == "deepseek-v3-671b" else {})
+    cfg, dp = _setup(arch, **over)
+    reqs = _stagger_trace(cfg, seed=trace_seed)
+    eng = ServingEngine(cfg, dp, backend=backend, max_slots=STAGGER["B"],
+                        max_len=STAGGER["M"], prefill_len=STAGGER["P"],
+                        page_size=page_size, speculate_k=k,
+                        draft_dparams=draft, **ekw)
+    outs = eng.run(reqs, STAGGER["arrivals"])
+    return [outs[i].tokens.tolist() for i in range(len(reqs))], eng
+
+
+@pytest.mark.parametrize("arch,page_size,backend", [
+    ("qwen1.5-4b", "auto", "jnp"),          # dense family, paged
+    ("qwen1.5-4b", None, "jnp"),            # dense family, dense rings
+    ("qwen1.5-4b", "auto", "pallas"),       # fused kernels end to end
+    ("deepseek-v3-671b", "auto", "jnp"),    # moe + mla multi-token verify
+])
+def test_greedy_self_draft_parity_and_full_acceptance(arch, page_size,
+                                                      backend):
+    """Self-draft (draft == verifier): greedy acceptance keeps every
+    proposal, every round, and the emitted staggered trace is
+    token-for-token the non-speculative engine's on the same backend."""
+    base, _ = _run(arch, k=0, page_size=page_size, backend=backend)
+    got, eng = _run(arch, k=2, page_size=page_size, backend=backend)
+    assert got == base
+    st = eng.stats
+    assert st["verify_launches"] > 0
+    # >= 1 live slot per round, k accepted per live slot
+    assert st["accepted_tokens"] >= 2 * st["verify_launches"]
+
+
+def test_low_bit_draft_still_greedy_exact():
+    """The parity anchor holds for ANY draft: a 2-bit re-quantized draft
+    (serving.draft_model) proposes mostly-rejected tokens, yet every
+    emitted token is a verifier argmax — the output stream is unchanged."""
+    cfg, dp = _setup("qwen1.5-4b")
+    draft = serving.draft_model(dp, cfg, 2)
+    base, _ = _run("qwen1.5-4b", k=0)
+    got, eng = _run("qwen1.5-4b", k=2, draft=draft)
+    assert got == base
+    # with random reduced-config weights a 2-bit requant is a genuinely
+    # different model: some round must reject (else this test is the
+    # self-draft one again)
+    st = eng.stats
+    assert st["accepted_tokens"] < 2 * st["verify_launches"]
+
+
+def test_full_prefix_hit_boot_stays_exact_under_speculation():
+    """Duplicate prompts: later admissions are full prefix hits whose
+    first write position sits in a SHARED radix page — the speculative
+    scheduler must route that tick through the suppressed-write baseline
+    fallback (then catch the draft up) without changing a token."""
+    cfg, dp = _setup("qwen1.5-4b")
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, (STAGGER["P"],)).astype(np.int32)
+    reqs = lambda: [Request(prompt.copy(), max_tokens=m)
+                    for m in (6, 5, 4, 5)]
+    arrivals = (0, 0, 3, 6)
+
+    def run(k):
+        eng = ServingEngine(cfg, dp, backend="jnp",
+                            max_slots=STAGGER["B"], max_len=STAGGER["M"],
+                            prefill_len=STAGGER["P"], speculate_k=k)
+        outs = eng.run(reqs(), arrivals)
+        return [outs[i].tokens.tolist() for i in range(4)], eng
+
+    base, beng = run(0)
+    got, eng = run(2)
+    assert got == base
+    assert eng.stats["zero_prefill_admits"] > 0     # the path was exercised
+    assert eng.stats["decode_launches"] > 0         # fallback tick(s) ran
+    assert eng.stats["verify_launches"] > 0         # and real rounds too
+
+
+def test_speculative_engine_zero_recompiles_after_warmup():
+    _, eng = _run("qwen1.5-4b", k=2)
+    counts = eng.compile_counts()
+    # (absolute counts can exceed 1: the module-level jit entries are
+    # shared across tests, and a re-quantized draft has different avals)
+    assert set(counts) == {"admit", "step", "draft", "verify"}
+    assert counts["admit"] >= 1 and counts["draft"] >= 1
+    assert counts["verify"] >= 1
+    # steady state: a fresh trace through the same engine adds no entries
+    cfg = eng.cfg
+    eng.run(_stagger_trace(cfg, seed=3), STAGGER["arrivals"])
+    assert eng.compile_counts() == counts
+
+
+def test_deterministic_stochastic_speculative_run():
+    """Stochastic speculative serving is reproducible per engine seed and
+    actually finishes the trace (acceptance, rewind, catch-up and the
+    residual correction all jitted into the verify launch)."""
+    params = SamplingParams(kind="top_k", top_k=5, temperature=0.8)
+    a, ea = _run("qwen1.5-4b", k=2, sampling=params, seed=7)
+    b, _ = _run("qwen1.5-4b", k=2, sampling=params, seed=7)
+    assert a == b
+    assert ea.stats["verify_launches"] > 0
+    assert [len(t) for t in a] == list(STAGGER["mts"])
+
+
+def test_unsupported_families_reject_speculation_eagerly():
+    cfg, dp = _setup("mamba2-780m")
+    with pytest.raises(ValueError, match="cannot serve speculatively"):
+        ServingEngine(cfg, dp, max_slots=2, max_len=16, prefill_len=8,
+                      page_size=None, speculate_k=2)
+    with pytest.raises(ValueError, match="cannot draft"):
+        serving.draft_model(dp, cfg, 2)
+    # and the model layer refuses a multi-token window outright: recurrent
+    # state cannot rewind to the accepted length
+    caches = serving.init_caches(cfg, 2, 16)
+    with pytest.raises(ValueError, match="multi-token verify"):
+        serving.decode_step(dp, cfg, jnp.zeros((2, 2), jnp.int32), caches,
+                            jnp.asarray([4, 4], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Serving-surface regressions
+# ---------------------------------------------------------------------------
+
+def test_run_returns_presubmitted_requests_under_rid_keys():
+    """Regression: a request submitted before ``run()`` used to KeyError
+    the collection loop (its rid has no index in ``requests``); it now
+    finishes under the ``"rid:<n>"`` key alongside the positional ones."""
+    cfg, dp = _setup("qwen1.5-4b")
+    eng = ServingEngine(cfg, dp, max_slots=2, max_len=16, prefill_len=8)
+    toks = np.arange(1, 7, dtype=np.int32)
+    rid = eng.submit(Request(toks, max_tokens=4))
+    outs = eng.run([Request(toks + 1, max_tokens=3)])
+    assert set(outs) == {0, f"rid:{rid}"}
+    assert len(outs[f"rid:{rid}"].tokens) == 4
+    assert len(outs[0].tokens) == 3
+
+
+def test_submit_rejects_malformed_prompts():
+    """Regression: only axis 0 used to be checked — a ``(L, 2)`` array or
+    a float prompt passed validation and corrupted the admission batch."""
+    cfg, dp = _setup("qwen1.5-4b")
+    eng = ServingEngine(cfg, dp, max_slots=2, max_len=16, prefill_len=8)
+    with pytest.raises(ValueError, match="must be a 1-D array"):
+        eng.submit(Request(np.ones((4, 2), np.int32)))
+    with pytest.raises(ValueError, match="must be a 1-D array"):
+        eng.submit(Request(np.int32(3)))                 # 0-D scalar
+    with pytest.raises(ValueError, match="not an integer type"):
+        eng.submit(Request(np.asarray([0.5, 1.2, 3.0])))
+    rid = eng.submit(Request(np.asarray([1, 2, 3], np.int64),
+                             max_tokens=4))                  # ints OK
+    assert rid == 0

@@ -8,10 +8,15 @@ both dominating fixed precision — are what this benchmark measures.
 
 Run:  PYTHONPATH=src python -m benchmarks.pareto [--task dae-ad] [--fast]
 Output: CSV rows  task,method,lambda,metric,size_bits,energy
+        plus machine-readable BENCH_pareto.json (same records as the CSV,
+        keyed by sweep name — the Pareto analog of BENCH_smoke.json)
 
 `--kv-cache` runs the serving-side analog instead: the channel-wise
 bit-assignment applied to the KV cache (`kv_bits` policies vs the int8
-baseline), reporting token agreement against cache bytes.
+baseline), reporting token agreement against cache bytes.  It also emits
+one row per device-mesh size (mesh1x1, and mesh2x4 when >= 8 devices are
+visible): the mesh engine must sit at exact parity with the meshless
+baseline — placement is not allowed to move the front.
 """
 from __future__ import annotations
 
@@ -98,6 +103,7 @@ def kv_cache_sweep(fast: bool = False) -> list[str]:
     """
     from repro.api.scheduler import Request, ServingEngine
     from repro.config import get_config
+    from repro.launch.mesh import make_test_mesh
     from repro.models import serving as msrv
 
     rows = ["arch,kv_bits,agree_tok,total_tok,first_div,"
@@ -106,6 +112,9 @@ def kv_cache_sweep(fast: bool = False) -> list[str]:
     B, P, G = 3, 8, 12
     mts = [10, 3, 6, 4, 8, 5]
     arrivals = [0, 0, 1, 3, 5, 7]
+    mesh_shapes = [(1, 1)]
+    if len(jax.devices()) >= 8:
+        mesh_shapes.append((2, 4))
     for arch in archs:
         cfg = get_config(arch).reduced()
         dp = msrv.init_deployed_model(cfg, jax.random.PRNGKey(0))
@@ -113,25 +122,29 @@ def kv_cache_sweep(fast: bool = False) -> list[str]:
         prompts = [rng.integers(0, cfg.vocab_size, (P,)).astype(np.int32)
                    for _ in mts]
 
-        def run(kv_bits):
+        def run(kv_bits, mesh=None):
             eng = ServingEngine(cfg, dp, backend="jnp", max_slots=B,
                                 max_len=P + G, prefill_len=P,
-                                kv_bits=kv_bits)
+                                kv_bits=kv_bits, mesh=mesh)
             outs = eng.run([Request(p, max_tokens=m)
                             for p, m in zip(prompts, mts)], arrivals)
             return eng, [outs[i].tokens.tolist() for i in range(len(mts))]
 
-        _, base = run(None)
-        total = sum(len(t) for t in base)
-        for kv_bits in (None, 8, (4, 8), 4, (2, 4, 8), 2):
-            eng, toks = run(kv_bits)
+        def agreement(base, toks):
             agree, first_div = 0, -1
-            for off, (b, t) in enumerate(zip(base, toks)):
+            for b, t in zip(base, toks):
                 n = next((i for i, (x, y) in enumerate(zip(b, t)) if x != y),
                          min(len(b), len(t)))
                 agree += n
                 if n < len(b) and first_div < 0:
                     first_div = n
+            return agree, first_div
+
+        _, base = run(None)
+        total = sum(len(t) for t in base)
+        for kv_bits in (None, 8, (4, 8), 4, (2, 4, 8), 2):
+            eng, toks = run(kv_bits)
+            agree, first_div = agreement(base, toks)
             tag = ("int8" if kv_bits is None else
                    "-".join(str(b) for b in kv_bits)
                    if isinstance(kv_bits, tuple) else str(kv_bits))
@@ -139,7 +152,45 @@ def kv_cache_sweep(fast: bool = False) -> list[str]:
                         f"{eng.kv_bytes_dense() / 1e3:.2f},"
                         f"{eng.kv_bytes_peak() / 1e3:.2f}")
             print(rows[-1], flush=True)
+        # one row per mesh size: the same trace through the mesh serving
+        # engine — parity with the meshless baseline is the pinned result
+        # (agree == total, first_div == -1), so a CI grep catches any
+        # placement rule that starts moving tokens
+        for d, m in mesh_shapes:
+            eng, toks = run(None, mesh=make_test_mesh(d, m))
+            agree, first_div = agreement(base, toks)
+            rows.append(f"{arch},int8@mesh{d}x{m},{agree},{total},"
+                        f"{first_div},"
+                        f"{eng.kv_bytes_dense() / 1e3:.2f},"
+                        f"{eng.kv_bytes_peak() / 1e3:.2f}")
+            print(rows[-1], flush=True)
     return rows
+
+
+def _dump_json(sweep: str, rows: list[str],
+               path: str = "BENCH_pareto.json") -> None:
+    """Machine-readable front, BENCH_smoke.json-style: ``{sweep: records}``
+    where each record is the CSV row keyed by the header columns — so the
+    per-PR Pareto trajectory diffs in CI instead of living in log text."""
+    import json
+
+    def coerce(v):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        return v
+
+    header = [c.strip() for c in rows[0].split(",")]
+    records = []
+    for row in rows[1:]:
+        cells = [c.strip() for c in row.split(",")]
+        records.append({k: coerce(v) for k, v in zip(header, cells)}
+                       if len(cells) == len(header) else row)
+    with open(path, "w") as f:
+        json.dump({sweep: records}, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", flush=True)
 
 
 def main(argv=None) -> None:
@@ -159,6 +210,7 @@ def main(argv=None) -> None:
 
     if args.kv_cache:
         rows = kv_cache_sweep(fast=args.fast)
+        _dump_json("kv_cache", rows)
         if args.out:
             with open(args.out, "w") as f:
                 f.write("\n".join(rows) + "\n")
@@ -184,6 +236,7 @@ def main(argv=None) -> None:
         rows.append(f"{args.task},w{wb}x8,0,{m:.4f},{s:.0f},{e:.0f}")
         print(rows[-1], flush=True)
 
+    _dump_json(f"pareto-{args.task}", rows)
     if args.out:
         with open(args.out, "w") as f:
             f.write("\n".join(rows) + "\n")

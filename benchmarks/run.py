@@ -540,6 +540,51 @@ def bench_serving(smoke: bool = False) -> list[str]:
     return rows
 
 
+def bench_mesh_serving(smoke: bool = False) -> list[str]:
+    """Mesh-threaded engine vs the single-device engine: same trace, same
+    tokens (the PR-9 token-identity contract), plus tok/s per mesh shape.
+
+    On a 1-device host only the trivial (1,1) mesh runs; with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 the 8-way (2,4)
+    parity row appears too.  The ``identical`` column is the CI assertion.
+    """
+    from jax.sharding import Mesh
+    from repro.api.scheduler import Request, ServingEngine
+    from repro.config import get_config
+    from repro.models import serving
+    rows = ["mesh_serving:arch,mesh,requests,tokens,tok_per_s,identical"]
+    arch = "qwen1.5-4b"
+    cfg = get_config(arch).reduced()
+    dp = serving.init_deployed_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32),
+                    max_tokens=m)
+            for l, m in zip((8, 6, 7, 5), (10, 3, 6, 4))]
+    arrivals = (0, 0, 2, 5)
+
+    def run(mesh):
+        eng = ServingEngine(cfg, dp, backend="jnp", max_slots=2, max_len=24,
+                            prefill_len=8, mesh=mesh)
+        t0 = time.time()
+        outs = eng.run(reqs, arrivals)
+        dt = time.time() - t0
+        toks = {i: np.asarray(outs[i].tokens) for i in range(len(reqs))}
+        return toks, sum(len(t) for t in toks.values()) / dt
+
+    base, base_tps = run(None)
+    shapes = [(1, 1)]
+    if len(jax.devices()) >= 8:
+        shapes.append((2, 4))
+    for d, m in shapes:
+        mesh = Mesh(np.asarray(jax.devices()[:d * m]).reshape(d, m),
+                    ("data", "model"))
+        toks, tps = run(mesh)
+        same = int(all(np.array_equal(base[i], toks[i]) for i in base))
+        rows.append(f"mesh_serving:{arch},mesh{d}x{m},{len(reqs)},"
+                    f"{sum(len(t) for t in toks.values())},{tps:.1f},{same}")
+    return rows
+
+
 def bench_roofline(smoke: bool = False) -> list[str]:
     import os
     path = "results/dryrun.jsonl"
@@ -568,6 +613,7 @@ SECTIONS = {
     "kv_quant": bench_kv_quant,
     "speculative": bench_speculative,
     "serving": bench_serving,
+    "mesh_serving": bench_mesh_serving,
     "roofline": bench_roofline,
     "pareto": bench_pareto,
 }
@@ -588,7 +634,7 @@ SECTIONS = {
 # verifier launch (self-draft accepts everything; 2-bit draft still exact)
 SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode",
                   "continuous_batching", "paged_cache", "kv_quant",
-                  "speculative")
+                  "speculative", "mesh_serving")
 
 
 def main() -> None:

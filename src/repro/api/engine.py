@@ -220,9 +220,9 @@ class Engine:
 _SERVING_JITS: dict = {}
 
 
-def serving_jits(cfg, backend: str) -> dict:
+def serving_jits(cfg, backend: str, mesh=None) -> dict:
     """Shared jitted ``prefill(dp, batch[, lens])`` / ``decode(dp, tokens,
-    caches, pos[, live])`` executables for one (config, backend) pair.
+    caches, pos[, live])`` executables for one (config, backend, mesh).
 
     Decode donates its caches.  The lockstep drivers (launch/serve.py,
     benchmarks, the test oracles) and any ad-hoc serving loop resolve
@@ -230,21 +230,65 @@ def serving_jits(cfg, backend: str) -> dict:
     config reuses one set of compiled executables.  (The request-level
     ``ServingEngine`` keys its own admission/step executables the same way
     in api/scheduler.py.)
+
+    ``mesh=None`` is today's single-device path, bit-for-bit.  With a
+    ``(data, model)`` mesh the executables compile with ``in_shardings`` /
+    ``out_shardings`` derived from the sharding rules: the deployed params
+    placed by ``ShardingRules`` (QTensor fused buffers along the N-tile
+    schedule), everything else — tokens, logits, caches — replicated, and
+    the body traced inside ``serving_mesh`` so the fused kernels route
+    through their shard_map TP/EP forms.
     """
-    key = (id(cfg), backend)
+    key = (id(cfg), backend, mesh)
     ent = _SERVING_JITS.get(key)
     if ent is None:
         from repro.models import serving
-        ent = {
-            "cfg": cfg,
-            "prefill": jax.jit(
-                lambda dp, b, lens=None: serving.prefill(dp, cfg, b, backend,
-                                                         lens=lens)),
-            "decode": jax.jit(
-                lambda dp, t, c, pos, live=None: serving.decode_step(
-                    dp, cfg, t, c, pos, backend, live=live),
-                donate_argnums=(2,)),
-        }
+        if mesh is None:
+            ent = {
+                "cfg": cfg,
+                "prefill": jax.jit(
+                    lambda dp, b, lens=None: serving.prefill(
+                        dp, cfg, b, backend, lens=lens)),
+                "decode": jax.jit(
+                    lambda dp, t, c, pos, live=None: serving.decode_step(
+                        dp, cfg, t, c, pos, backend, live=live),
+                    donate_argnums=(2,)),
+            }
+        else:
+            from repro.dist import sharding as shd
+            ctx = shd.MeshContext(mesh)
+            shapes = jax.eval_shape(
+                lambda k: serving.init_deployed_model(cfg, k),
+                jax.random.PRNGKey(0))
+            dp_sh = ctx.rules.serving_shardings(shapes)
+            rep = ctx.replicated
+
+            # full positional arity (no defaults): in_shardings entries
+            # must line up with the call-site args one to one
+            def _prefill(dp, b, lens):
+                with shd.serving_mesh(ctx):
+                    logits, caches = serving.prefill(dp, cfg, b, backend,
+                                                     lens=lens)
+                    return ctx.constrain_replicated((logits, caches))
+
+            def _decode(dp, t, c, pos, live):
+                with shd.serving_mesh(ctx):
+                    out = serving.decode_step(dp, cfg, t, c, pos, backend,
+                                              live=live)
+                    return ctx.constrain_replicated(out)
+
+            ent = {
+                "cfg": cfg,
+                "mesh_ctx": ctx,
+                "params_shardings": dp_sh,
+                "prefill": jax.jit(_prefill,
+                                   in_shardings=(dp_sh, rep, rep),
+                                   out_shardings=rep),
+                "decode": jax.jit(_decode,
+                                  in_shardings=(dp_sh, rep, rep, rep, rep),
+                                  donate_argnums=(2,),
+                                  out_shardings=rep),
+            }
         _SERVING_JITS[key] = ent
     return ent
 

@@ -366,7 +366,17 @@ class QTensor:
         if self.experts is not None:
             return self._matmul_experts(x, compute_dtype, backend)
         if backend == "pallas" and self.fused_packed is not None:
+            from repro.dist import sharding as shd
             from repro.kernels import ops as kops
+            ctx = shd.serving_ctx()
+            if ctx is not None and ctx.model > 1:
+                chunk = qmk.tp_chunk(self.tile_bits, ctx.model)
+                if chunk is not None:
+                    return kops.quant_matmul_fused_tp(
+                        x, self.fused_packed, self.fused_scales,
+                        self.fused_perm, self.tile_bits, chunk, self.tile_n,
+                        self.c_in, self.c_out, ctx.mesh,
+                        out_dtype=compute_dtype, compute_dtype=compute_dtype)
             return kops.quant_matmul_fused(
                 x, self.fused_packed, self.fused_scales, self.fused_perm,
                 self.tile_bits, self.tile_n, self.c_in, self.c_out,
@@ -413,7 +423,15 @@ class QTensor:
                 f"expert-stacked QTensor (experts={E}) takes x of shape "
                 f"(E, ..., c_in); got {x.shape}")
         if backend == "pallas" and self.fused_packed is not None:
+            from repro.dist import sharding as shd
             from repro.kernels import ops as kops
+            ctx = shd.serving_ctx()
+            if ctx is not None and ctx.model > 1 and E % ctx.model == 0:
+                return kops.quant_matmul_fused_batched_ep(
+                    x, self.fused_packed, self.fused_scales, self.fused_perm,
+                    self.tile_bits, self.tile_n, self.c_in, self.c_out,
+                    ctx.mesh, out_dtype=compute_dtype,
+                    compute_dtype=compute_dtype)
             return kops.quant_matmul_fused_batched(
                 x, self.fused_packed, self.fused_scales, self.fused_perm,
                 self.tile_bits, self.tile_n, self.c_in, self.c_out,

@@ -62,6 +62,8 @@ import numpy as np
 
 from repro.api import sampling as smp
 from repro.cache import NULL_PAGE, PagePool
+from repro.dist import fault
+from repro.dist import sharding as shd
 
 
 @dataclasses.dataclass
@@ -100,12 +102,34 @@ _ENGINE_JITS: dict = {}
 
 def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
                  page_size: Optional[int], kv_bits=None,
-                 speculate_k: int = 0, draft_kv_bits=None) -> dict:
+                 speculate_k: int = 0, draft_kv_bits=None, mesh=None) -> dict:
     key = (id(cfg), backend, sampling, page_size, kv_bits, speculate_k,
-           draft_kv_bits)
+           draft_kv_bits, mesh)
     ent = _ENGINE_JITS.get(key)
     if ent is None:
         from repro.models import serving
+
+        ctx = shd.MeshContext(mesh)
+
+        def _meshed(fn, cache_outs=()):
+            """Trace ``fn`` inside the serving-mesh context (fused kernels
+            route to their shard_map TP/EP forms, attention/router
+            annotations activate) and pin output shardings: the cache trees
+            at positions ``cache_outs`` keep their slot/page-axis ``data``
+            sharding, every other output (tokens, logits rows, accept
+            counts) replicates.  Identity without a mesh — the single-device
+            trace is byte-for-byte the pre-mesh one."""
+            if not ctx.is_active:
+                return fn
+
+            def wrapped(*args):
+                with shd.serving_mesh(ctx):
+                    out = fn(*args)
+                    return tuple(
+                        ctx.constrain_caches(o) if i in cache_outs
+                        else ctx.constrain_replicated(o)
+                        for i, o in enumerate(out))
+            return wrapped
 
         if page_size is None:
             def _admit(dp, batch, lens, admit, tok_old, caches, key):
@@ -167,8 +191,10 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
                 return smp.sample(logits, sampling, key), caches
 
         ent = {"cfg": cfg,
-               "admit": jax.jit(_admit, donate_argnums=(5,)),
-               "step": jax.jit(_step, donate_argnums=(2,))}
+               "admit": jax.jit(_meshed(_admit, cache_outs=(1,)),
+                                donate_argnums=(5,)),
+               "step": jax.jit(_meshed(_step, cache_outs=(1,)),
+                               donate_argnums=(2,))}
 
         if speculate_k:
             # Speculative serving replaces the admission executable with a
@@ -248,9 +274,12 @@ def _engine_jits(cfg, backend: str, sampling: smp.SamplingParams,
                                                       sampling, key)
                     return acc, out, caches
 
-            ent["admit"] = jax.jit(_admit_spec, donate_argnums=(7, 8))
-            ent["draft_step"] = jax.jit(_draft, donate_argnums=(2,))
-            ent["verify"] = jax.jit(_verify, donate_argnums=(2,))
+            ent["admit"] = jax.jit(_meshed(_admit_spec, cache_outs=(1, 2)),
+                                   donate_argnums=(7, 8))
+            ent["draft_step"] = jax.jit(_meshed(_draft, cache_outs=(2,)),
+                                        donate_argnums=(2,))
+            ent["verify"] = jax.jit(_meshed(_verify, cache_outs=(2,)),
+                                    donate_argnums=(2,))
         _ENGINE_JITS[key] = ent
     return ent
 
@@ -332,10 +361,17 @@ class ServingEngine:
                  sampling: smp.SamplingParams = smp.GREEDY, seed: int = 0,
                  page_size="auto", num_pages: Optional[int] = None,
                  prefix_sharing="auto", kv_bits=None, speculate_k: int = 0,
-                 draft_dparams=None, draft_kv_bits=None):
+                 draft_dparams=None, draft_kv_bits=None, mesh=None,
+                 heartbeat_timeout: float = 2.0):
         from repro.models import serving
         self.cfg, self.dparams, self.backend = cfg, dparams, backend
         self.max_slots, self.max_len = max_slots, max_len
+        # mesh=None: today's single-device engine, bit-for-bit.  With a
+        # (data, model) mesh the context owns placement (weights by the
+        # sharding rules, caches along the slot/page axis, scheduler state
+        # replicated) and its data-axis size doubles as the host fleet for
+        # the heartbeat/drain story below.
+        self.mesh_ctx = shd.MeshContext(mesh)
         self.speculate_k = int(speculate_k)
         if self.speculate_k < 0:
             raise ValueError("speculate_k must be >= 0")
@@ -358,6 +394,14 @@ class ServingEngine:
         self.draft_dparams = (dparams if (self.speculate_k
                                           and draft_dparams is None)
                               else draft_dparams)
+        if self.mesh_ctx.is_active:
+            self.dparams = self.mesh_ctx.put_params(self.dparams)
+            if self.draft_dparams is dparams:
+                # self-draft: keep sharing the verifier's placed weights
+                self.draft_dparams = self.dparams
+            elif self.draft_dparams is not None:
+                self.draft_dparams = self.mesh_ctx.put_params(
+                    self.draft_dparams)
         # normalize to a hashable jit-key component and resolve eagerly: an
         # unpackable feature axis raises HERE (engine construction), never
         # inside a jitted launch
@@ -400,7 +444,8 @@ class ServingEngine:
         self.sampling = sampling
         fns = _engine_jits(cfg, backend, sampling, page_size, kv_bits,
                            speculate_k=self.speculate_k,
-                           draft_kv_bits=draft_kv_bits)
+                           draft_kv_bits=draft_kv_bits,
+                           mesh=self.mesh_ctx.mesh)
         self._admit_fn, self._step_fn = fns["admit"], fns["step"]
         if self.speculate_k:
             self._draft_fn = fns["draft_step"]
@@ -412,17 +457,24 @@ class ServingEngine:
             self.caches = serving.init_caches(cfg, max_slots, max_len,
                                               kv_bits=kv_bits)
         else:
+            user_pages = num_pages is not None
             if num_pages is None:
                 num_pages = 1 + max_slots * self.pages_per_slot
             if num_pages < 2:
                 raise ValueError("num_pages must be >= 2 (NULL page + one "
                                  "allocatable page)")
+            # auto-sized pools round up so the physical-page axis divides
+            # the data axis; an explicit num_pages is honored verbatim
+            # (cache_shardings falls back to replication if it won't shard)
             self.pool = PagePool(num_pages, page_size,
-                                 prefix_sharing=self.prefix_sharing)
+                                 prefix_sharing=self.prefix_sharing,
+                                 pad_to=(1 if user_pages
+                                         else self.mesh_ctx.data))
             self._pages = np.full((max_slots, self.pages_per_slot),
                                   NULL_PAGE, np.int32)
             self.caches = serving.init_paged_caches(cfg, max_slots,
-                                                    num_pages, page_size,
+                                                    self.pool.num_pages,
+                                                    page_size,
                                                     kv_bits=kv_bits)
             mask = serving.paged_leaf_mask(cfg)
             leaves = zip(jax.tree_util.tree_leaves(mask),
@@ -462,6 +514,15 @@ class ServingEngine:
         self._catchup_tok = np.zeros(max_slots, np.int64)
 
         self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        if self.mesh_ctx.is_active:
+            self.caches = self.mesh_ctx.put_caches(self.caches)
+            self.tokens = self.mesh_ctx.put_replicated(self.tokens)
+            if self.speculate_k:
+                self.draft_caches = self.mesh_ctx.put_caches(
+                    self.draft_caches)
+                if self._draft_pages is not None:
+                    self._draft_pages = self.mesh_ctx.put_replicated(
+                        self._draft_pages)
         self._pos = np.zeros(max_slots, np.int64)
         self._live = np.zeros(max_slots, bool)
         self._slots: List[Optional[_Slot]] = [None] * max_slots
@@ -476,7 +537,22 @@ class ServingEngine:
                           cached_tokens=0, deferred_admissions=0,
                           evictions=0, pages_peak=0, draft_launches=0,
                           verify_launches=0, spec_rounds=0,
-                          accepted_tokens=0)
+                          accepted_tokens=0, host_drains=0,
+                          drained_requests=0)
+        # -- host liveness (drain-on-death) --------------------------------
+        # The data axis doubles as the host fleet: host h owns the
+        # contiguous slot range fault.owned_slots(h, max_slots, n_hosts).
+        # The engine beats every non-failed host once per step() on a tick
+        # clock; a host declared dead by the heartbeat has its slots'
+        # requests drained back to the front of the admission queue (pages
+        # freed through the normal refcount path) and its slots retired.
+        self.n_hosts = self.mesh_ctx.data
+        self.heartbeat = fault.Heartbeat(list(range(self.n_hosts)),
+                                         timeout_s=heartbeat_timeout)
+        self._hb_clock = 0
+        self._failed_hosts: set[int] = set()
+        self._dead_slots = np.zeros(max_slots, bool)
+        self._requests: Dict[int, Request] = {}
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -532,6 +608,9 @@ class ServingEngine:
                 "encoder and decode garbage")
         self._next_rid += 1
         self._pending[rid] = request
+        # retained past admission so a host drain can requeue in-flight
+        # requests verbatim (dropped again when the request finishes)
+        self._requests[rid] = request
         self.queue.append(rid)
         return rid
 
@@ -608,7 +687,14 @@ class ServingEngine:
         slots.  Returns a small stats dict (``kind`` in {"prefill",
         "cached", "decode", "speculative", "idle"}).
         """
-        free = [i for i, s in enumerate(self._slots) if s is None]
+        self._hb_clock += 1
+        for h in range(self.n_hosts):
+            if h not in self._failed_hosts:
+                self.heartbeat.beat(h, self._hb_clock)
+        for h in self.heartbeat.check(self._hb_clock):
+            self._drain_host(h)
+        free = [i for i, s in enumerate(self._slots)
+                if s is None and not self._dead_slots[i]]
         if self.queue and free:
             out = self._admit_tick(free)
             if out is not None:
@@ -968,6 +1054,51 @@ class ServingEngine:
             self._slots[slot] = None
             self._live[slot] = False
             self._catchup[slot] = False
+            self._requests.pop(st.rid, None)
+
+    # -- host failure / drain ------------------------------------------------
+    def fail_host(self, host: int) -> None:
+        """Stop beating ``host``; the heartbeat declares it dead after
+        ``timeout_s`` ticks and ``step()`` drains its slots (failure
+        injection for tests and ``launch/serve.py --fail-host``)."""
+        if not 0 <= host < self.n_hosts:
+            raise ValueError(f"host {host} outside fleet of {self.n_hosts}")
+        self._failed_hosts.add(host)
+
+    def _drain_host(self, host: int) -> None:
+        """Retire a dead host's slots and requeue their requests.
+
+        Pages go back through the normal refcount release path, the slots
+        are excluded from future admission, and the drained requests
+        rejoin the FRONT of the admission queue (rid order) so surviving
+        hosts replay them from scratch — greedy decoding makes the replay
+        token-identical to an uninterrupted run.
+        """
+        drained = []
+        for slot in fault.owned_slots(host, self.max_slots, self.n_hosts):
+            self._dead_slots[slot] = True
+            st = self._slots[slot]
+            if st is None:
+                continue
+            if self.pool is not None:
+                row = self._pages[slot]
+                self.pool.release(int(p) for p in row if p != NULL_PAGE)
+                self._pages[slot, :] = NULL_PAGE
+                self._reserved -= st.worst - st.mapped
+                self._note_pool()
+            self._slots[slot] = None
+            self._live[slot] = False
+            self._suppress[slot] = False
+            self._catchup[slot] = False
+            drained.append(st.rid)
+        for rid in sorted(drained):
+            self._pending[rid] = self._requests[rid]
+        self.queue = sorted(drained) + [r for r in self.queue
+                                        if r not in drained]
+        self.stats["host_drains"] += 1
+        self.stats["drained_requests"] += len(drained)
+        if self._dead_slots.all() and (self.queue or self._live.any()):
+            raise fault.HostFailure(host)
 
     # -- whole-trace driver --------------------------------------------------
     def run(self, requests: Sequence[Request],

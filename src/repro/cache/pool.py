@@ -33,7 +33,13 @@ from repro.cache.radix import RadixIndex
 
 class PagePool:
     def __init__(self, num_pages: int, page_size: int,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, pad_to: int = 1):
+        """``pad_to``: round ``num_pages`` up to the next multiple (mesh
+        serving shards the physical-page axis across the ``data`` devices,
+        which requires the extent to divide; extra pages just enlarge the
+        free list)."""
+        if pad_to > 1:
+            num_pages += (-num_pages) % pad_to
         self.page_size = page_size
         self.allocator = PageAllocator(num_pages, reserved=(NULL_PAGE,))
         self.radix = RadixIndex(page_size) if prefix_sharing else None

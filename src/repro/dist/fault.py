@@ -58,6 +58,21 @@ def run_supervised(total_steps: int,
     return state, step, restarts
 
 
+def owned_slots(host: int, n_slots: int, n_hosts: int) -> list[int]:
+    """Contiguous slot partition: the engine slots host ``host`` owns.
+
+    The serving engine shards its slot axis over the ``data`` hosts; this is
+    the single source of truth for that ownership (the drain path frees
+    exactly these slots when a heartbeat dies).  Balanced to within one slot
+    for any ``n_slots``/``n_hosts``.
+    """
+    if not 0 <= host < n_hosts:
+        raise ValueError(f"host {host} outside fleet of {n_hosts}")
+    lo = host * n_slots // n_hosts
+    hi = (host + 1) * n_slots // n_hosts
+    return list(range(lo, hi))
+
+
 class Heartbeat:
     """Host liveness from periodic beats; ``check`` returns newly-dead hosts."""
 

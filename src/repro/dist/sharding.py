@@ -52,6 +52,42 @@ def activation_sharding(mesh: Mesh):
         _state.mesh = prev
 
 
+@contextlib.contextmanager
+def serving_mesh(ctx: "MeshContext"):
+    """Enable serving-side mesh annotations (``replicate_serving`` and the
+    QTensor TP/EP kernel routing) for code traced inside this context.
+
+    Deliberately separate from ``activation_sharding``: the training-side
+    ``constrain`` annotations in the shared attention core stay inert while
+    the serving engine traces with a mesh.
+    """
+    prev = getattr(_state, "serving_ctx", None)
+    _state.serving_ctx = ctx if (ctx is not None and ctx.is_active) else None
+    try:
+        yield
+    finally:
+        _state.serving_ctx = prev
+
+
+def serving_ctx() -> Optional["MeshContext"]:
+    """The active serving ``MeshContext``, or None outside ``serving_mesh``."""
+    return getattr(_state, "serving_ctx", None)
+
+
+def replicate_serving(x):
+    """Pin ``x`` replicated across the active serving mesh.
+
+    Identity when no ``serving_mesh`` context is active, so model code can
+    annotate unconditionally — single-device serving traces are unchanged.
+    Used on every f32-adjacent activation (attention views, router inputs)
+    whose reduction order must not depend on the mesh.
+    """
+    ctx = serving_ctx()
+    if ctx is None or x is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.replicated)
+
+
 def constrain(x, *tokens):
     """Annotate intermediate ``x`` with a (data/model) layout.
 
@@ -140,11 +176,17 @@ class ShardingRules:
             toks += ["D", "M", "D" if self.kv_seq_shard else None, None]
             return toks, "kv-cache"
 
-        is_weight = leaf in ("w", "packed", "scale", "embed", "router") or \
+        is_weight = leaf in ("w", "packed", "scale", "embed") or \
             parent in _EXPERT or parent in _ROW_PARALLEL or \
             any(n in parts for n in ("lm_head", "embed"))
         if leaf in ("gamma", "delta", "aw", "ax") or len(shape) <= 1:
             return [None] * len(shape), "replicate (nas/small)"
+
+        # MoE routers run their top-k in f32; sharding that GEMM changes
+        # the CPU reduction order and breaks token-for-token parity, so the
+        # (E, d) router weight always replicates.
+        if leaf == "router":
+            return [None] * len(shape), "replicate (f32 router determinism)"
 
         # QTensor (repro.api.qtensor) leaves: packed rows carry the deployed
         # output channels -> model axis; scales follow their rows.
@@ -182,13 +224,127 @@ class ShardingRules:
                                        "; ".join([rule] + notes)))
         return spec
 
+    def _fused_spec(self, path: str, name: str, shape, qt) -> P:
+        """Sharding for a QTensor's fused ragged buffer / scale vector.
+
+        The fused layout concatenates whole static-bit N-tiles, so the only
+        legal shard boundary is a tile boundary:
+
+        * tensor parallel (1-D / layer-stacked weights): shard the byte axis
+          iff the tile schedule splits into ``model`` identical chunks
+          (``quant_matmul.tp_chunk``) — each device then owns whole tiles
+          and runs the same shard_map program;
+        * expert parallel (expert-stacked weights): shard the leading E axis
+          iff ``model`` divides E (the schedule is shared across experts);
+        * otherwise replicate and record why.
+        """
+        from repro.kernels import quant_matmul as qm
+        m = self._axis_size("M")
+        axes = [None] * len(shape)
+        note = "replicate (fused: model axis = 1)"
+        if m > 1 and qt.tile_bits is not None:
+            if qt.experts is not None:
+                e_ax = len(shape) - 2
+                if e_ax >= 0 and shape[e_ax] % m == 0:
+                    axes[e_ax] = "model"
+                    note = f"qtensor-fused-ep (E={shape[e_ax]} / model={m})"
+                else:
+                    note = f"replicate (fused: E !% model={m})"
+            else:
+                chunk = qm.tp_chunk(qt.tile_bits, m)
+                if chunk is not None and shape[-1] % m == 0:
+                    axes[-1] = "model"
+                    note = f"qtensor-fused-tp (chunk={chunk})"
+                else:
+                    note = ("replicate (fused: tile schedule not periodic "
+                            f"over model={m})")
+        spec = P(*axes)
+        self.decisions.append(Decision(f"{path}/{name}", tuple(shape), spec,
+                                       note))
+        return spec
+
+    def qtensor_shardings(self, path: str, qt):
+        """Per-leaf NamedShardings for one QTensor node (same pytree shape).
+
+        Non-fused leaves route through the ordinary path rules; the fused
+        ragged buffer and its scales get the tile-schedule-aware treatment
+        of ``_fused_spec``.
+        """
+        flat, treedef = jax.tree_util.tree_flatten_with_path(qt)
+        out = []
+        for key_path, leaf in flat:
+            sub = "/".join(_key_str(k) for k in key_path)
+            name = _key_str(key_path[0]) if key_path else ""
+            shape = tuple(getattr(leaf, "shape", ()))
+            if name in ("fused_packed", "fused_scales"):
+                spec = self._fused_spec(path, sub, shape, qt)
+            else:
+                # grouped buckets / permutations feed the jnp dequant GEMM,
+                # whose f32 matmul is not shard-invariant on CPU — keep them
+                # replicated so the mesh engine stays token-identical (the
+                # fused leaves above are the sharded, shard_map-exact path)
+                spec = P(*([None] * len(shape)))
+                self.decisions.append(Decision(
+                    f"{path}/{sub}", shape, spec,
+                    "replicate (qtensor dequant path: f32 GEMM "
+                    "determinism)"))
+            out.append(NamedSharding(self.mesh, spec))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def tree_shardings(self, tree):
-        """NamedSharding pytree matching ``tree`` (arrays or SDStructs)."""
-        def one(key_path, leaf):
+        """NamedSharding pytree matching ``tree`` (arrays or SDStructs).
+
+        QTensor nodes are intercepted whole so their fused buffers can be
+        sharded along the N-tile schedule (``qtensor_shardings``); plain
+        array leaves map through ``spec_for`` as before.
+        """
+        try:
+            from repro.api.qtensor import QTensor
+        except Exception:                                  # pragma: no cover
+            QTensor = ()
+
+        def is_qt(node):
+            return isinstance(node, QTensor) if QTensor else False
+
+        def one(key_path, node):
             path = "/".join(_key_str(k) for k in key_path)
-            shape = getattr(leaf, "shape", ())
+            if is_qt(node):
+                return self.qtensor_shardings(path, node)
+            shape = getattr(node, "shape", ())
             return NamedSharding(self.mesh, self.spec_for(path, shape))
-        return jax.tree_util.tree_map_with_path(one, tree)
+        return jax.tree_util.tree_map_with_path(one, tree, is_leaf=is_qt)
+
+    def serving_shardings(self, tree):
+        """Deployment placement for the mesh serving engine.
+
+        The serving contract is **token identity** with the single-device
+        engine, so only operands whose sharded compute is provably
+        bit-exact may shard: a QTensor's fused buffers (the shard_map
+        integer kernels partition whole N-tiles / whole experts and are
+        bitwise-identical to the unsharded launch).  Every other weight
+        replicates — CPU f32/bf16 GEMMs are not shard-invariant, and a
+        sharded norm scale or dequant bucket would silently re-shard the
+        activations feeding them.
+        """
+        try:
+            from repro.api.qtensor import QTensor
+        except Exception:                                  # pragma: no cover
+            QTensor = ()
+
+        def is_qt(node):
+            return isinstance(node, QTensor) if QTensor else False
+
+        rep = NamedSharding(self.mesh, P())
+
+        def one(key_path, node):
+            path = "/".join(_key_str(k) for k in key_path)
+            if is_qt(node):
+                return self.qtensor_shardings(path, node)
+            shape = tuple(getattr(node, "shape", ()))
+            self.decisions.append(Decision(
+                path, shape, P(), "replicate (serving token-identity)"))
+            return rep
+        return jax.tree_util.tree_map_with_path(one, tree, is_leaf=is_qt)
 
     def explain(self) -> str:
         lines = [f"{d.path}  {d.shape} -> {d.spec}   [{d.note}]"
@@ -206,6 +362,97 @@ def _key_str(k) -> str:
     if isinstance(k, jax.tree_util.FlattenedIndexKey):
         return str(k.key)
     return str(k)
+
+
+class MeshContext:
+    """One mesh handle threaded through the whole serving stack.
+
+    ``mesh=None`` (the default everywhere) makes every method the identity:
+    single-device serving runs exactly the pre-mesh code path, bit-for-bit,
+    and nothing below ever touches a collective.
+
+    With a live ``(data, model)`` mesh the context owns the placement
+    contract:
+
+    * ``put_params``      — weights via ``ShardingRules`` (QTensor-aware);
+    * ``put_caches`` / ``constrain_caches`` — KV pools and page tables
+      sharded along the slot/page axis (axis 1) on ``data``;
+    * ``put_replicated`` / ``constrain_replicated`` — scheduler state,
+      tokens, and sampling stay replicated;
+    * ``data`` / ``model`` — axis sizes (1 when inactive), which double as
+      the host count for the fault/drain story.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 rules: Optional[ShardingRules] = None):
+        if mesh is not None:
+            names = tuple(mesh.axis_names)
+            if "data" not in names or "model" not in names:
+                raise ValueError(
+                    f"serving mesh needs ('data', 'model') axes, got {names}")
+        self.mesh = mesh
+        self.rules = rules if rules is not None else (
+            ShardingRules(mesh) if mesh is not None else None)
+
+    @property
+    def is_active(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def data(self) -> int:
+        return int(self.mesh.shape["data"]) if self.is_active else 1
+
+    @property
+    def model(self) -> int:
+        return int(self.mesh.shape["model"]) if self.is_active else 1
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- placement (host-side device_put; identity when inactive) ----------
+    def put_params(self, tree):
+        if not self.is_active or tree is None:
+            return tree
+        return jax.device_put(tree, self.rules.serving_shardings(tree))
+
+    def put_replicated(self, tree):
+        if not self.is_active or tree is None:
+            return tree
+        rep = self.replicated
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, rep), tree)
+
+    def cache_shardings(self, tree):
+        """Axis 1 (the slot or physical-page axis of every cache leaf —
+        dense rings, paged pools, page tables alike) on ``data`` when
+        divisible; replicated otherwise."""
+        d = self.data
+
+        def one(leaf):
+            shape = tuple(getattr(leaf, "shape", ()))
+            if len(shape) >= 2 and d > 1 and shape[1] % d == 0:
+                return NamedSharding(self.mesh, P(None, "data"))
+            return self.replicated
+        return jax.tree_util.tree_map(one, tree)
+
+    def put_caches(self, tree):
+        if not self.is_active or tree is None:
+            return tree
+        return jax.device_put(tree, self.cache_shardings(tree))
+
+    # -- trace-time constraints (identity when inactive) --------------------
+    def constrain_caches(self, tree):
+        if not self.is_active or tree is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, self.cache_shardings(tree))
+
+    def constrain_replicated(self, tree):
+        if not self.is_active or tree is None:
+            return tree
+        rep = self.replicated
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
 
 
 def batch_specs(mesh: Mesh, batch):

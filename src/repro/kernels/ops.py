@@ -16,6 +16,8 @@ import functools
 import jax
 import jax.core
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import quantizers as qz
 from repro.kernels import fake_quant as fq_kernel
@@ -179,6 +181,112 @@ def quant_matmul_fused_batched(x: jnp.ndarray, fused_packed: jnp.ndarray,
     return y.reshape(E, *lead, c_out)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("tile_bits", "chunk", "tile_n", "c_in",
+                                    "c_out", "mesh", "axis", "out_dtype",
+                                    "bm", "compute_dtype"))
+def quant_matmul_fused_tp(x: jnp.ndarray, fused_packed: jnp.ndarray,
+                          fused_scales: jnp.ndarray, fused_perm,
+                          tile_bits: tuple, chunk: tuple, tile_n: int,
+                          c_in: int, c_out: int, mesh, axis: str = "model",
+                          out_dtype=jnp.float32, bm: int = 128,
+                          compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Tensor-parallel :func:`quant_matmul_fused`: the fused ragged buffer
+    and its scales are sharded along the N-tile schedule (``mesh[axis]``
+    identical chunks, see ``quant_matmul.tp_chunk``), each device runs the
+    SAME single-launch program over its own whole static-bit tiles, and the
+    output concatenates along N.  Per-device compute is the unmodified int
+    kernel, so the result is bitwise identical to the unsharded launch.
+    """
+    parts = mesh.shape[axis]
+    if chunk * parts != tuple(tile_bits):
+        raise ValueError(
+            f"chunk {chunk} x {parts} does not tile schedule {tile_bits}")
+    if x.shape[-1] != c_in:
+        raise ValueError(
+            f"x contraction dim {x.shape[-1]} != c_in {c_in}")
+    Kp = -(-c_in // qm_kernel.FUSED_K_ALIGN) * qm_kernel.FUSED_K_ALIGN
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, c_in).astype(compute_dtype)
+    x2 = _pad_to(x2, 1, Kp)
+    bm_ = _pick_bm(M, bm)
+    x2 = _pad_to(x2, 0, bm_)
+
+    def body(xs, fp, fs):
+        return qm_kernel.quant_matmul_fused_2d(
+            xs, fp, fs, chunk, Kp=Kp, tile_n=tile_n, bm=bm_,
+            interpret=INTERPRET, out_dtype=out_dtype,
+            compute_dtype=compute_dtype)
+
+    y = shard_map(body, mesh=mesh,
+                  in_specs=(P(), P(axis), P(axis)),
+                  out_specs=P(None, axis), check_rep=False)(
+        x2, fused_packed, fused_scales)
+    y = y[:M]
+    if fused_perm is not None:
+        y = jnp.take(y, fused_perm, axis=-1)
+    else:
+        y = y[:, :c_out]
+    return y.reshape(*lead, c_out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_bits", "tile_n", "c_in", "c_out",
+                                    "mesh", "axis", "out_dtype", "bm",
+                                    "compute_dtype"))
+def quant_matmul_fused_batched_ep(x: jnp.ndarray, fused_packed: jnp.ndarray,
+                                  fused_scales: jnp.ndarray, fused_perm,
+                                  tile_bits: tuple, tile_n: int, c_in: int,
+                                  c_out: int, mesh, axis: str = "model",
+                                  out_dtype=jnp.float32, bm: int = 128,
+                                  compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Expert-parallel :func:`quant_matmul_fused_batched`: the 3-D kernel's
+    leading E axis is sharded over ``mesh[axis]`` (every expert keeps its
+    full tile schedule), each device launches the batched kernel over its
+    own E/parts experts — bitwise identical to the unsharded launch.
+    """
+    E = fused_packed.shape[0]
+    parts = mesh.shape[axis]
+    if E % parts:
+        raise ValueError(f"E={E} not divisible by mesh[{axis}]={parts}")
+    if x.ndim < 2 or x.shape[0] != E:
+        raise ValueError(
+            f"expert-stacked fused matmul needs x of shape (E={E}, ..., "
+            f"c_in); got {x.shape}")
+    if x.shape[-1] != c_in:
+        raise ValueError(
+            f"x contraction dim {x.shape[-1]} != c_in {c_in}")
+    Kp = -(-c_in // qm_kernel.FUSED_K_ALIGN) * qm_kernel.FUSED_K_ALIGN
+    lead = x.shape[1:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(E, M, c_in).astype(compute_dtype)
+    x2 = _pad_to(x2, 2, Kp)
+    bm_ = _pick_bm(M, bm)
+    x2 = _pad_to(x2, 1, bm_)
+
+    def body(xs, fp, fs):
+        return qm_kernel.quant_matmul_fused_3d(
+            xs, fp, fs, tile_bits, Kp=Kp, tile_n=tile_n, bm=bm_,
+            interpret=INTERPRET, out_dtype=out_dtype,
+            compute_dtype=compute_dtype)
+
+    y = shard_map(body, mesh=mesh,
+                  in_specs=(P(axis), P(axis), P(axis)),
+                  out_specs=P(axis), check_rep=False)(
+        x2, fused_packed, fused_scales)
+    y = y[:, :M]
+    if fused_perm is not None:
+        y = jnp.take(y, fused_perm, axis=-1)
+    else:
+        y = y[..., :c_out]
+    return y.reshape(E, *lead, c_out)
+
+
 def qtensor_matmul(x: jnp.ndarray, qt, out_dtype=jnp.float32) -> jnp.ndarray:
     """``x (..., c_in) @ QTensor -> (..., c_out)`` on the Pallas path.
 
@@ -229,12 +337,31 @@ def count_pallas_launches(fn, *args, **kwargs) -> int:
     """Number of ``pallas_call``s one execution of ``fn(*args)`` issues.
 
     Counts ``pallas_call`` primitives in the traced jaxpr, recursing into
-    nested call/scan/cond sub-jaxprs — robust against jit caching (a cached
-    inner trace never re-enters the ``pl.pallas_call`` Python wrapper, so
-    monkeypatch counters undercount; the jaxpr is ground truth).  Used by
-    the launch-count guard tests and the benchmark's launch column.
+    nested call/scan/cond/``pjit``/``shard_map`` sub-jaxprs — robust against
+    jit caching (a cached inner trace never re-enters the ``pl.pallas_call``
+    Python wrapper, so monkeypatch counters undercount; the jaxpr is ground
+    truth).  Sub-jaxprs are found by walking every eqn param value through
+    arbitrary tuple/list/dict nesting, so higher-order primitives that stash
+    their body under new param layouts keep counting.  Counts are launches
+    per *program*, not per device: a kernel inside ``shard_map`` runs one
+    program on every mesh device but counts once, matching the CI guards'
+    "how many kernels does one step issue" meaning.  Used by the
+    launch-count guard tests and the benchmark's launch column.
     """
     jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def subjaxprs(v):
+        stack = [v]
+        while stack:
+            u = stack.pop()
+            if isinstance(u, (tuple, list)):
+                stack.extend(u)
+            elif isinstance(u, dict):
+                stack.extend(u.values())
+            elif isinstance(u, jax.core.ClosedJaxpr):
+                yield u.jaxpr
+            elif isinstance(u, jax.core.Jaxpr):
+                yield u
 
     def walk(jpr) -> int:
         n = 0
@@ -242,11 +369,8 @@ def count_pallas_launches(fn, *args, **kwargs) -> int:
             if eqn.primitive.name == "pallas_call":
                 n += 1
             for v in eqn.params.values():
-                for u in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(u, jax.core.ClosedJaxpr):
-                        n += walk(u.jaxpr)
-                    elif isinstance(u, jax.core.Jaxpr):
-                        n += walk(u)
+                for sub in subjaxprs(v):
+                    n += walk(sub)
         return n
 
     return walk(jaxpr.jaxpr)

@@ -170,6 +170,26 @@ def fused_tile_offsets(tile_bits, Kp: int, tile_n: int) -> tuple:
     return tuple(offs)
 
 
+def tp_chunk(tile_bits, parts: int):
+    """Per-shard tile schedule for ``parts``-way tensor parallelism.
+
+    shard_map traces ONE program for every shard, so the fused buffer can
+    only split across devices when the schedule is periodic with period
+    T/parts — each device then owns the same sequence of whole static-bit
+    tiles (and therefore the same byte count).  Returns that per-shard
+    schedule, or None when the schedule does not divide (caller replicates).
+    """
+    if not tile_bits or parts <= 1:
+        return None
+    T = len(tile_bits)
+    if T % parts:
+        return None
+    chunk = tuple(tile_bits[:T // parts])
+    if tuple(tile_bits) != chunk * parts:
+        return None
+    return chunk
+
+
 def _fused_kernel(x_ref, p_ref, s_ref, o_ref, *, tile_bits, offsets,
                   tile_n: int, Kp: int, compute_dtype,
                   dequant_first: bool):

@@ -60,7 +60,7 @@ def build_trace(cfg, args, rng):
     return reqs, arrivals
 
 
-def _engine(cfg, dparams, args):
+def _engine(cfg, dparams, args, mesh=None):
     page_size = {0: None, -1: "auto"}.get(args.page_size, args.page_size)
     draft = None
     if args.speculate_k and args.draft_bits:
@@ -74,7 +74,8 @@ def _engine(cfg, dparams, args):
                          prefix_sharing=(False if args.no_prefix_sharing
                                          else "auto"),
                          speculate_k=args.speculate_k,
-                         draft_dparams=draft)
+                         draft_dparams=draft,
+                         mesh=mesh)
 
 
 def _paged_line(eng):
@@ -91,10 +92,34 @@ def _paged_line(eng):
             f"{eng.kv_bytes_resident()} B vs dense {eng.kv_bytes_dense()} B")
 
 
-def run_continuous(cfg, dparams, reqs, arrivals, args):
-    eng = _engine(cfg, dparams, args)
+def run_continuous(cfg, dparams, reqs, arrivals, args, mesh=None):
+    eng = _engine(cfg, dparams, args, mesh=mesh)
     t0 = time.time()
-    outs = eng.run(reqs, arrivals)
+    if args.fail_host >= 0:
+        # failure-injection drive loop: same schedule as eng.run, plus one
+        # fail_host call partway through — the heartbeat then drains the
+        # host's slots and the trace still completes
+        order = sorted(range(len(reqs)), key=lambda i: (arrivals[i], i))
+        fail_at = max(2, args.stagger // 2)
+        outs, nxt, t = {}, 0, 0
+        while nxt < len(order) or eng.has_work():
+            while nxt < len(order) and arrivals[order[nxt]] <= t:
+                i = order[nxt]
+                eng.submit(reqs[i])
+                nxt += 1
+            if t == fail_at:
+                eng.fail_host(args.fail_host)
+                print(f"fail-host:  host {args.fail_host} stopped beating "
+                      f"at tick {t}")
+            eng.step()
+            for o in eng.collect():
+                outs[o.rid] = o
+            t += 1
+        print(f"fail-host:  {eng.stats['host_drains']} drains, "
+              f"{eng.stats['drained_requests']} requests requeued, "
+              f"{len(outs)}/{len(reqs)} completed")
+    else:
+        outs = eng.run(reqs, arrivals)
     dt = time.time() - t0
     st = eng.stats
     steps = st["prefill_launches"] + st["decode_launches"]
@@ -168,22 +193,49 @@ def main() -> None:
     p.add_argument("--lockstep", action="store_true",
                    help="also run the wave-at-a-time lockstep baseline")
     p.add_argument("--production-mesh", action="store_true")
+    p.add_argument("--mesh", default="",
+                   help="serve on a (data, model) device mesh, e.g. "
+                        "'--mesh 2,4' (needs data*model visible devices; "
+                        "on CPU set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=8). "
+                        "Token-identical to the meshless engine.")
+    p.add_argument("--fail-host", type=int, default=-1,
+                   help="kill this data-axis host partway through the "
+                        "trace (drain-on-death demo; requires --mesh)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_test_mesh())
-    rules = shd.ShardingRules(mesh)
 
     key = jax.random.PRNGKey(args.seed)
     dparams = serving.init_deployed_model(cfg, key)
-    dparams = jax.device_put(dparams, rules.tree_shardings(dparams))
 
     rng = np.random.default_rng(args.seed)
     reqs, arrivals = build_trace(cfg, args, rng)
+
+    if args.mesh:
+        # engine-owned mesh: the ServingEngine's MeshContext places the
+        # weights (QTensor fused buffers sharded, the rest replicated) and
+        # the caches (slot/page axis on data) itself
+        dp, tp = (int(x) for x in args.mesh.split(","))
+        serving_mesh = make_test_mesh(dp, tp)
+        print(f"mesh:       (data={dp}, model={tp}) over "
+              f"{dp * tp} of {len(jax.devices())} devices")
+        run_continuous(cfg, dparams, reqs, arrivals, args,
+                       mesh=serving_mesh)
+        if args.lockstep:
+            run_lockstep(cfg, dparams, reqs, args)
+        return
+    if args.fail_host >= 0:
+        raise SystemExit("--fail-host requires --mesh (the data axis is "
+                         "the host fleet)")
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_test_mesh())
+    rules = shd.ShardingRules(mesh)
+    dparams = jax.device_put(dparams, rules.tree_shardings(dparams))
 
     with mesh:
         run_continuous(cfg, dparams, reqs, arrivals, args)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cache import paged
+from repro.dist import sharding as shd
 from repro.dist.sharding import constrain
 from repro.api.policy import PrecisionPolicy
 from repro.kernels import decode_attention as datt_kernel
@@ -142,6 +143,10 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def gqa_core(q, k, v, n_heads: int, n_kv: int, causal: bool,
              q_offset: int = 0, k_chunk: int = 1024) -> jnp.ndarray:
     """Grouped-query attention: q (B,S,H,D), k/v (B,S,KV,D) -> (B,S,H,D)."""
+    # serving under a mesh: attention math runs replicated (the f32 softmax
+    # reduction order must not depend on the partitioning) — identity on a
+    # single device and during training
+    q, k, v = (shd.replicate_serving(t) for t in (q, k, v))
     B, Sq, H, D = q.shape
     Dv = v.shape[-1]                 # MLA: value head dim may differ from qk
     rep = n_heads // n_kv
@@ -294,6 +299,8 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
                                      pos[:, None], cfg.rope_partial)
         q = L.apply_rope(q, cos, sin, rot)
         k = L.apply_rope(k, cos, sin, rot)
+    # mesh serving: attention operands replicate (identity off-mesh)
+    q, k, v = (shd.replicate_serving(t) for t in (q, k, v))
     # append new kv (int8 per-token or packed channel-wise), one ring
     # index per slot
     if kv_spec is None:
@@ -332,6 +339,8 @@ def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict,
         vi = paged.gather_pages(cache["v"], pages)
         ksc = paged.gather_pages(cache["k_scale"], pages)
         vsc = paged.gather_pages(cache["v_scale"], pages)
+    ki, vi, ksc, vsc = (shd.replicate_serving(t)
+                        for t in (ki, vi, ksc, vsc))
     rep = H // KV
     if kv_spec is not None and backend == "pallas":
         # fused path: the ring stays packed into VMEM; unpack+scale happens
@@ -399,6 +408,8 @@ def _gqa_decode_multi(p: dict, cfg, x: jnp.ndarray, cache: dict,
                                      cfg.rope_partial)
         q = L.apply_rope(q, cos, sin, rot)
         k = L.apply_rope(k, cos, sin, rot)
+    # mesh serving: attention operands replicate (identity off-mesh)
+    q, k, v = (shd.replicate_serving(t) for t in (q, k, v))
     if kv_spec is None:
         kq, ks = quant_per_token(k.transpose(0, 2, 1, 3))  # (B, KV, W, ...)
         vq, vs = quant_per_token(v.transpose(0, 2, 1, 3))
@@ -439,6 +450,8 @@ def _gqa_decode_multi(p: dict, cfg, x: jnp.ndarray, cache: dict,
         vi = paged.gather_pages(cache["v"], pages)
         ksc = paged.gather_pages(cache["k_scale"], pages)
         vsc = paged.gather_pages(cache["v_scale"], pages)
+    ki, vi, ksc, vsc = (shd.replicate_serving(t)
+                        for t in (ki, vi, ksc, vsc))
     rep = H // KV
     outs = []
     if kv_spec is not None and backend == "pallas":
@@ -642,6 +655,11 @@ def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         ckv_s = paged.gather_pages(cache["ckv_scale"], pages)
         krope_i = paged.gather_pages(cache["krope"], pages)
 
+    # mesh serving: latent views and queries replicate (identity off-mesh)
+    q_nope, q_rope, ckv_i, ckv_s, krope_i = (
+        shd.replicate_serving(t)
+        for t in (q_nope, q_rope, ckv_i, ckv_s, krope_i))
+
     # expand latents to per-head K/V through the packed low-rank factor:
     # ckv (B, S, kvr) -> (B, S, H, nope + vd), weights streaming sub-byte
     if kv_spec is None:
@@ -730,6 +748,11 @@ def _mla_decode_multi(p: dict, cfg, x: jnp.ndarray, cache: dict,
         ckv_i = paged.gather_pages(cache["ckv"], pages)      # (B, S, kvr)
         ckv_s = paged.gather_pages(cache["ckv_scale"], pages)
         krope_i = paged.gather_pages(cache["krope"], pages)
+
+    # mesh serving: latent views and queries replicate (identity off-mesh)
+    q_nope, q_rope, ckv_i, ckv_s, krope_i = (
+        shd.replicate_serving(t)
+        for t in (q_nope, q_rope, ckv_i, ckv_s, krope_i))
 
     if kv_spec is None:
         ckv_f = (ckv_i.astype(jnp.float32) * ckv_s).astype(cd)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.api.qtensor import QTensor
 from repro.cache import paged
+from repro.dist import sharding as shd
 from repro.core import quantizers as qz
 from repro.models import attention as attn
 from repro.models import kv_quant as kvq
@@ -436,6 +437,10 @@ def _deployed_moe(p, cfg, x, backend="jnp"):
     E, k, ff = cfg.n_experts, cfg.experts_per_token, cfg.moe_d_ff
     T = B * S
     xt = x.reshape(T, d)
+    # mesh serving: the router is the one f32 GEMM on the decode path — its
+    # reduction order must not depend on the mesh, so input and weight stay
+    # replicated (ShardingRules replicates "router"); identity off-mesh
+    xt = shd.replicate_serving(xt)
     logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32).T)
     routing = "sigmoid" if cfg.n_shared_experts else "softmax"
     gates, topi = moe_mod.route_topk(logits, k, routing)
@@ -448,7 +453,11 @@ def _deployed_moe(p, cfg, x, backend="jnp"):
     # (E, C, d) buffer per expert — ONE expert-batched fused launch each
     # under backend="pallas"; no (E, c_out, c_in) dense stack materializes
     h = L.swiglu(dq(buf, p["we_gate"]), dq(buf, p["we_up"]))
-    out_buf = dq(h, p["we_down"]).reshape(E * capacity, d)
+    # mesh serving: the expert GEMMs above run expert-parallel; the combine
+    # scatter-adds in cd with duplicate destinations, so it replicates to
+    # keep the addition order mesh-independent (identity off-mesh)
+    out_buf = shd.replicate_serving(
+        dq(h, p["we_down"])).reshape(E * capacity, d)
     gathered = jnp.where(keep[:, None], out_buf[dest], 0)
     out = jnp.zeros((T, d), cd).at[src].add(
         gathered * gates.reshape(-1, 1).astype(cd))

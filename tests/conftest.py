@@ -2,8 +2,12 @@ import os
 
 # Smoke tests must see the single real CPU device — the 512-device flag is
 # set ONLY by launch/dryrun.py (and benchmarks/roofline.py).  Guard against
-# accidental inheritance from a dry-run shell.
-os.environ.pop("XLA_FLAGS", None)
+# accidental inheritance from a dry-run shell.  Exception: the mesh-serving
+# suite (test_mesh_serving.py) NEEDS a multi-device CPU, so its CI step
+# opts in with REPRO_KEEP_XLA_FLAGS=1 and its own
+# --xla_force_host_platform_device_count setting.
+if not os.environ.get("REPRO_KEEP_XLA_FLAGS"):
+    os.environ.pop("XLA_FLAGS", None)
 
 import jax
 

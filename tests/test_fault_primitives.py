@@ -1,0 +1,115 @@
+"""Unit tests for the dist/fault.py serving primitives.
+
+``run_supervised`` (checkpoint/restart training) is pinned end-to-end by
+tests/test_fault_recovery.py; this file covers the primitives the mesh
+serving engine composes for its drain-on-death path
+(tests/test_mesh_serving.py has the integration side): heartbeat timeout
+ordering, elastic mesh reshaping at awkward host counts, straggler window
+eviction, and the slot-ownership partition.
+"""
+import pytest
+
+from repro.dist import fault
+
+
+# -- Heartbeat ---------------------------------------------------------------
+
+def test_heartbeat_timeout_ordering():
+    """check() declares exactly the hosts whose last beat is stale, each
+    once, in sorted order — independent of beat arrival order."""
+    hb = fault.Heartbeat([0, 1, 2, 3], timeout_s=2.0)
+    for h in (3, 1, 0, 2):                    # scrambled arrival order
+        hb.beat(h, float(h))                  # host h last beats at t=h
+    # at t=4.5: hosts 0,1,2 have 4.5 - t > 2 only for t < 2.5 -> {0, 1, 2}?
+    # 4.5-0=4.5>2, 4.5-1=3.5>2, 4.5-2=2.5>2, 4.5-3=1.5<=2 -> [0, 1, 2]
+    assert hb.check(4.5) == [0, 1, 2]
+    assert hb.alive() == [3]
+    # already-dead hosts never re-report; 3 dies once its beat goes stale
+    assert hb.check(5.2) == [3]
+    assert hb.check(100.0) == []
+    assert hb.alive() == []
+
+
+def test_heartbeat_never_beaten_host_is_dead_on_first_check():
+    hb = fault.Heartbeat([0, 1], timeout_s=10.0)
+    hb.beat(1, 0.0)
+    assert hb.check(0.5) == [0]               # t is None -> dead
+    assert hb.alive() == [1]
+
+
+def test_heartbeat_boundary_is_exclusive():
+    """Exactly-timeout staleness is still alive (> not >=)."""
+    hb = fault.Heartbeat([0], timeout_s=2.0)
+    hb.beat(0, 1.0)
+    assert hb.check(3.0) == []                # 3.0 - 1.0 == timeout
+    assert hb.check(3.0 + 1e-9) == [0]
+
+
+# -- ElasticMesh -------------------------------------------------------------
+
+def test_elastic_mesh_non_power_of_two_hosts():
+    """Shrinking fleets at awkward sizes: the model axis is pinned and the
+    data axis takes the (floored) remainder of the chips."""
+    em = fault.ElasticMesh(model=16, chips_per_host=4)
+    assert em.shape_for(12) == (3, 16)        # 48 chips
+    assert em.shape_for(9) == (2, 16)         # 36 chips -> floor 2
+    assert em.shape_for(5) == (1, 16)         # 20 chips -> exactly one slice
+    assert em.shape_for(4) == (1, 16)         # 16 chips, boundary
+    with pytest.raises(RuntimeError):
+        em.shape_for(3)                       # 12 chips < one model slice
+
+
+def test_elastic_mesh_odd_chip_geometry():
+    em = fault.ElasticMesh(model=6, chips_per_host=3)
+    assert em.shape_for(7) == (3, 6)          # 21 chips -> floor(21/6) = 3
+    with pytest.raises(RuntimeError):
+        em.shape_for(1)
+
+
+# -- StragglerPolicy ---------------------------------------------------------
+
+def test_straggler_window_eviction():
+    """A host that was slow but recovers is un-flagged once its slow
+    samples age out of the sliding window."""
+    pol = fault.StragglerPolicy(threshold=1.3, window=4, min_samples=4)
+    for _ in range(4):
+        pol.record(0, 1.0)
+        pol.record(1, 10.0)                   # 10x the median -> straggler
+    assert pol.stragglers() == [1]
+    # host 1 recovers; its deque (maxlen=4) evicts all four slow samples
+    for _ in range(4):
+        pol.record(1, 1.0)
+    assert pol.stragglers() == []
+
+
+def test_straggler_min_samples_gate():
+    pol = fault.StragglerPolicy(threshold=1.3, window=8, min_samples=8)
+    for _ in range(7):
+        pol.record(0, 1.0)
+        pol.record(1, 50.0)
+    assert pol.stragglers() == []             # below min_samples: no verdict
+    pol.record(0, 1.0)
+    pol.record(1, 50.0)
+    assert pol.stragglers() == [1]
+
+
+# -- owned_slots -------------------------------------------------------------
+
+def test_owned_slots_partition():
+    """Host slot ranges tile [0, n_slots) exactly, balanced within 1."""
+    for n_slots, n_hosts in ((8, 2), (7, 3), (4, 4), (5, 8), (16, 5)):
+        seen = []
+        sizes = []
+        for h in range(n_hosts):
+            own = fault.owned_slots(h, n_slots, n_hosts)
+            seen.extend(own)
+            sizes.append(len(own))
+        assert seen == list(range(n_slots)), (n_slots, n_hosts)
+        assert max(sizes) - min(sizes) <= 1, (n_slots, n_hosts)
+
+
+def test_owned_slots_validates_host():
+    with pytest.raises(ValueError):
+        fault.owned_slots(2, 8, 2)
+    with pytest.raises(ValueError):
+        fault.owned_slots(-1, 8, 2)

@@ -518,6 +518,79 @@ def bench_speculative(smoke: bool = False) -> list[str]:
     return rows
 
 
+def bench_qtrain(smoke: bool = False) -> list[str]:
+    """int8 vs f32 train_compute on the dae-ad search phase (repro.qtrain).
+
+    Runs the SAME SearchDriver W-step sequence (same init, same batches,
+    same optimizer) once per compute mode and reports the loss curve
+    agreement plus a step-time / GEMM-bytes-moved row.  ``dev_vs_f32`` is
+    ``|final - final_f32| / |first_f32 - final_f32|`` — deviation of the
+    int8 endpoint in units of the f32 run's total loss improvement, the
+    deterministic-ish headline the smoke gate asserts on (wall-clock
+    columns are informational; CPU interpret-mode kernel timings are
+    correctness-path numbers, not TPU perf).  ``gemm_kB_per_step`` counts
+    operand bytes of the three training matmuls of every searched linear
+    (fwd + grad-input + grad-weight) at the mode's operand width — the
+    bytes axis int8 training actually moves.
+    """
+    from repro.core import search as search_mod
+    from repro.data import pipeline as pipe
+    from repro.models import tinyml
+    rows = ["qtrain:train_compute,steps,first_loss,final_loss,dev_vs_f32,"
+            "ms_per_step,gemm_kB_per_step"]
+    cfg = tinyml.TINY_CONFIGS["dae-ad"]
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params0, nas0 = init_fn(jax.random.PRNGKey(0))
+    loss_fn = lambda pred, batch: tinyml.task_loss(cfg, pred, batch)
+    B = 16
+    steps = 12 if smoke else 40
+    # one fixed batch: on synthetic data a fresh batch per step keeps the
+    # loss pinned at the data variance; descent on a fixed batch is the
+    # signal the two compute modes must agree on
+    data = pipe.SyntheticTiny(cfg, n=B * 2, seed=0)
+    batch = next(iter(data.batches(B)))
+    batches = [batch] * steps
+
+    def gemm_kb(bytes_per_el):
+        per_step = sum(
+            2 * (B * sp.weights_per_channel + B * sp.c_out
+                 + sp.c_out * sp.weights_per_channel)
+            for sp in specs.values())
+        return per_step * bytes_per_el / 1e3
+
+    results = {}
+    for tc in ("f32", "int8"):
+        settings = search_mod.SearchSettings(cfg=cfg.quant, train_compute=tc)
+        drv = search_mod.SearchDriver(apply_fn, loss_fn, specs,
+                                      params0, nas0, settings)
+        losses = []
+        t0 = time.perf_counter()
+        for i, batch in enumerate(batches):
+            drv.params, drv._ow, loss = drv._w_step(
+                drv.params, drv.nas, drv.tau, drv._ow,
+                jnp.asarray(i), batch)
+            losses.append(float(loss))
+        dt = (time.perf_counter() - t0) / steps
+        results[tc] = losses
+        drop_f32 = results["f32"][0] - results["f32"][-1]
+        dev = abs(losses[-1] - results["f32"][-1]) / max(abs(drop_f32), 1e-9)
+        rows.append(f"qtrain:{tc},{steps},{losses[0]:.5f},{losses[-1]:.5f},"
+                    f"{dev:.4f},{dt * 1e3:.1f},"
+                    f"{gemm_kb(1 if tc == 'int8' else 4):.1f}")
+    if smoke:
+        f32, i8 = results["f32"], results["int8"]
+        if not f32[-1] < f32[0]:
+            raise SystemExit(f"f32 search loss did not decrease: {f32}")
+        if not i8[-1] < i8[0]:
+            raise SystemExit(f"int8 search loss did not decrease: {i8}")
+        drop = f32[0] - f32[-1]
+        if abs(i8[-1] - f32[-1]) > 0.5 * abs(drop):
+            raise SystemExit(
+                "int8 final loss deviates from f32 by more than 50% of "
+                f"the f32 improvement: {i8[-1]} vs {f32[-1]} (drop {drop})")
+    return rows
+
+
 def bench_serving(smoke: bool = False) -> list[str]:
     from repro.config import get_config
     from repro.models import serving
@@ -612,6 +685,7 @@ SECTIONS = {
     "paged_cache": bench_paged_cache,
     "kv_quant": bench_kv_quant,
     "speculative": bench_speculative,
+    "qtrain": bench_qtrain,
     "serving": bench_serving,
     "mesh_serving": bench_mesh_serving,
     "roofline": bench_roofline,
@@ -631,10 +705,12 @@ SECTIONS = {
 # int8 at 8 bits (jnp + fused pallas) and strictly cheaper at 4 bits,
 # and speculative asserts greedy draft/verify serving is token-identical
 # to the baseline engine while emitting strictly more useful tokens per
-# verifier launch (self-draft accepts everything; 2-bit draft still exact)
+# verifier launch (self-draft accepts everything; 2-bit draft still exact),
+# and qtrain asserts the int8 train_compute search loop tracks the f32 loss
+# curve on dae-ad (both decrease; endpoints agree within half the f32 drop)
 SMOKE_SECTIONS = ("deploy", "kernels", "tinyml", "moe_decode",
                   "continuous_batching", "paged_cache", "kv_quant",
-                  "speculative", "mesh_serving")
+                  "speculative", "mesh_serving", "qtrain")
 
 
 def main() -> None:

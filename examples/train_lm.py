@@ -37,6 +37,10 @@ p.add_argument("--seq", type=int, default=128)
 p.add_argument("--batch", type=int, default=8)
 p.add_argument("--ckpt", default="/tmp/repro_train_lm")
 p.add_argument("--resume", action="store_true")
+p.add_argument("--train-compute", default="f32",
+               choices=["f32", "bf16", "int8"],
+               help="matmul arithmetic of the search steps (int8 = dynamic "
+                    "int8 GEMMs with stochastically rounded backward)")
 args = p.parse_args()
 
 L, d, H, KV, ff, V = PRESETS[args.preset]
@@ -45,7 +49,12 @@ cfg = dataclasses.replace(
     n_kv_heads=KV, head_dim=d // H, d_ff=ff, vocab_size=V, qkv_bias=True)
 hp = steps_mod.TrainHParams.for_arch(cfg, lr=1e-3, lam=1e-10,
                                      total_steps=args.steps,
-                                     warmup_steps=5)
+                                     warmup_steps=5,
+                                     train_compute=args.train_compute)
+from repro.api.policy import PrecisionPolicy  # noqa: E402
+print("resolved policy:",
+      steps_mod._train_policy(hp, PrecisionPolicy.search(cfg.quant.tau0),
+                              jax.numpy.zeros((), jax.numpy.int32)))
 
 mesh = make_test_mesh()
 rules = shd.ShardingRules(mesh)

@@ -18,6 +18,15 @@ The policy is a registered pytree: the phase and backend are static aux data
 (so jitted functions specialize per phase — exactly like the old string, but
 typed) while ``tau`` is a leaf (so the annealed temperature flows through
 ``jit`` without recompilation).
+
+``train_compute`` adds a *compute*-precision axis orthogonal to the phase:
+it selects what arithmetic the training-phase matmuls (QAT8 / SEARCH /
+FROZEN fake-quant paths) run in — ``"f32"`` (the legacy behavior,
+byte-for-byte), ``"bf16"`` (bf16 operands, f32 accumulation), or ``"int8"``
+(dynamic int8 GEMMs with a custom_vjp, ``repro.qtrain``).  It is static aux
+data like the phase.  ``sr_key`` is the per-step PRNG key seeding the int8
+backward passes' stochastic rounding — a traced leaf (a fresh key every
+step must not retrace), ``None`` outside int8 training.
 """
 from __future__ import annotations
 
@@ -43,18 +52,40 @@ class PrecisionPolicy:
     phase: Phase
     tau: Optional[jnp.ndarray] = None   # SEARCH only
     backend: str = "jnp"    # DEPLOYED only: jnp | pallas | pallas-pergroup
+    train_compute: str = "f32"          # training phases: f32 | bf16 | int8
+    sr_key: Optional[jnp.ndarray] = None   # int8 SR seed (traced leaf)
 
     # Singletons FLOAT / QAT8 / FROZEN / DEPLOYED for the parameter-free
     # phases are assigned right below the class body.
 
+    TRAIN_COMPUTES = ("f32", "bf16", "int8")
+
+    def __post_init__(self):
+        if self.train_compute not in self.TRAIN_COMPUTES:
+            raise ValueError(
+                f"train_compute must be one of {self.TRAIN_COMPUTES}, got "
+                f"{self.train_compute!r}")
+
     @classmethod
-    def search(cls, tau) -> "PrecisionPolicy":
-        return cls(Phase.SEARCH, jnp.asarray(tau, jnp.float32))
+    def search(cls, tau, train_compute: str = "f32",
+               sr_key=None) -> "PrecisionPolicy":
+        return cls(Phase.SEARCH, jnp.asarray(tau, jnp.float32),
+                   train_compute=train_compute, sr_key=sr_key)
 
     @classmethod
     def deployed(cls, backend: str = "jnp") -> "PrecisionPolicy":
         assert backend in ("jnp", "pallas", "pallas-pergroup"), backend
         return cls(Phase.DEPLOYED, backend=backend)
+
+    def with_train_compute(self, train_compute: str,
+                           sr_key=None) -> "PrecisionPolicy":
+        """Same phase, different training arithmetic (+ optional SR key)."""
+        return dataclasses.replace(self, train_compute=train_compute,
+                                   sr_key=sr_key)
+
+    def with_sr_key(self, sr_key) -> "PrecisionPolicy":
+        """Rebind the stochastic-rounding key (per-layer fan-out)."""
+        return dataclasses.replace(self, sr_key=sr_key)
 
     @property
     def trains_nas(self) -> bool:
@@ -65,22 +96,27 @@ class PrecisionPolicy:
         return self.phase in (Phase.SEARCH, Phase.FROZEN)
 
     def __repr__(self) -> str:
+        tc = ("" if self.train_compute == "f32"
+              else f"[train_compute={self.train_compute}]")
         if self.phase is Phase.SEARCH:
-            return "PrecisionPolicy.search(tau)"
+            return f"PrecisionPolicy.search(tau){tc}"
         if self.phase is Phase.DEPLOYED:
             return f"PrecisionPolicy.deployed({self.backend!r})"
-        return f"PrecisionPolicy.{self.phase.name}"
+        return f"PrecisionPolicy.{self.phase.name}{tc}"
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        if self.tau is None:
-            return (), (self.phase, False, self.backend)
-        return (self.tau,), (self.phase, True, self.backend)
+        children = tuple(c for c in (self.tau, self.sr_key) if c is not None)
+        return children, (self.phase, self.tau is not None, self.backend,
+                          self.train_compute, self.sr_key is not None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        phase, has_tau, backend = aux
-        return cls(phase, children[0] if has_tau else None, backend)
+        phase, has_tau, backend, train_compute, has_key = aux
+        it = iter(children)
+        tau = next(it) if has_tau else None
+        sr_key = next(it) if has_key else None
+        return cls(phase, tau, backend, train_compute, sr_key)
 
 
 PrecisionPolicy.FLOAT = PrecisionPolicy(Phase.FLOAT)

@@ -53,6 +53,8 @@ class SearchSettings:
     lr_theta: float = 1e-2
     early_stop_patience: int = 3     # epochs without cost improvement
     early_stop_rtol: float = 1e-3
+    train_compute: str = "f32"       # matmul arithmetic: f32 | bf16 | int8
+    sr_seed: int = 0                 # int8 stochastic-rounding base seed
 
 
 @dataclasses.dataclass
@@ -90,10 +92,23 @@ class SearchDriver:
         self._ow = opt_w.init(params)
         self._ot = opt_t.init(nas)
 
+        def pol(base, step):
+            """Per-step training policy: ``train_compute="f32"`` returns the
+            phase singleton untouched (bit-identity with the pre-axis
+            driver); int8 folds the step into the SR key."""
+            if s.train_compute == "f32":
+                return base
+            sr_key = None
+            if s.train_compute == "int8":
+                sr_key = jax.random.fold_in(
+                    jax.random.PRNGKey(s.sr_seed), step)
+            return base.with_train_compute(s.train_compute, sr_key)
+
         @jax.jit
         def warmup_step(params, ow, step, batch):
             def lt(p):
-                pred = apply_fn(p, None, PrecisionPolicy.QAT8, batch)
+                pred = apply_fn(p, None, pol(PrecisionPolicy.QAT8, step),
+                                batch)
                 return loss_fn(pred, batch)
             loss, grads = jax.value_and_grad(lt)(params)
             upd, ow = opt_w.update(grads, ow, params, step)
@@ -102,7 +117,8 @@ class SearchDriver:
         @jax.jit
         def theta_step(params, nas, tau, ot, step, batch):
             def lfull(n):
-                pred = apply_fn(params, n, PrecisionPolicy.search(tau), batch)
+                pred = apply_fn(params, n,
+                                pol(PrecisionPolicy.search(tau), step), batch)
                 lt = loss_fn(pred, batch)
                 lr = reg.total_cost(n, tau, specs, s.cfg, s.objective,
                                     s.lut_name)
@@ -115,7 +131,8 @@ class SearchDriver:
         @jax.jit
         def w_step(params, nas, tau, ow, step, batch):
             def lt(p):
-                pred = apply_fn(p, nas, PrecisionPolicy.search(tau), batch)
+                pred = apply_fn(p, nas,
+                                pol(PrecisionPolicy.search(tau), step), batch)
                 return loss_fn(pred, batch)
             loss, grads = jax.value_and_grad(lt)(params)
             upd, ow = opt_w.update(grads, ow, params, step)
@@ -124,7 +141,8 @@ class SearchDriver:
         @jax.jit
         def finetune_step(params, nas, ow, step, batch):
             def lt(p):
-                pred = apply_fn(p, nas, PrecisionPolicy.FROZEN, batch)
+                pred = apply_fn(p, nas, pol(PrecisionPolicy.FROZEN, step),
+                                batch)
                 return loss_fn(pred, batch)
             loss, grads = jax.value_and_grad(lt)(params)
             upd, ow = opt_w.update(grads, ow, params, step)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.policy import PrecisionPolicy
 from repro.config import ARCH_IDS, get_config
 from repro.core import mixedprec as mp
 from repro.data import pipeline as pipe
@@ -60,6 +61,13 @@ def main() -> None:
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--lam", type=float, default=1e-10)
     p.add_argument("--objective", default="size", choices=["size", "energy"])
+    p.add_argument("--train-compute", default="f32",
+                   choices=["f32", "bf16", "int8"],
+                   help="matmul arithmetic of the training phases (int8 = "
+                        "dynamic int8 GEMMs with stochastically rounded "
+                        "backward, repro.qtrain)")
+    p.add_argument("--sr-seed", type=int, default=0,
+                   help="base seed of the int8 stochastic rounding")
     p.add_argument("--lut", default="tpu_bw", choices=["tpu_bw", "mpic"])
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=20)
@@ -75,7 +83,13 @@ def main() -> None:
     hp = steps_mod.TrainHParams.for_arch(
         cfg, lr=args.lr, lam=args.lam, objective=args.objective,
         lut_name=args.lut, warmup_steps=min(args.warmup_steps, 100),
-        total_steps=args.steps)
+        total_steps=args.steps, train_compute=args.train_compute,
+        sr_seed=args.sr_seed)
+    print("resolved policy:",
+          steps_mod._train_policy(
+              hp, PrecisionPolicy.search(cfg.quant.tau0),
+              jnp.zeros((), jnp.int32)),
+          f"(search phase; opt_state_dtype={hp.opt_state_dtype})")
 
     mesh = (make_production_mesh() if args.production_mesh
             else make_test_mesh())

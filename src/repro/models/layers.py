@@ -39,6 +39,8 @@ from repro.api.policy import Phase, PrecisionPolicy
 from repro.api.qtensor import QTensor
 from repro.core import mixedprec as mp
 from repro.core import quantizers as qz
+from repro.kernels import quant_conv as qc_kernel
+from repro.qtrain import linear as qt_linear
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +127,17 @@ def partial_dtype_of(cfg):
     return jnp.dtype(pd) if pd else None
 
 
+def _site_key(policy: PrecisionPolicy, w: jnp.ndarray):
+    """Per-site stochastic-rounding key: the policy's key folded by a salt
+    from the weight geometry, so same-step sites of different shape draw
+    independent rounding noise even when the caller does not fan out
+    per-layer keys (transformer scans do; see ``_layer_keys``)."""
+    if policy.sr_key is None:
+        return None
+    salt = (w.shape[0] * 1000003 + w.shape[-1]) & 0x7FFFFFFF
+    return jax.random.fold_in(policy.sr_key, salt)
+
+
 def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict],
             policy: PrecisionPolicy, qcfg: mp.MixedPrecConfig,
             signed_act: bool = True, compute_dtype=None,
@@ -141,6 +154,13 @@ def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict],
     ``partial_dtype`` sets the dot's preferred_element_type: with bf16 the
     TP partial sums cross the ICI at half width (collective compression —
     §Perf knob; default keeps the backend's f32 accumulation).
+
+    ``policy.train_compute`` selects the training arithmetic after fake
+    quantization: ``"f32"`` is this function's legacy body unchanged,
+    ``"bf16"`` forces bf16 operands (f32 accumulation), ``"int8"`` routes
+    the matmul — forward AND both backward GEMMs — through
+    :func:`repro.qtrain.int8_linear` (dynamic int8 with stochastic-rounded
+    backward when ``policy.sr_key`` is set).
     """
     w = p["w"]
     if isinstance(w, QTensor):
@@ -153,13 +173,25 @@ def qlinear(x: jnp.ndarray, p: dict, nas: Optional[dict],
         raise TypeError("DEPLOYED policy requires a QTensor weight leaf "
                         "(run engine.deploy / core.deploy.deploy_linear)")
     x, w = _quant_pair(x, w, p, nas, policy, qcfg, signed_act)
-    if compute_dtype is not None:
-        x, w = x.astype(compute_dtype), w.astype(compute_dtype)
-    if partial_dtype is not None:
-        y = jnp.einsum("...i,oi->...o", x, w,
-                       preferred_element_type=partial_dtype)
+    if policy.train_compute == "int8":
+        y = qt_linear.int8_linear(x, w, _site_key(policy, w),
+                                  qt_linear.DEFAULT)
+        if compute_dtype is not None:
+            y = y.astype(compute_dtype)
+    elif policy.train_compute == "bf16":
+        xb, wb = x.astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+        y = jnp.einsum("...i,oi->...o", xb, wb,
+                       preferred_element_type=partial_dtype or jnp.float32)
+        if compute_dtype is not None:
+            y = y.astype(compute_dtype)
     else:
-        y = jnp.einsum("...i,oi->...o", x, w)
+        if compute_dtype is not None:
+            x, w = x.astype(compute_dtype), w.astype(compute_dtype)
+        if partial_dtype is not None:
+            y = jnp.einsum("...i,oi->...o", x, w,
+                           preferred_element_type=partial_dtype)
+        else:
+            y = jnp.einsum("...i,oi->...o", x, w)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -190,12 +222,28 @@ def qconv2d(x: jnp.ndarray, p: dict, nas: Optional[dict],
     if policy.phase is Phase.DEPLOYED:
         raise TypeError("DEPLOYED policy requires a QTensor weight leaf")
     x, w = _quant_pair(x, w, p, nas, policy, qcfg, signed_act)
-    # lax wants (kh, kw, c_in/g, c_out) for NHWC/HWIO
-    kernel = jnp.transpose(w, (2, 3, 1, 0))
-    y = jax.lax.conv_general_dilated(
-        x, kernel, window_strides=(stride, stride), padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=groups)
+    if policy.train_compute == "int8" and groups == 1:
+        # im2col (differentiable) + the int8 custom_vjp patch-GEMM: the
+        # same channel-major lowering the deployed path uses, so the
+        # contraction axis is C*kh*kw and grads flow back through the
+        # patch extraction.  Depthwise (groups>1) convs contract only
+        # kh*kw<=9 values per output — too narrow to win anything from
+        # int8 — and fall through to the float path below.
+        patches = qc_kernel.im2col(x, w.shape[2], w.shape[3], stride,
+                                   padding)
+        y = qt_linear.int8_linear(patches, w.reshape(w.shape[0], -1),
+                                  _site_key(policy, w), qt_linear.DEFAULT)
+    else:
+        if policy.train_compute == "bf16":
+            x, w = x.astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+        # lax wants (kh, kw, c_in/g, c_out) for NHWC/HWIO
+        kernel = jnp.transpose(w, (2, 3, 1, 0))
+        y = jax.lax.conv_general_dilated(
+            x, kernel, window_strides=(stride, stride), padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+        if policy.train_compute == "bf16":
+            y = y.astype(jnp.float32)
     if "b" in p:
         y = y + p["b"]
     return y

@@ -213,11 +213,33 @@ def _embed_inputs(params, cfg, batch):
     return x
 
 
-def _scan_blocks(block_fn, params_blocks, nas_blocks, x, remat: bool = True):
-    """lax.scan over a stacked layer pytree; nas may be None."""
+def _layer_keys(policy, n_layers: int, tag: int):
+    """Per-layer stochastic-rounding keys for a scanned block stack, or
+    None when the policy carries no SR key (every non-int8 run).  ``tag``
+    decorrelates distinct stacks of one forward (enc vs dec vs groups)."""
+    if policy.sr_key is None:
+        return None
+    return jax.random.split(jax.random.fold_in(policy.sr_key, tag),
+                            n_layers)
+
+
+def _scan_blocks(block_fn, params_blocks, nas_blocks, x, remat: bool = True,
+                 keys=None):
+    """lax.scan over a stacked layer pytree; nas may be None.
+
+    ``keys (n_layers, 2)`` optionally threads a per-layer PRNG key (int8
+    training's stochastic rounding) as a fourth ``block_fn`` argument; the
+    no-keys paths keep their pre-existing scan structure exactly (the
+    ``train_compute="f32"`` bit-identity contract).
+    """
     fn = jax.checkpoint(block_fn) if remat else block_fn
 
-    if nas_blocks is None:
+    if keys is not None:
+        def body(h, pnk):
+            p, n, k = pnk
+            return fn(h, p, n, k), None
+        x, _ = jax.lax.scan(body, x, (params_blocks, nas_blocks, keys))
+    elif nas_blocks is None:
         def body(h, p):
             return fn(h, p, None), None
         x, _ = jax.lax.scan(body, x, params_blocks)
@@ -239,16 +261,19 @@ def forward(params, nas, cfg, batch, policy: PrecisionPolicy,
     B, S, _ = x.shape
     positions = jnp.arange(S)
 
+    keys = _layer_keys(policy, cfg.n_layers, 0)
     if cfg.family in ("dense", "vlm", "moe"):
-        def bf(h, p, n):
-            return block_forward(p, n, policy, cfg, h, positions)
+        def bf(h, p, n, k=None):
+            pol = policy if k is None else policy.with_sr_key(k)
+            return block_forward(p, n, pol, cfg, h, positions)
         x = _scan_blocks(bf, params["blocks"], None if nas is None
-                         else nas["blocks"], x, remat)
+                         else nas["blocks"], x, remat, keys=keys)
     elif cfg.family == "ssm":
-        def bf(h, p, n):
-            return mamba_block_forward(p, n, policy, cfg, h)
+        def bf(h, p, n, k=None):
+            pol = policy if k is None else policy.with_sr_key(k)
+            return mamba_block_forward(p, n, pol, cfg, h)
         x = _scan_blocks(bf, params["blocks"], None if nas is None
-                         else nas["blocks"], x, remat)
+                         else nas["blocks"], x, remat, keys=keys)
     elif cfg.family == "hybrid":
         x = _forward_hybrid(params, nas, cfg, x, positions, policy, remat)
 
@@ -272,9 +297,11 @@ def _forward_hybrid(params, nas, cfg, x, positions, policy, remat):
     Ltot, k = cfg.n_layers, cfg.attn_every
     p_sa = params["shared_attn"]
     n_sa = nas["shared_attn"] if nas is not None else None
+    keys = _layer_keys(policy, Ltot, 0)
 
-    def bf(h, p, n):
-        return mamba_block_forward(p, n, policy, cfg, h)
+    def bf(h, p, n, kk=None):
+        pol = policy if kk is None else policy.with_sr_key(kk)
+        return mamba_block_forward(p, n, pol, cfg, h)
 
     start = 0
     while start < Ltot:
@@ -284,7 +311,8 @@ def _forward_hybrid(params, nas, cfg, x, positions, policy, remat):
         pg = jax.tree_util.tree_map(lambda t: t[start:stop], params["blocks"])
         ng = (jax.tree_util.tree_map(lambda t: t[start:stop], nas["blocks"])
               if nas is not None else None)
-        x = _scan_blocks(bf, pg, ng, x, remat)
+        kg = keys[start:stop] if keys is not None else None
+        x = _scan_blocks(bf, pg, ng, x, remat, keys=kg)
         start = stop
     return x
 
@@ -297,19 +325,21 @@ def _forward_encdec(params, nas, cfg, batch, policy, remat):
     enc = enc + L.sinusoidal_positions(Se, cfg.d_model).astype(cd)
     positions_e = jnp.arange(Se)
 
-    def ebf(h, p, n):
+    def ebf(h, p, n, k=None):
+        pol = policy if k is None else policy.with_sr_key(k)
         sub = (lambda pre: {kk[len(pre):]: v for kk, v in n.items()
                             if kk.startswith(pre)}) if n is not None else (lambda pre: None)
-        a = attn.gqa_forward(p["attn"], sub("attn."), policy, cfg,
+        a = attn.gqa_forward(p["attn"], sub("attn."), pol, cfg,
                              L.apply_norm(h, p["ln1"], cfg.norm), positions_e,
                              causal=False)
         h = h + a.astype(h.dtype)
-        f = mlp_forward(p["mlp"], sub("mlp."), policy, cfg,
+        f = mlp_forward(p["mlp"], sub("mlp."), pol, cfg,
                         L.apply_norm(h, p["ln2"], cfg.norm))
         return h + f.astype(h.dtype)
 
     enc = _scan_blocks(ebf, params["enc_blocks"],
-                       None if nas is None else nas["enc_blocks"], enc, remat)
+                       None if nas is None else nas["enc_blocks"], enc, remat,
+                       keys=_layer_keys(policy, cfg.n_encoder_layers, 1))
     enc = L.apply_norm(enc, params["enc_ln_f"], cfg.norm)
 
     x = params["embed"][batch["tokens"]].astype(cd)
@@ -317,22 +347,24 @@ def _forward_encdec(params, nas, cfg, batch, policy, remat):
     x = x + L.sinusoidal_positions(S, cfg.d_model).astype(cd)
     positions = jnp.arange(S)
 
-    def dbf(h, p, n):
+    def dbf(h, p, n, k=None):
+        pol = policy if k is None else policy.with_sr_key(k)
         sub = (lambda pre: {kk[len(pre):]: v for kk, v in n.items()
                             if kk.startswith(pre)}) if n is not None else (lambda pre: None)
-        a = attn.gqa_forward(p["attn"], sub("attn."), policy, cfg,
+        a = attn.gqa_forward(p["attn"], sub("attn."), pol, cfg,
                              L.apply_norm(h, p["ln1"], cfg.norm), positions,
                              causal=True)
         h = h + a.astype(h.dtype)
-        xa = attn.cross_forward(p["xattn"], sub("xattn."), policy, cfg,
+        xa = attn.cross_forward(p["xattn"], sub("xattn."), pol, cfg,
                                 L.apply_norm(h, p["ln2"], cfg.norm), enc)
         h = h + xa.astype(h.dtype)
-        f = mlp_forward(p["mlp"], sub("mlp."), policy, cfg,
+        f = mlp_forward(p["mlp"], sub("mlp."), pol, cfg,
                         L.apply_norm(h, p["ln3"], cfg.norm))
         return h + f.astype(h.dtype)
 
     x = _scan_blocks(dbf, params["dec_blocks"],
-                     None if nas is None else nas["dec_blocks"], x, remat)
+                     None if nas is None else nas["dec_blocks"], x, remat,
+                     keys=_layer_keys(policy, cfg.n_layers, 2))
     x = L.apply_norm(x, params["ln_f"], cfg.norm)
     head_nas = nas["lm_head"] if nas is not None else None
     logits = L.qlinear(x, params["lm_head"], head_nas, policy, cfg.quant,

@@ -133,6 +133,8 @@ class Adafactor:
     Matrices with both trailing dims >= ``min_factor_dim`` store factored
     row/col second-moment statistics; everything else stores the full v.
     Update-RMS clipping replaces global-norm clipping (per the paper).
+    ``state_dtype`` compresses the stored statistics (the
+    ``TrainHParams.opt_state_dtype`` knob); arithmetic stays f32.
     """
     schedule: Callable
     decay_pow: float = 0.8           # beta2_t = 1 - t^-decay_pow
@@ -141,6 +143,7 @@ class Adafactor:
     clip_threshold: float = 1.0
     weight_decay: float = 0.0
     min_factor_dim: int = 128
+    state_dtype: jnp.dtype = jnp.float32   # set bf16 for compressed states
 
     def _factored(self, shape) -> bool:
         return (len(shape) >= 2 and shape[-1] >= self.min_factor_dim
@@ -149,10 +152,10 @@ class Adafactor:
     def init(self, params):
         def one(p):
             if self._factored(p.shape):
-                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                return {"vr": jnp.zeros(p.shape[:-1], self.state_dtype),
                         "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
-                                        jnp.float32)}
-            return {"v": jnp.zeros(p.shape, jnp.float32)}
+                                        self.state_dtype)}
+            return {"v": jnp.zeros(p.shape, self.state_dtype)}
         return {"f": jax.tree_util.tree_map(
             one, params, is_leaf=lambda x: hasattr(x, "shape"))}
 
@@ -165,17 +168,20 @@ class Adafactor:
             g32 = g.astype(jnp.float32)
             g2 = g32 * g32 + self.eps1
             if "vr" in s:
-                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
-                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                vr = beta2 * s["vr"].astype(jnp.float32) \
+                    + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"].astype(jnp.float32) \
+                    + (1 - beta2) * jnp.mean(g2, axis=-2)
                 # rank-1 reconstruction of v
                 denom = jnp.mean(vr, axis=-1, keepdims=True)
                 u = g32 * jax.lax.rsqrt(vr[..., None] / denom[..., None]) \
                     * jax.lax.rsqrt(vc[..., None, :])
-                new_s = {"vr": vr, "vc": vc}
+                new_s = {"vr": vr.astype(self.state_dtype),
+                         "vc": vc.astype(self.state_dtype)}
             else:
-                v = beta2 * s["v"] + (1 - beta2) * g2
+                v = beta2 * s["v"].astype(jnp.float32) + (1 - beta2) * g2
                 u = g32 * jax.lax.rsqrt(v)
-                new_s = {"v": v}
+                new_s = {"v": v.astype(self.state_dtype)}
             # update-RMS clipping
             rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
             u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)

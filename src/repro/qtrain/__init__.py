@@ -1,0 +1,12 @@
+"""repro.qtrain — int8 quantized-compute training.
+
+The search/finetune phases' answer to the packed serving kernels: the three
+matmuls of every linear (forward ``x @ w^T``, grad-input ``dy @ w``,
+grad-weight ``dy^T @ x``) run as dynamic int8 GEMMs
+(kernels/int8_matmul.py) behind a ``custom_vjp``, switched per-leg by
+:class:`QTrainConfig` and enabled model-wide through
+``PrecisionPolicy.train_compute``.
+"""
+from repro.qtrain.linear import QTrainConfig, int8_linear
+
+__all__ = ["QTrainConfig", "int8_linear"]

@@ -1,0 +1,118 @@
+"""``int8_linear`` — a ``custom_vjp`` linear whose three matmuls each run on
+dynamic int8 compute (the gau-nernst/quant-train mixed-precision recipe).
+
+For ``y = x @ w^T`` with ``x (..., K)`` and ``w (N, K)`` the backward pass
+needs two more GEMMs:
+
+    dx = dy @ w          (contract N)     — "grad_input"
+    dw = dy^T @ x        (contract M)     — "grad_weight"
+
+:class:`QTrainConfig` switches each of the three independently to int8
+(both operands dynamically quantized per row of the contraction axis,
+int8 x int8 -> int32, fused dequant — ``kernels/int8_matmul.py``); a leg
+that is switched off runs the plain f32 einsum.
+
+Rounding: the forward quantizes deterministically (round-to-nearest — the
+forward wants the lowest per-step error, and determinism keeps serving-side
+parity checks meaningful).  The **backward** quantizations use stochastic
+rounding when a PRNG ``key`` is supplied: gradient noise must be unbiased
+*across steps* for SGD-style averaging to converge, and round-to-nearest
+of near-constant operands introduces a systematic bias SR removes.  Each of
+the four backward quantizations (dy and w for grad-input; dy and x for
+grad-weight) folds its own subkey, so their rounding noises are
+independent.  ``key=None`` degrades every leg to deterministic rounding.
+
+The config is a ``nondiff_argnums`` argument (hashable frozen dataclass);
+the key rides through the vjp as a regular primal whose cotangent is the
+mandatory float0 zero for integer-typed primals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import int8_matmul as im
+
+
+@dataclasses.dataclass(frozen=True)
+class QTrainConfig:
+    """Which of the linear's three matmuls run on int8 compute."""
+    forward: bool = True
+    grad_input: bool = True
+    grad_weight: bool = True
+    stochastic_rounding: bool = True
+    backend: str = "pallas"          # pallas | jnp (bitwise-identical)
+
+
+DEFAULT = QTrainConfig()
+
+
+def _flat(x: jnp.ndarray):
+    """(..., K) -> (M, K) f32 plus the leading shape."""
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    return x.reshape(M, x.shape[-1]).astype(jnp.float32), lead
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def int8_linear(x: jnp.ndarray, w: jnp.ndarray, key=None,
+                cfg: QTrainConfig = DEFAULT) -> jnp.ndarray:
+    """``x (..., K) @ w (N, K)^T -> (..., N)`` on int8 training compute.
+
+    Output is f32 (the dequant epilogue's dtype); callers cast to their
+    compute dtype.  ``key`` seeds the backward stochastic rounding.
+    """
+    y, _ = _fwd(x, w, key, cfg)
+    return y
+
+
+def _fwd(x, w, key, cfg: QTrainConfig):
+    x2, lead = _flat(x)
+    if cfg.forward:
+        qx, sx = im.rowwise_quantize(x2)
+        qw, sw = im.rowwise_quantize(w)
+        y = im.scaled_int8_mm(qx, qw, sx, sw, backend=cfg.backend)
+    else:
+        y = jnp.einsum("mk,nk->mn", x2, w.astype(jnp.float32))
+    return y.reshape(*lead, w.shape[0]), (x, w, key)
+
+
+def _subkeys(cfg: QTrainConfig, key):
+    if key is None or not cfg.stochastic_rounding:
+        return (None,) * 4
+    return tuple(jax.random.fold_in(key, i) for i in range(4))
+
+
+def _bwd(cfg: QTrainConfig, res, dy):
+    x, w, key = res
+    x2, _ = _flat(x)
+    dy2, _ = _flat(dy)
+    w32 = w.astype(jnp.float32)
+    k_di_dy, k_di_w, k_dw_dy, k_dw_x = _subkeys(cfg, key)
+
+    if cfg.grad_input:                      # dx = dy (M,N) @ w (N,K)
+        qd, sd = im.rowwise_quantize(dy2, k_di_dy)
+        qwt, swt = im.rowwise_quantize(w32.T, k_di_w)   # (K, N): rows over N
+        dx2 = im.scaled_int8_mm(qd, qwt, sd, swt, backend=cfg.backend)
+    else:
+        dx2 = jnp.einsum("mn,nk->mk", dy2, w32)
+
+    if cfg.grad_weight:                     # dw = dy^T (N,M) @ x (M,K)
+        qdt, sdt = im.rowwise_quantize(dy2.T, k_dw_dy)  # (N, M): rows over M
+        qxt, sxt = im.rowwise_quantize(x2.T, k_dw_x)    # (K, M): rows over M
+        dw = im.scaled_int8_mm(qdt, qxt, sdt, sxt, backend=cfg.backend)
+    else:
+        dw = jnp.einsum("mn,mk->nk", dy2, x2)
+
+    dx = dx2.reshape(x.shape).astype(x.dtype)
+    dkey = None if key is None else np.zeros(key.shape, jax.dtypes.float0)
+    return dx, dw.astype(w.dtype), dkey
+
+
+int8_linear.defvjp(_fwd, _bwd)

@@ -42,9 +42,11 @@ class TrainHParams:
     lut_name: str = "tpu_bw"
     schedule: str = "cosine"      # cosine | wsd | constant
     optimizer: str = "adamw"      # adamw | adafactor (factored, 100B+ configs)
-    opt_state_dtype: str = "bfloat16"   # compressed Adam moments
+    opt_state_dtype: str = "bfloat16"   # compressed optimizer moments
     mtp_weight: float = 0.3
     remat: bool = True
+    train_compute: str = "f32"    # matmul arithmetic: f32 | bf16 | int8
+    sr_seed: int = 0              # int8 stochastic-rounding base seed
 
     @classmethod
     def for_arch(cls, cfg, **overrides) -> "TrainHParams":
@@ -67,7 +69,8 @@ def make_optimizers(hp: TrainHParams):
         sched = opt_mod.constant_schedule(hp.lr)
     if hp.optimizer == "adafactor":
         opt_w = opt_mod.Adafactor(schedule=sched,
-                                  weight_decay=hp.weight_decay)
+                                  weight_decay=hp.weight_decay,
+                                  state_dtype=jnp.dtype(hp.opt_state_dtype))
     else:
         opt_w = opt_mod.AdamW(schedule=sched, weight_decay=hp.weight_decay,
                               clip_norm=hp.clip_norm,
@@ -91,6 +94,22 @@ def init_train_state(cfg, hp: TrainHParams, key) -> dict:
     }
 
 
+def _train_policy(hp: TrainHParams, base: PrecisionPolicy, step):
+    """Attach the hparams' compute axis to a phase policy.
+
+    ``train_compute="f32"`` returns ``base`` untouched — the step traces to
+    byte-for-byte the pre-compute-axis jaxpr (the bit-identity contract).
+    int8 derives a fresh stochastic-rounding key from (sr_seed, step) so
+    rounding noise decorrelates across steps without retracing.
+    """
+    if hp.train_compute == "f32":
+        return base
+    sr_key = None
+    if hp.train_compute == "int8":
+        sr_key = jax.random.fold_in(jax.random.PRNGKey(hp.sr_seed), step)
+    return base.with_train_compute(hp.train_compute, sr_key)
+
+
 def _task_loss(cfg, hp, params, nas, policy, batch):
     if cfg.mtp:
         logits, mtp_logits = tfm.forward_with_mtp(params, nas, cfg,
@@ -112,9 +131,11 @@ def make_train_step(cfg, hp: TrainHParams) -> Callable:
     opt_w, _ = make_optimizers(hp)
 
     def train_step(state, batch):
+        pol = _train_policy(hp, PrecisionPolicy.search(state["tau"]),
+                            state["step"])
+
         def loss_fn(params):
-            return _task_loss(cfg, hp, params, state["nas"],
-                              PrecisionPolicy.search(state["tau"]), batch)
+            return _task_loss(cfg, hp, params, state["nas"], pol, batch)
         loss, grads = jax.value_and_grad(loss_fn)(state["params"])
         updates, new_opt = opt_w.update(grads, state["opt_w"],
                                         state["params"], state["step"])
@@ -137,9 +158,11 @@ def make_theta_step(cfg, hp: TrainHParams, tokens_per_batch: int) -> Callable:
     specs = tfm.cost_specs(cfg, tokens_per_batch)
 
     def theta_step(state, batch):
+        pol = _train_policy(hp, PrecisionPolicy.search(state["tau"]),
+                            state["step"])
+
         def loss_fn(nas):
-            lt = _task_loss(cfg, hp, state["params"], nas,
-                            PrecisionPolicy.search(state["tau"]), batch)
+            lt = _task_loss(cfg, hp, state["params"], nas, pol, batch)
             flat = tfm.flatten_nas(nas)
             lr_cost = reg.total_cost(flat, state["tau"], specs, cfg.quant,
                                      hp.objective, hp.lut_name)
@@ -166,9 +189,10 @@ def make_qat_warmup_step(cfg, hp: TrainHParams) -> Callable:
     opt_w, _ = make_optimizers(hp)
 
     def warmup_step(state, batch):
+        pol = _train_policy(hp, PrecisionPolicy.QAT8, state["step"])
+
         def loss_fn(params):
-            return _task_loss(cfg, hp, params, None, PrecisionPolicy.QAT8,
-                              batch)
+            return _task_loss(cfg, hp, params, None, pol, batch)
         loss, grads = jax.value_and_grad(loss_fn)(state["params"])
         updates, new_opt = opt_w.update(grads, state["opt_w"],
                                         state["params"], state["step"])

@@ -1,0 +1,377 @@
+"""repro.qtrain — int8 quantized-compute training.
+
+Covers the ISSUE-10 acceptance criteria:
+  * the Pallas int8 GEMM matches the jnp int8 reference **bitwise**
+    (int32 accumulation is exact; the dequant epilogue multiplies in the
+    same order),
+  * stochastic rounding is unbiased (CLT bound over many keys),
+    deterministic per key, and exact on representable values,
+  * ``int8_linear``'s custom VJP: per-leg switchability, grads vs a
+    manual reference, grad-weight seed dependence,
+  * ``train_compute="f32"`` is *structurally* identical to the pre-axis
+    path (same policy object, same qlinear branch),
+  * int8 search steps on dae-ad converge alongside f32,
+  * ``TrainHParams.opt_state_dtype`` regression: AdamW *and* Adafactor
+    moment leaves carry the configured dtype through init and update.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.policy import PrecisionPolicy
+from repro.kernels import int8_matmul as qmm
+from repro.models import layers as L
+from repro.optim import optimizers as opt_mod
+from repro.qtrain import linear as qt
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs jnp reference — bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 32, 16),       # tiny aligned-ish
+    (7, 13, 5),        # pad in every dim
+    (128, 256, 128),   # one tile
+    (100, 384, 130),   # pad M and N
+    (1, 8, 1),         # degenerate
+])
+def test_int8_mm_pallas_matches_ref_bitwise(m, k, n):
+    key = jax.random.PRNGKey(m * 7 + n)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, k), jnp.float32)
+    qa, sa = qmm.rowwise_quantize(a)
+    qb, sb = qmm.rowwise_quantize(b)
+    y_ref = qmm.scaled_int8_mm(qa, qb, sa, sb, backend="jnp")
+    y_pal = qmm.scaled_int8_mm(qa, qb, sa, sb, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_pal))
+
+
+def test_int8_mm_int32_accumulation_exact():
+    # worst-case magnitudes: every product is 127*127; K products must
+    # accumulate exactly in int32
+    k = 64
+    qa = jnp.full((4, k), 127, jnp.int8)
+    qb = jnp.full((3, k), -127, jnp.int8)
+    sa = jnp.ones((4,), jnp.float32)
+    sb = jnp.ones((3,), jnp.float32)
+    y = qmm.scaled_int8_mm(qa, qb, sa, sb, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.full((4, 3), -127.0 * 127.0 * k))
+
+
+def test_k_overflow_guard_constant():
+    assert qmm.K_INT32_EXACT_MAX == (2 ** 31 - 1) // (127 * 127)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding
+# ---------------------------------------------------------------------------
+
+def test_sr_deterministic_per_key():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
+    key = jax.random.PRNGKey(7)
+    q1, s1 = qmm.rowwise_quantize(x, key=key)
+    q2, s2 = qmm.rowwise_quantize(x, key=key)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    q3, _ = qmm.rowwise_quantize(x, key=jax.random.PRNGKey(8))
+    assert np.any(np.asarray(q1) != np.asarray(q3))
+
+
+def test_sr_exact_on_representable_values():
+    # values that are exact multiples of the scale must never be perturbed
+    scale = 2.0 / 127.0
+    grid = jnp.arange(-127, 128, dtype=jnp.float32) * scale
+    x = jnp.tile(grid[None, :], (5, 1))
+    for seed in range(3):
+        q, s = qmm.rowwise_quantize(x, key=jax.random.PRNGKey(seed))
+        deq = np.asarray(q, np.float32) * np.asarray(s)[:, None]
+        np.testing.assert_allclose(deq, np.asarray(x), rtol=0, atol=1e-6)
+
+
+def test_sr_unbiased_clt():
+    # a value exactly halfway between two grid points must round up with
+    # p=0.5; mean over N keys is within 5 sigma of the true value
+    x = jnp.full((1, 8), 0.5 * (1.0 / 127.0), jnp.float32)
+    # pin the scale with a sentinel so the halfway point is controlled
+    x = x.at[0, 0].set(1.0)
+    n = 400
+    deqs = []
+    for seed in range(n):
+        q, s = qmm.rowwise_quantize(x, key=jax.random.PRNGKey(seed))
+        deqs.append(np.asarray(q[0, 1:], np.float32) * float(s[0]))
+    deqs = np.stack(deqs)            # (n, 7), each entry 0 or 1/127
+    step = 1.0 / 127.0
+    p_up = float(np.mean(deqs / step))      # empirical round-up probability
+    sigma = 0.5 / np.sqrt(n * 7)
+    assert abs(p_up - 0.5) < 5 * sigma, (p_up, sigma)
+    # deterministic rounding of the same halfway input is constant
+    q_det, _ = qmm.rowwise_quantize(x)
+    assert np.unique(np.asarray(q_det[0, 1:])).size == 1
+
+
+# ---------------------------------------------------------------------------
+# int8_linear custom VJP
+# ---------------------------------------------------------------------------
+
+def _toy():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 6, 32), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (24, 32), jnp.float32)
+    return x, w
+
+
+def test_all_legs_off_is_plain_einsum():
+    x, w = _toy()
+    cfg = qt.QTrainConfig(forward=False, grad_input=False, grad_weight=False)
+    y = qt.int8_linear(x, w, None, cfg)
+    y_ref = jnp.einsum("...i,oi->...o", x, w)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    g = jax.grad(lambda a, b: jnp.sum(qt.int8_linear(a, b, None, cfg) ** 2),
+                 argnums=(0, 1))(x, w)
+    g_ref = jax.grad(
+        lambda a, b: jnp.sum(jnp.einsum("...i,oi->...o", a, b) ** 2),
+        argnums=(0, 1))(x, w)
+    for got, want in zip(g, g_ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_forward_matches_manual_int8_reference():
+    x, w = _toy()
+    y = qt.int8_linear(x, w, None, qt.QTrainConfig(stochastic_rounding=False))
+    x2 = x.reshape(-1, x.shape[-1])
+    qa, sa = qmm.rowwise_quantize(x2)
+    qb, sb = qmm.rowwise_quantize(w)
+    y_ref = qmm.scaled_int8_mm_ref(qa, qb, sa, sb).reshape(y.shape)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_grads_close_to_f32_reference():
+    x, w = _toy()
+    key = jax.random.PRNGKey(3)
+
+    def loss_q(a, b):
+        return jnp.sum(qt.int8_linear(a, b, key, qt.DEFAULT) ** 2)
+
+    def loss_f(a, b):
+        return jnp.sum(jnp.einsum("...i,oi->...o", a, b) ** 2)
+
+    gq = jax.grad(loss_q, argnums=(0, 1))(x, w)
+    gf = jax.grad(loss_f, argnums=(0, 1))(x, w)
+    for got, want in zip(gq, gf):
+        got, want = np.asarray(got), np.asarray(want)
+        rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+        assert rel < 0.15, rel           # int8 grads track f32 direction
+
+
+def test_grad_weight_seed_dependent():
+    x, w = _toy()
+
+    def gw(key):
+        return jax.grad(
+            lambda b: jnp.sum(qt.int8_linear(x, b, key, qt.DEFAULT) ** 2)
+        )(w)
+
+    g1 = np.asarray(gw(jax.random.PRNGKey(0)))
+    g2 = np.asarray(gw(jax.random.PRNGKey(1)))
+    g1b = np.asarray(gw(jax.random.PRNGKey(0)))
+    np.testing.assert_array_equal(g1, g1b)   # same key -> same grads
+    assert np.any(g1 != g2)                  # different key -> SR differs
+
+
+def test_per_leg_switchability():
+    x, w = _toy()
+    f32 = jax.grad(
+        lambda a, b: jnp.sum(jnp.einsum("...i,oi->...o", a, b) ** 2),
+        argnums=(0, 1))(x, w)
+    # only grad_input int8: dw must be exactly the f32 dw
+    cfg = qt.QTrainConfig(forward=False, grad_input=True, grad_weight=False)
+    g = jax.grad(lambda a, b: jnp.sum(qt.int8_linear(a, b, None, cfg) ** 2),
+                 argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(f32[1]))
+    assert np.any(np.asarray(g[0]) != np.asarray(f32[0]))
+    # only grad_weight int8: dx must be exactly the f32 dx
+    cfg = qt.QTrainConfig(forward=False, grad_input=False, grad_weight=True)
+    g = jax.grad(lambda a, b: jnp.sum(qt.int8_linear(a, b, None, cfg) ** 2),
+                 argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(g[0]), np.asarray(f32[0]))
+    assert np.any(np.asarray(g[1]) != np.asarray(f32[1]))
+
+
+def test_int8_linear_under_jit():
+    # outer-jit fusion may reassociate the f32 epilogue multiplies, so the
+    # contract here is near-equality (bitwise parity is kernel-vs-ref above)
+    x, w = _toy()
+    f = jax.jit(lambda a, b, k: qt.int8_linear(a, b, k, qt.DEFAULT))
+    y = f(x, w, jax.random.PRNGKey(0))
+    y2 = qt.int8_linear(x, w, jax.random.PRNGKey(0), qt.DEFAULT)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy train_compute axis
+# ---------------------------------------------------------------------------
+
+def test_policy_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        PrecisionPolicy.search(5.0, train_compute="int4")
+    pol = PrecisionPolicy.search(5.0, train_compute="int8",
+                                 sr_key=jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(pol)
+    pol2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert pol2.train_compute == "int8" and pol2.sr_key is not None
+    assert float(pol2.tau) == 5.0
+
+
+def test_f32_policy_is_base_object():
+    from repro.train import steps as steps_mod
+    hp = steps_mod.TrainHParams()
+    assert hp.train_compute == "f32"
+    base = PrecisionPolicy.search(5.0)
+    assert steps_mod._train_policy(hp, base, jnp.zeros((), jnp.int32)) is base
+
+
+def _qlinear_fixture():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 16), jnp.float32)
+    p = {"w": jax.random.normal(jax.random.fold_in(key, 1), (8, 16),
+                                jnp.float32),
+         "aw": jnp.ones((8, 1)), "ax": jnp.asarray(6.0)}
+    return x, p
+
+
+def test_qlinear_f32_branch_unchanged():
+    # the f32 train_compute path through qlinear must be bit-identical to
+    # the inline fake-quantize + einsum it used before the axis existed
+    from repro.core import quantizers as qz
+    x, p = _qlinear_fixture()
+    pol = PrecisionPolicy.QAT8
+    assert pol.train_compute == "f32"
+    y = L.qlinear(x, p, None, pol, None)
+    xq = qz.quantize_act_any(x, p["ax"], 8, True)
+    wq = qz.quantize_weight(p["w"], p["aw"].reshape(8, 1), 8)
+    y_ref = jnp.einsum("...i,oi->...o", xq, wq)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    # the int8 branch really is a different path
+    pol8 = pol.with_train_compute("int8", jax.random.PRNGKey(0))
+    y8 = L.qlinear(x, p, None, pol8, None)
+    assert y.shape == y8.shape
+    assert np.any(np.asarray(y) != np.asarray(y8))
+
+
+def test_qlinear_int8_sr_key_changes_grads():
+    x, p = _qlinear_fixture()
+
+    def gw(seed):
+        pol = PrecisionPolicy.QAT8.with_train_compute(
+            "int8", jax.random.PRNGKey(seed))
+        return np.asarray(jax.grad(
+            lambda q: jnp.sum(L.qlinear(x, {**p, "w": q}, None, pol,
+                                        None) ** 2))(p["w"]))
+
+    assert np.any(gw(0) != gw(1))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state dtype regression (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adamw_state_dtype_persists(dtype):
+    opt = opt_mod.AdamW(schedule=opt_mod.constant_schedule(1e-3),
+                        state_dtype=dtype)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    grads = {"w": jnp.full((4, 4), 0.1)}
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert leaf.dtype == dtype
+    _, state = opt.update(grads, state, params, 0)
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert leaf.dtype == dtype
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adafactor_state_dtype_persists(dtype):
+    opt = opt_mod.Adafactor(schedule=opt_mod.constant_schedule(1e-3),
+                            min_factor_dim=4, state_dtype=dtype)
+    params = {"w": jnp.ones((8, 8)), "b": jnp.ones((8,))}   # factored + not
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(lambda p: p * 0.1, params)
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert leaf.dtype == dtype
+    upd, state = opt.update(grads, state, params, 0)
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert leaf.dtype == dtype
+    for leaf in jax.tree_util.tree_leaves(upd):   # updates stay param dtype
+        assert leaf.dtype == jnp.float32
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("optimizer", ["adamw", "adafactor"])
+def test_trainhparams_opt_state_dtype_reaches_both_optimizers(optimizer):
+    from repro.train import steps as steps_mod
+    hp = steps_mod.TrainHParams(optimizer=optimizer,
+                                opt_state_dtype="bfloat16")
+    opt_w, opt_t = steps_mod.make_optimizers(hp)
+    assert jnp.dtype(opt_w.state_dtype) == jnp.bfloat16
+    assert jnp.dtype(opt_t.state_dtype) == jnp.bfloat16
+    params = {"w": jnp.ones((256, 256))}
+    for leaf in jax.tree_util.tree_leaves(opt_w.init(params)):
+        assert leaf.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: dae-ad search steps, int8 vs f32
+# ---------------------------------------------------------------------------
+
+def test_dae_ad_int8_converges_with_f32():
+    from repro.core import search as search_mod
+    from repro.data import pipeline as pipe
+    from repro.models import tinyml
+    cfg = tinyml.TINY_CONFIGS["dae-ad"]
+    init_fn, apply_fn, specs = tinyml.build(cfg)
+    params0, nas0 = init_fn(jax.random.PRNGKey(0))
+    loss_fn = lambda pred, batch: tinyml.task_loss(cfg, pred, batch)
+    batch = next(iter(pipe.SyntheticTiny(cfg, n=32, seed=0).batches(16)))
+    finals = {}
+    for tc in ("f32", "int8"):
+        s = search_mod.SearchSettings(cfg=cfg.quant, train_compute=tc)
+        drv = search_mod.SearchDriver(apply_fn, loss_fn, specs,
+                                      params0, nas0, s)
+        losses = []
+        for i in range(8):
+            drv.params, drv._ow, loss = drv._w_step(
+                drv.params, drv.nas, drv.tau, drv._ow,
+                jnp.asarray(i), batch)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], (tc, losses)
+        finals[tc] = losses
+    drop = finals["f32"][0] - finals["f32"][-1]
+    assert abs(finals["int8"][-1] - finals["f32"][-1]) < max(abs(drop), 1e-4)
+
+
+def test_tiny_lm_forward_and_grad_with_int8():
+    # exercises the per-layer SR key fan-out through the scanned blocks
+    from repro.config import get_config
+    from repro.models import transformer as tfm
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-4b").reduced(), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128)
+    params, nas = tfm.init_model(cfg, jax.random.PRNGKey(0))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128)
+    pol = PrecisionPolicy.search(5.0, train_compute="int8",
+                                 sr_key=jax.random.PRNGKey(0))
+
+    def loss(p):
+        logits = tfm.forward(p, nas, cfg, {"tokens": ids}, pol, remat=False)
+        return jnp.mean(logits.astype(jnp.float32) ** 2)
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    gn = opt_mod.global_norm(grads)
+    assert np.isfinite(float(gn)) and float(gn) > 0
